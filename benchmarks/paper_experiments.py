@@ -1,0 +1,136 @@
+"""Paper-experiment drivers shared by benchmarks and examples.
+
+One function per paper figure:
+- fig1_toy_logistic   (§1.2, Fig 1)  — TOP-1 stall vs REGTOP-1 tracking
+- fig2_linreg         (§4.1, Fig 2)  — optimality gap at S in {0.4,0.5,0.6}
+- fig3_nn             (§4.2, Fig 3)  — DNN accuracy at S=0.001, N=8 workers
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SparsifierConfig
+from repro.core import sparsify
+from repro.data.synthetic import image_dataset, linreg_dataset
+
+
+# ---------------------------------------------------------------------------
+# Fig 1: toy logistic regression (§1.2)
+# ---------------------------------------------------------------------------
+
+def fig1_toy_logistic(iters=100, eta=0.9, mu=0.5, Q=0.0):
+    xs = [jnp.array([100.0, 1.0]), jnp.array([-100.0, 1.0])]
+
+    def grad_n(w, xn):
+        e = jnp.exp(-jnp.dot(w, xn))
+        return -e * xn / (1 + e)
+
+    def loss(w):
+        return 0.5 * sum(jnp.log(1 + jnp.exp(-jnp.dot(w, xn))) for xn in xs)
+
+    out = {}
+    for kind in ("none", "topk", "regtopk"):
+        cfg = SparsifierConfig(kind=kind, k=1, mu=mu, Q=Q, selector="exact")
+        w = jnp.array([0.0, 1.0])
+        states = [sparsify.init_state(cfg, 2) for _ in range(2)]
+        hist = []
+        for _ in range(iters):
+            grads = [grad_n(w, xn) for xn in xs]
+            if kind == "none":
+                g = 0.5 * (grads[0] + grads[1])
+            else:
+                g, states = sparsify.sparsified_round(cfg, states, grads)
+            w = w - eta * g
+            hist.append(float(loss(w)))
+        out[kind] = hist
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fig 2: distributed linear regression (§4.1)
+# ---------------------------------------------------------------------------
+
+def fig2_linreg(S_values=(0.4, 0.5, 0.6), iters=3000, eta=1e-2, mu=0.5,
+                n_workers=20, n_points=500, dim=100, seed=0):
+    xs, ys, w_star = linreg_dataset(n_workers, n_points, dim, seed=seed)
+
+    def grad_n(w, X, y):
+        r = X @ w - y
+        return X.T @ r / X.shape[0]
+
+    grad_all = jax.jit(lambda w: jnp.stack([grad_n(w, X, y)
+                                            for X, y in zip(xs, ys)]))
+
+    results = {}
+    for S in S_values:
+        for kind in ("none", "topk", "regtopk", "sketchtopk"):
+            cfg = SparsifierConfig(kind=kind, sparsity=S, mu=mu,
+                                   selector="exact")
+            w = jnp.zeros((dim,))
+            states = sparsify.stack_states(
+                [sparsify.init_state(cfg, dim) for _ in range(n_workers)])
+            round_fn = sparsify.make_round_fn(cfg, n_workers)
+            gaps = []
+            for _ in range(iters):
+                grads = grad_all(w)
+                if kind == "none":
+                    g = jnp.mean(grads, 0)
+                else:
+                    g, states = round_fn(states, grads)
+                w = w - eta * g
+                gaps.append(float(jnp.linalg.norm(w - w_star)))
+            results[(S, kind)] = gaps
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Fig 3: DNN on synthetic images (§4.2 analogue)
+# ---------------------------------------------------------------------------
+
+def fig3_nn(iters=400, n_workers=8, batch=20, S=0.001, eta=0.01, mu=0.5,
+            seed=0, eval_every=50, kinds=("topk", "regtopk"), width=16):
+    from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+    xtr, ytr, xte, yte = image_dataset(n_train=n_workers * 500, seed=seed)
+    # split evenly among workers (paper: data distributed evenly)
+    xw = np.array_split(np.asarray(xtr), n_workers)
+    yw = np.array_split(np.asarray(ytr), n_workers)
+
+    p0 = init_cnn(jax.random.PRNGKey(seed), width=width)
+    flat0, unravel = jax.flatten_util.ravel_pytree(p0)
+    j = flat0.size
+
+    def worker_grad(vec, xb, yb):
+        p = unravel(vec)
+        return jax.flatten_util.ravel_pytree(
+            jax.grad(cnn_loss)(p, xb, yb))[0]
+
+    wg = jax.jit(worker_grad)
+
+    out = {}
+    for kind in kinds:
+        cfg = SparsifierConfig(kind=kind, sparsity=S, mu=mu, selector="exact")
+        vec = jnp.array(flat0)
+        states = sparsify.stack_states(
+            [sparsify.init_state(cfg, j) for _ in range(n_workers)])
+        round_fn = (sparsify.make_round_fn(cfg, n_workers)
+                    if kind != "none" else None)
+        rng = np.random.default_rng(seed)   # identical batch order per kind
+        accs = []
+        for t in range(iters):
+            grads = []
+            for n in range(n_workers):
+                idx = rng.integers(0, xw[n].shape[0], size=batch)
+                grads.append(wg(vec, jnp.asarray(xw[n][idx]),
+                                jnp.asarray(yw[n][idx])))
+            grads = jnp.stack(grads)
+            if kind == "none":
+                g = jnp.mean(grads, 0)
+            else:
+                g, states = round_fn(states, grads)
+            vec = vec - eta * g
+            if (t + 1) % eval_every == 0:
+                accs.append((t + 1, cnn_accuracy(unravel(vec), xte, yte)))
+        out[kind] = accs
+    return out

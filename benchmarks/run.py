@@ -1,0 +1,170 @@
+"""Benchmark harness — one entry per paper table/figure plus system
+benchmarks. Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,kernels,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_fig1_toy(quick):
+    from benchmarks.paper_experiments import fig1_toy_logistic
+    t0 = time.time()
+    out = fig1_toy_logistic(iters=100)
+    us = (time.time() - t0) * 1e6 / 100
+    stall = sum(1 for v in out["topk"] if abs(v - out["topk"][0]) < 1e-6)
+    track = max(abs(a - b) for a, b in zip(out["regtopk"], out["none"]))
+    _row("fig1_toy_top1_stall_iters", us, stall)
+    _row("fig1_toy_regtop1_max_gap_vs_dense", us, f"{track:.4f}")
+
+
+def bench_fig2_linreg(quick):
+    from benchmarks.paper_experiments import fig2_linreg
+    iters = 800 if quick else 3000
+    t0 = time.time()
+    res = fig2_linreg(iters=iters)
+    us = (time.time() - t0) * 1e6 / (iters * 9)
+    for S in (0.4, 0.5, 0.6):
+        g_t = res[(S, "topk")][-1]
+        g_r = res[(S, "regtopk")][-1]
+        g_d = res[(S, "none")][-1]
+        _row(f"fig2_linreg_S{S}_final_gap_topk", us, f"{g_t:.4e}")
+        _row(f"fig2_linreg_S{S}_final_gap_regtopk", us, f"{g_r:.4e}")
+        _row(f"fig2_linreg_S{S}_final_gap_dense", us, f"{g_d:.4e}")
+        g_s = res[(S, "sketchtopk")][-1]
+        _row(f"fig2_linreg_S{S}_final_gap_sketchtopk", us, f"{g_s:.4e}")
+        _row(f"fig2_linreg_S{S}_regtopk_improvement", us,
+             f"{g_t / max(g_r, 1e-12):.1f}x")
+        _row(f"fig2_linreg_S{S}_sketchtopk_improvement", us,
+             f"{g_t / max(g_s, 1e-12):.1f}x")
+
+
+def bench_fig3_nn(quick):
+    from benchmarks.paper_experiments import fig3_nn
+    iters = 120 if quick else 400
+    t0 = time.time()
+    out = fig3_nn(iters=iters, eval_every=max(iters // 4, 1))
+    us = (time.time() - t0) * 1e6 / iters
+    acc_t = out["topk"][-1][1]
+    acc_r = out["regtopk"][-1][1]
+    _row("fig3_nn_S0.001_acc_topk", us, f"{acc_t:.4f}")
+    _row("fig3_nn_S0.001_acc_regtopk", us, f"{acc_r:.4f}")
+    _row("fig3_nn_S0.001_acc_gain", us, f"{(acc_r - acc_t) * 100:.1f}pp")
+
+
+def bench_comm_volume(quick):
+    from repro.configs.base import SparsifierConfig, get_config, list_archs
+    from repro.core.aggregate import comm_bytes_per_step
+    n_workers = 16
+    for arch in list_archs():
+        cfg = get_config(arch)
+        j = cfg.param_count()
+        dense = comm_bytes_per_step(
+            SparsifierConfig(kind="none"), j, n_workers)["bytes"]
+        for S in (0.01, 0.001):
+            sp = comm_bytes_per_step(
+                SparsifierConfig(kind="regtopk", sparsity=S,
+                                 comm_mode="sparse"), j, n_workers)
+            _row(f"comm_{arch}_S{S}_reduction", 0.0,
+                 f"{dense / sp['bytes']:.0f}x")
+
+
+def bench_kernels(quick):
+    from repro.core import select
+    j = 200_000 if quick else 1_000_000
+    x = jax.random.normal(jax.random.PRNGKey(0), (j,))
+    k = j // 1000
+    for name, fn in (
+        ("exact_topk_mask", jax.jit(lambda v: select.topk_mask_exact(v, k))),
+        ("histogram_topk_mask_jnp",
+         jax.jit(lambda v: select.topk_mask_histogram(v, k))),
+    ):
+        fn(x).block_until_ready()
+        t0 = time.time()
+        for _ in range(5):
+            fn(x).block_until_ready()
+        _row(f"kernel_{name}_J{j}", (time.time() - t0) * 1e6 / 5, k)
+    # fused EF pass (Pallas; interpret mode on CPU -> correctness timing only)
+    from repro.kernels.fused_ef.ops import fused_regtopk_scores
+    je = 131_072
+    args = [jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(1), i),
+                              (je,)) for i in range(5)]
+    fn = jax.jit(lambda g, e, a, ga, s: fused_regtopk_scores(
+        g, e, a, ga, s, omega=1 / 16, mu=0.5, Q=0.0))
+    fn(*args)[0].block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        fn(*args)[0].block_until_ready()
+    _row(f"kernel_fused_ef_scores_J{je}", (time.time() - t0) * 1e6 / 3,
+         "interpret" if jax.default_backend() != "tpu" else "native")
+
+
+def bench_train_step(quick):
+    """Smoke-scale distributed train step wall time per sparsifier."""
+    from repro.configs.base import (OptimizerConfig, RunConfig, SHAPES,
+                                    SparsifierConfig, get_config,
+                                    reduced_config)
+    from repro.data import lm_batch
+    from repro.train.step import (build_parallel, build_train_step,
+                                  init_train_state)
+    cfg = reduced_config(get_config("stablelm-3b"))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for kind in ("none", "topk", "regtopk"):
+        run = RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                        sparsifier=SparsifierConfig(kind=kind, sparsity=0.01),
+                        optimizer=OptimizerConfig(kind="adam", lr=1e-3))
+        pal = build_parallel(mesh)
+        with mesh:
+            params, opt_state, ef_state = init_train_state(
+                run, mesh, pal, jax.random.PRNGKey(0))
+            step, _, _ = build_train_step(run, mesh, pal)
+            jstep = jax.jit(step)
+            batch = lm_batch(cfg, 4, 64, 0, 0)
+            out = jstep(params, opt_state, ef_state, batch,
+                        jax.random.PRNGKey(0))
+            jax.block_until_ready(out)
+            t0 = time.time()
+            n = 3
+            m = None
+            for t in range(n):
+                params, opt_state, ef_state, m = jstep(
+                    params, opt_state, ef_state, batch, jax.random.PRNGKey(t))
+            jax.block_until_ready(params)
+            _row(f"train_step_smoke_{kind}", (time.time() - t0) * 1e6 / n,
+                 f"loss={float(m['loss']):.3f}")
+
+
+BENCHES = {
+    "fig1": bench_fig1_toy,
+    "fig2": bench_fig2_linreg,
+    "fig3": bench_fig3_nn,
+    "comm": bench_comm_volume,
+    "kernels": bench_kernels,
+    "train_step": bench_train_step,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n](args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Checkpointing: flat .npz per state tree + JSON manifest.
+
+Arrays are pulled to host (global views) and stored by tree path; restore
+rebuilds the pytree and (optionally) re-shards onto a mesh by device_put
+with the given sharding tree. Deterministic, dependency-free, adequate for
+the CPU-scale runs in this container; a real deployment would swap in
+tensorstore/orbax behind the same two functions.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(p): np.asarray(l) for p, l in flat}
+
+
+def save_checkpoint(ckpt_dir: str, step: int, params, opt_state, ef_state):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    np.savez(path + ".params.npz", **_flatten_with_paths(params))
+    np.savez(path + ".opt.npz", **_flatten_with_paths(opt_state))
+    np.savez(path + ".ef.npz", **_flatten_with_paths(ef_state))
+    with open(path + ".json", "w") as f:
+        json.dump({"step": step}, f)
+    return path
+
+
+def latest_step(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.json", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, params, opt_state, ef_state,
+                       shardings=None):
+    """Restore into the STRUCTURE of the given trees (values replaced)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+
+    def load(tree, fname):
+        data = np.load(fname)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        leaves = [data[jax.tree_util.keystr(p)] for p, _ in flat]
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(tree), leaves)
+
+    params = load(params, path + ".params.npz")
+    opt_state = load(opt_state, path + ".opt.npz")
+    ef_state = load(ef_state, path + ".ef.npz")
+    if shardings is not None:
+        pshard, oshard, eshard = shardings
+        params = jax.device_put(params, pshard)
+        opt_state = jax.device_put(opt_state, oshard)
+        ef_state = jax.device_put(ef_state, eshard)
+    return params, opt_state, ef_state

@@ -1,0 +1,5 @@
+from repro.configs.base import (
+    ModelConfig, MoEConfig, SSMConfig, ShapeConfig, SparsifierConfig,
+    OptimizerConfig, MeshConfig, RunConfig, SHAPES,
+    get_config, list_archs, register, reduced_config,
+)

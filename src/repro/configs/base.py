@@ -1,0 +1,299 @@
+"""Configuration dataclasses + registry for the repro framework.
+
+Every assigned architecture registers a :class:`ModelConfig` via
+:func:`register`. Input shapes are global (:data:`SHAPES`). Reduced ("smoke")
+variants of every architecture are derived mechanically by
+:func:`reduced_config` so CPU tests exercise the same code paths as the full
+configs lowered in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Callable, Optional
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0            # routed experts
+    n_shared_experts: int = 0     # always-on experts (deepseek-v2 style)
+    top_k: int = 0
+    d_expert: int = 0             # per-expert FFN hidden dim
+    capacity_factor: float = 1.25
+    moe_every: int = 1            # MoE FFN on layers where (idx % moe_every == moe_offset)
+    moe_offset: int = 0
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    kind: str = "mamba"           # mamba | xlstm
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2               # d_inner = expand * d_model
+    dt_rank: int = 0              # 0 -> ceil(d_model/16)
+    # xlstm
+    slstm_proj_factor: float = 4 / 3
+    mlstm_proj_factor: float = 2.0
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    source: str                   # citation from the assignment sheet
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    # attention
+    rope: bool = True
+    rope_theta: float = 10_000.0
+    rotary_pct: float = 1.0       # stablelm uses partial rotary (0.25)
+    qkv_bias: bool = False
+    attn_kind: str = "full"       # full | sliding | mla
+    window: int = 8192            # sliding window size
+    # MLA (deepseek-v2)
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 64
+    v_head_dim: int = 0           # 0 -> head_dim
+    mla_absorb: bool = False      # absorbed attention: score/combine in the
+                                  # compressed kv_lora space (perf variant;
+                                  # never materializes per-head K/V)
+    # block structure
+    attn_every: int = 1           # period of attention layers (jamba: 8); rest are SSM
+    attn_offset: int = 0          # position of attn layer within the period
+    n_dense_prefix: int = 0       # leading layers with dense FFN even if MoE (dsv2: 1)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # encoder-decoder
+    is_encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    enc_causal: bool = False
+    # modality frontend stubs
+    frontend: str = "none"        # none | vision_stub | audio_stub
+    n_frontend_tokens: int = 0    # patches (vlm) / frames (audio)
+    # numerics / misc
+    dtype: str = "bfloat16"
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    act: str = "silu"             # silu (swiglu) | gelu (plain mlp)
+    tie_embeddings: bool = False
+    max_seq_len: int = 1 << 20
+    remat: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if decode at 500k context needs no full-attention KV cache."""
+        if self.family in ("ssm",):
+            return True
+        if self.family == "hybrid":
+            return True  # jamba: attention layers still cache, but 1/8 of layers
+        return self.attn_kind == "sliding"
+
+    def param_count(self) -> int:
+        """Analytic parameter count (exact for our implementation)."""
+        from repro.models.params import count_params_analytic
+        return count_params_analytic(self)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,   32, "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",  524_288,    1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Sparsifier / training configuration (the paper's knobs)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SparsifierConfig:
+    kind: str = "regtopk"         # none|topk|regtopk|randk|thresholdk|globaltopk|dgc
+    sparsity: float = 0.01        # S = k / J
+    k: int = 0                    # explicit k; 0 -> derive from sparsity
+    mu: float = 0.1               # REGTOP-k regularizer temperature
+    Q: float = 0.0                # posterior distortion for never-sent entries
+    momentum: float = 0.9         # dgc momentum correction
+    per_layer: bool = False       # RESERVED (layer-wise k) — not implemented;
+                                  # the paper and all experiments use flat-J
+    comm_mode: str = "simulate"   # simulate | sparse | dense
+    selector: str = "exact"       # exact | histogram (Pallas path)
+    ef_dtype: str = "float32"     # error-feedback accumulator dtype
+    # sketchtopk (beyond-paper): CountSketch-coordinated global TOP-k
+    sketch_rows: int = 3
+    sketch_width: int = 0         # 0 -> min(max(4k, 256), 2^22)
+    # regtopk posterior-state layout: "dense" keeps 3 extra J-sized fp32
+    # vectors (paper-literal); "sparse" stores only the k selected entries
+    # (a_prev, g_agg_prev needed ONLY where s_prev=1 — Algorithm 1 line 5),
+    # cutting state memory from 4J fp32 to J + O(k). Bit-identical updates.
+    state_format: str = "dense"   # dense | sparse
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "sgd"             # sgd | momentum | adam | adamw
+    lr: float = 1e-2
+    momentum: float = 0.9
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0
+    warmup_steps: int = 0
+    schedule: str = "constant"    # constant | cosine
+    total_steps: int = 10_000
+    zero1: bool = True            # shard optimizer state over data axis
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    data: int = 16
+    model: int = 16
+    pods: int = 1
+
+    @property
+    def axes(self):
+        return ("pod", "data", "model") if self.pods > 1 else ("data", "model")
+
+    @property
+    def shape(self):
+        return (self.pods, self.data, self.model) if self.pods > 1 else (self.data, self.model)
+
+    @property
+    def n_devices(self) -> int:
+        return self.pods * self.data * self.model
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    sparsifier: SparsifierConfig = SparsifierConfig()
+    optimizer: OptimizerConfig = OptimizerConfig()
+    mesh: MeshConfig = MeshConfig()
+    seed: int = 0
+    steps: int = 100
+    log_every: int = 10
+    microbatch: int = 0           # RESERVED (grad accumulation) — not implemented
+    attn_override: str = ""       # e.g. "sliding" for long_500k on dense archs
+    checkpoint_dir: str = ""
+    checkpoint_every: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+_ARCH_MODULES = [
+    "stablelm_3b", "starcoder2_7b", "qwen1_5_32b", "phi_3_vision_4_2b",
+    "granite_8b", "granite_moe_3b_a800m", "xlstm_125m", "whisper_small",
+    "jamba_v0_1_52b", "deepseek_v2_lite_16b",
+]
+
+
+def _load_all() -> None:
+    import importlib
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+# ---------------------------------------------------------------------------
+# Reduced (smoke) variants
+# ---------------------------------------------------------------------------
+
+def reduced_config(cfg: ModelConfig) -> ModelConfig:
+    """A tiny member of the same architecture family for CPU smoke tests.
+
+    2 layers (one full super-block period if heterogeneous), d_model<=256,
+    <=4 experts, small vocab. Exercises every code path of the full config.
+    """
+    period = max(cfg.attn_every, 2 if cfg.family == "ssm" else 1)
+    if cfg.moe is not None:
+        period = max(period, cfg.moe.moe_every)
+    n_layers = max(2, period) + cfg.n_dense_prefix
+    d_model = 128
+    n_heads = 4
+    n_kv = min(cfg.n_kv_heads, n_heads)
+    if n_heads % n_kv:
+        n_kv = 2
+    moe = None
+    if cfg.moe is not None:
+        moe = replace(cfg.moe, n_experts=4, top_k=min(2, cfg.moe.top_k),
+                      n_shared_experts=min(1, cfg.moe.n_shared_experts),
+                      d_expert=64)
+    ssm = cfg.ssm
+    if ssm is not None:
+        ssm = replace(ssm, d_state=8, d_conv=4)
+    return replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=n_layers,
+        n_enc_layers=min(cfg.n_enc_layers, 2),
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        kv_lora_rank=32 if cfg.kv_lora_rank else 0,
+        q_lora_rank=0,
+        rope_head_dim=16 if cfg.kv_lora_rank else 64,
+        v_head_dim=32 if cfg.v_head_dim else 0,
+        n_dense_prefix=cfg.n_dense_prefix,
+        moe=moe,
+        ssm=ssm,
+        n_frontend_tokens=min(cfg.n_frontend_tokens, 16) if cfg.n_frontend_tokens else 0,
+        window=64,
+        dtype="float32",
+        max_seq_len=4096,
+    )

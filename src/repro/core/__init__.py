@@ -1,0 +1,11 @@
+"""Core: the paper's contribution — Bayesian gradient sparsification (REGTOP-k)."""
+from repro.core.sparsify import (
+    CompressOut, compress, init_state, observe_aggregate, resolve_k,
+    sparsified_round,
+)
+from repro.core.aggregate import (
+    comm_bytes_per_step, dense_allreduce, sparse_allgather_combine,
+    sync_gradient,
+)
+from repro.core.select import topk_mask, topk_mask_exact, histogram_threshold
+from repro.core.flatten import TreeFlattener, tree_size

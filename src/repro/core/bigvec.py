@@ -1,0 +1,57 @@
+"""Gather/scatter on flat vectors longer than int32 range.
+
+jnp advanced indexing normalizes indices in int32 (without x64), which
+overflows for J > 2^31-1 (qwen-32b's per-rank flat gradient at tp<=16).
+These helpers reshape to (rows, cols) with cols < 2^31 and index with two
+int32 arrays (row < 32, col < 2^27), which XLA handles natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_I32_MAX = 2 ** 31 - 1
+COLS = 1 << 27
+
+
+def _needs_big(j: int) -> bool:
+    return j > _I32_MAX
+
+
+def _rc(idx, cols):
+    idx = idx.astype(jnp.uint32)
+    return ((idx // cols).astype(jnp.int32), (idx % cols).astype(jnp.int32))
+
+
+def _pad2d(a, cols):
+    j = a.shape[0]
+    rows = -(-j // cols)
+    return jnp.pad(a, (0, rows * cols - j)).reshape(rows, cols), j
+
+
+def gather(a: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    if not _needs_big(a.shape[0]):
+        return a[idx.astype(jnp.int32)]
+    a2, _ = _pad2d(a, COLS)
+    r, c = _rc(idx, COLS)
+    return a2[r, c]
+
+
+def scatter_set(a: jnp.ndarray, idx: jnp.ndarray, vals) -> jnp.ndarray:
+    if not _needs_big(a.shape[0]):
+        return a.at[idx.astype(jnp.int32)].set(vals)
+    a2, j = _pad2d(a, COLS)
+    r, c = _rc(idx, COLS)
+    return a2.at[r, c].set(vals).reshape(-1)[:j]
+
+
+def scatter_add(a: jnp.ndarray, idx: jnp.ndarray, vals) -> jnp.ndarray:
+    if not _needs_big(a.shape[0]):
+        return a.at[idx.astype(jnp.int32)].add(vals)
+    a2, j = _pad2d(a, COLS)
+    r, c = _rc(idx, COLS)
+    return a2.at[r, c].add(vals).reshape(-1)[:j]
+
+
+def mask_from_indices(j: int, idx: jnp.ndarray, dtype) -> jnp.ndarray:
+    return scatter_set(jnp.zeros((j,), dtype), idx, jnp.ones(idx.shape, dtype))

@@ -1,0 +1,53 @@
+"""Pytree <-> flat-vector utilities for whole-model sparsification.
+
+The paper treats the model as a single J-dimensional vector (flat-J
+sparsification). ``TreeFlattener`` caches the unravel function and leaf
+layout so the hot path is a single concatenate / split.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+class TreeFlattener:
+    """Flattens a gradient pytree to one fp vector and back.
+
+    Built once from an abstract (or concrete) example tree; ``flatten`` and
+    ``unflatten`` are then pure jnp ops safe under jit/shard_map.
+    """
+
+    def __init__(self, example_tree, dtype=jnp.float32):
+        leaves, self.treedef = jax.tree_util.tree_flatten(example_tree)
+        self.shapes = [l.shape for l in leaves]
+        self.sizes = [int(l.size) for l in leaves]
+        self.dtypes = [l.dtype for l in leaves]
+        self.offsets = []
+        off = 0
+        for s in self.sizes:
+            self.offsets.append(off)
+            off += s
+        self.total = off
+        self.dtype = dtype
+
+    def flatten(self, tree) -> jnp.ndarray:
+        leaves = jax.tree_util.tree_leaves(tree)
+        return jnp.concatenate(
+            [jnp.ravel(l).astype(self.dtype) for l in leaves]) if leaves else jnp.zeros((0,), self.dtype)
+
+    def unflatten(self, vec: jnp.ndarray):
+        leaves = []
+        for off, size, shape, dt in zip(self.offsets, self.sizes, self.shapes, self.dtypes):
+            leaves.append(jax.lax.dynamic_slice_in_dim(vec, off, size).reshape(shape).astype(dt))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+def tree_size(tree) -> int:
+    return sum(int(l.size) for l in jax.tree_util.tree_leaves(tree))
+
+
+def ravel(tree):
+    """One-shot ravel (test convenience)."""
+    vec, unravel = ravel_pytree(tree)
+    return vec, unravel

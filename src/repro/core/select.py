@@ -1,0 +1,106 @@
+"""Top-k mask selection over flat score vectors.
+
+Two selectors:
+
+- ``exact``: ``jax.lax.top_k`` on |score|. Exactly k entries; O(J log k).
+  Used on CPU, for small J, and as the oracle for the histogram path.
+- ``histogram``: magnitude-histogram threshold (the TPU-native adaptation,
+  DESIGN.md §2.2) backed by the Pallas kernel in ``repro.kernels.topk_select``
+  with a pure-jnp fallback of identical semantics. Selects all entries with
+  |score| >= tau where tau is the histogram-estimated k-th magnitude; the
+  selected count is in [k, k*(1+binwidth_slack)].
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+HIST_BINS = 2048
+
+
+# lax.top_k returns int32 indices -> overflows for J > 2^31-1 (qwen-32b's
+# per-rank flat gradient is 2.28e9 entries). Above this row size we run a
+# TWO-STAGE exact top-k: top-k per row of a (rows, cols) reshape, then top-k
+# over the row candidates, with uint32 global indices.
+_ROW_LIMIT = 1 << 27
+
+
+def _two_stage_topk(absx: jnp.ndarray, k: int):
+    j = absx.shape[0]
+    cols = _ROW_LIMIT
+    rows = -(-j // cols)
+    pad = rows * cols - j
+    xp = jnp.pad(absx, (0, pad), constant_values=-jnp.inf).reshape(rows, cols)
+    # exactness requires k candidates per row (a row may hold all of top-k)
+    kr = int(min(k, cols))
+    vals, idx = jax.lax.top_k(xp, kr)                  # (rows, kr)
+    gidx = (jnp.arange(rows, dtype=jnp.uint32)[:, None] * jnp.uint32(cols)
+            + idx.astype(jnp.uint32))
+    vals = vals.reshape(-1)
+    gidx = gidx.reshape(-1)
+    _, sel = jax.lax.top_k(vals, int(k))               # candidates < 2^31
+    return gidx[sel]
+
+
+def topk_indices(score: jnp.ndarray, k: int):
+    """Top-k indices by |score| (uint32 when J needs it)."""
+    j = score.shape[0]
+    k = int(min(k, j))
+    absx = jnp.abs(score.astype(jnp.float32))
+    if j > jnp.iinfo(jnp.int32).max:
+        return _two_stage_topk(absx, k)
+    _, idx = jax.lax.top_k(absx, k)
+    return idx.astype(jnp.uint32)
+
+
+def topk_mask_exact(score: jnp.ndarray, k: int) -> jnp.ndarray:
+    """0/1 mask of the k largest-|score| entries. score: (J,)."""
+    from repro.core import bigvec
+    j = score.shape[0]
+    k = int(min(k, j))
+    idx = topk_indices(score, k)
+    return bigvec.mask_from_indices(j, idx, score.dtype)
+
+
+def histogram_threshold(score: jnp.ndarray, k: int, bins: int = HIST_BINS) -> jnp.ndarray:
+    """k-th largest |score| estimated via a linear magnitude histogram.
+
+    Returns tau such that count(|score| >= tau) >= k, with tau at a bin
+    boundary (<= exact k-th value, over-selecting by at most one bin's
+    population). Pure-jnp reference semantics — the Pallas kernel in
+    kernels/topk_select computes the identical histogram.
+    """
+    amax = jnp.max(jnp.abs(score))
+    amax = jnp.where(amax > 0, amax, 1.0)
+    scaled = jnp.abs(score) / amax                       # in [0, 1]
+    bidx = jnp.clip((scaled * bins).astype(jnp.int32), 0, bins - 1)
+    hist = jnp.zeros((bins,), jnp.int32).at[bidx].add(1)
+    # count of entries with bin index >= b, for each b
+    tail = jnp.cumsum(hist[::-1])[::-1]
+    # largest bin b with tail count >= k  -> threshold at that bin's lower edge
+    ok = tail >= k
+    b = jnp.max(jnp.where(ok, jnp.arange(bins), -1))
+    tau = jnp.where(b >= 0, b.astype(score.dtype) / bins * amax, 0.0)
+    return tau
+
+
+def topk_mask_histogram(score: jnp.ndarray, k: int, bins: int = HIST_BINS,
+                        use_kernel: bool = False) -> jnp.ndarray:
+    if use_kernel:
+        from repro.kernels.topk_select.ops import histogram_threshold_op
+        tau = histogram_threshold_op(score, k, bins)
+    else:
+        tau = histogram_threshold(score, k, bins)
+    return (jnp.abs(score) >= tau).astype(score.dtype)
+
+
+def topk_mask(score: jnp.ndarray, k: int, method: str = "exact") -> jnp.ndarray:
+    if method == "exact":
+        return topk_mask_exact(score, k)
+    if method == "histogram":
+        return topk_mask_histogram(score, k)
+    if method == "histogram_kernel":
+        return topk_mask_histogram(score, k, use_kernel=True)
+    raise ValueError(f"unknown selector {method!r}")

@@ -1,0 +1,73 @@
+"""CountSketch-coordinated global TOP-k (beyond-paper extension).
+
+The paper's Bayesian framework identifies GLOBAL TOP-k (the genie that
+selects on the aggregated accumulated gradient) as the ideal sparsifier
+(§3.1). REGTOP-k approximates it with one-round-stale evidence; our linreg
+study (EXPERIMENTS.md) shows stale evidence plateaus where the genie
+converges. This module closes that gap with one cheap extra collective:
+
+1. every worker encodes its accumulated gradient a_n into a CountSketch
+   S(a_n) (rows x width, width ~ O(k));
+2. one all-reduce of the sketches yields S(sum_n w_n a_n) — sketches are
+   LINEAR, so this is a sketch of the true aggregated accumulated gradient;
+3. every worker decodes magnitude estimates for all J entries (median of
+   rows) and selects the SAME top-k mask -> coordinated selection;
+4. workers exchange only the k selected values (mask is shared, so the
+   index list is implied).
+
+Extra communication per step: rows*width floats (e.g. 3 x 4k), sub-linear in
+J — for a 3B-parameter model at S=1e-3 this is ~0.1% of the dense gradient.
+
+Hashing is stateless (multiplicative universal hashing on the index), so no
+O(J) hash tables are stored.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# fixed odd multipliers (Knuth multiplicative hashing), one pair per row
+_MULTS = jnp.array([2654435761, 2246822519, 3266489917, 668265263,
+                    374761393, 2654435789, 1597334677, 2869860233],
+                   dtype=jnp.uint32)
+_ADDS = jnp.array([374761393, 3266489917, 1181783497, 2549297995,
+                   4279918613, 1609587929, 2246822519, 2654435761],
+                  dtype=jnp.uint32)
+
+
+def resolve_width(k: int, width: int = 0) -> int:
+    if width:
+        return width
+    return int(min(max(4 * k, 256), 1 << 22))
+
+
+def _hashes(j: int, rows: int, width: int):
+    """(h (rows, J) bucket indices, s (rows, J) ±1 signs), stateless."""
+    idx = jnp.arange(j, dtype=jnp.uint32)
+    m = _MULTS[:rows, None]
+    a = _ADDS[:rows, None]
+    x = idx[None, :] * m + a
+    h = (x >> 8).astype(jnp.uint32) % jnp.uint32(width)
+    s = ((x >> 31) & 1).astype(jnp.float32) * 2.0 - 1.0
+    return h.astype(jnp.int32), s
+
+
+def encode(a: jnp.ndarray, rows: int, width: int) -> jnp.ndarray:
+    """a (J,) -> sketch (rows, width). Linear in a."""
+    h, s = _hashes(a.shape[0], rows, width)
+    af = a.astype(jnp.float32)
+
+    def one_row(hr, sr):
+        return jnp.zeros((width,), jnp.float32).at[hr].add(sr * af)
+
+    return jax.vmap(one_row)(h, s)
+
+
+def estimate(sketch: jnp.ndarray, j: int) -> jnp.ndarray:
+    """Magnitude estimates for all J entries (median over rows)."""
+    rows, width = sketch.shape
+    h, s = _hashes(j, rows, width)
+    vals = jax.vmap(lambda skr, hr, sr: sr * skr[hr])(sketch, h, s)
+    return jnp.median(vals, axis=0)

@@ -1,0 +1,348 @@
+"""Gradient sparsifiers: TOP-k, REGTOP-k (the paper, Algorithm 1), and baselines.
+
+All sparsifiers are functional and operate on a flat fp32 vector ``g`` (one
+data-parallel worker's gradient, or its model-parallel shard). The state is a
+small pytree carried through the training loop.
+
+Protocol per step (worker n):
+
+    out = compress(cfg, state, g, key)     # local: mask + sparsified gradient
+    g_agg = aggregate(out.ghat over data axis)   # see core/aggregate.py
+    state = observe_aggregate(cfg, out.state, g_agg)  # REGTOP-k stores g^t
+
+``observe_aggregate`` is a no-op for history-free sparsifiers.
+
+REGTOP-k (Algorithm 1 of the paper):
+    a^t      = eps^t + g^t
+    Delta^t  = s^{t-1} * (g_agg^{t-1} - w_n a^{t-1}) / (w_n a^t) + Q (1 - s^{t-1})
+    s^t      = Top_k( a^t * tanh(|1 + Delta^t| / mu) )
+    ghat^t   = s^t * a^t
+    eps^{t+1}= a^t - ghat^t
+with plain TOP-k at t=0. mu -> 0 recovers TOP-k exactly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SparsifierConfig
+from repro.core import select
+
+_TINY = 1e-12
+
+
+@dataclass
+class CompressOut:
+    ghat: jnp.ndarray        # dense sparsified gradient (J,)
+    mask: jnp.ndarray        # 0/1 selection mask (J,)
+    state: Any               # updated state (pre-aggregation)
+    values: Optional[jnp.ndarray] = None  # (k,) packed values (exact selector)
+    indices: Optional[jnp.ndarray] = None  # (k,) int32 indices
+
+
+def resolve_k(cfg: SparsifierConfig, j: int) -> int:
+    if cfg.k:
+        return int(min(cfg.k, j))
+    return max(1, int(round(cfg.sparsity * j)))
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: SparsifierConfig, j: int) -> dict:
+    dt = jnp.dtype(cfg.ef_dtype)
+    z = jnp.zeros((j,), dt)
+    if cfg.kind in ("none", "globaltopk"):
+        return {"step": jnp.zeros((), jnp.int32)}
+    if cfg.kind in ("topk", "randk", "thresholdk", "sketchtopk"):
+        return {"err": z, "step": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "dgc":
+        return {"err": z, "mom": z, "step": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "regtopk":
+        if cfg.state_format == "sparse":
+            k = resolve_k(cfg, j)
+            return {
+                "err": z,                                  # eps^t
+                "idx_prev": jnp.zeros((k,), jnp.uint32),   # support of s^{t-1}
+                "a_prev_sel": jnp.zeros((k,), dt),         # a^{t-1}[idx]
+                "g_prev_sel": jnp.zeros((k,), dt),         # g^{t-1}[idx]
+                "step": jnp.zeros((), jnp.int32),
+            }
+        return {
+            "err": z,                  # eps^t
+            "a_prev": z,               # a^{t-1}
+            "s_prev": jnp.zeros((j,), dt),   # s^{t-1}
+            "g_agg_prev": z,           # g^{t-1} (aggregated, observed)
+            "step": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(f"unknown sparsifier {cfg.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Compressors
+# ---------------------------------------------------------------------------
+
+def _pack(a: jnp.ndarray, score: jnp.ndarray, k: int):
+    from repro.core import bigvec
+    idx = select.topk_indices(score, k)       # uint32 (J may exceed int32)
+    vals = bigvec.gather(a, idx)
+    return vals, idx
+
+
+def _mask_from(score: jnp.ndarray, k: int, method: str) -> jnp.ndarray:
+    return select.topk_mask(score, k, method)
+
+
+def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
+             key: Optional[jax.Array] = None, omega: float = 1.0,
+             use_fused_kernel: bool = False) -> CompressOut:
+    """Sparsify one worker's flat gradient. omega = this worker's weight w_n."""
+    j = g.shape[0]
+    k = resolve_k(cfg, j)
+    dt = jnp.dtype(cfg.ef_dtype)
+    g = g.astype(dt)
+
+    if cfg.kind == "none":
+        ones = jnp.ones((j,), dt)
+        return CompressOut(g, ones, {"step": state["step"] + 1})
+
+    if cfg.kind == "globaltopk":
+        # Genie sparsifier: mask computed by the CALLER from the aggregated
+        # accumulated gradient (core/aggregate.py:global_topk_roundtrip).
+        raise RuntimeError("globaltopk is aggregate-level; use aggregate.global_topk_roundtrip")
+
+    if cfg.kind == "topk":
+        a = state["err"] + g
+        mask = _mask_from(a, k, cfg.selector)
+        ghat = mask * a
+        new = {"err": a - ghat, "step": state["step"] + 1}
+        vals = idx = None
+        if cfg.selector == "exact":
+            vals, idx = _pack(a, a, k)
+        return CompressOut(ghat, mask, new, vals, idx)
+
+    if cfg.kind == "randk":
+        a = state["err"] + g
+        assert key is not None, "randk needs a PRNG key"
+        idx = jax.random.choice(key, j, (k,), replace=False).astype(jnp.int32)
+        mask = jnp.zeros((j,), dt).at[idx].set(1.0)
+        ghat = mask * a
+        return CompressOut(ghat, mask, {"err": a - ghat, "step": state["step"] + 1},
+                           a[idx], idx)
+
+    if cfg.kind == "thresholdk":
+        # Strom'15: fixed threshold = k-th magnitude of the FIRST step, reused.
+        a = state["err"] + g
+        mask = _mask_from(a, k, cfg.selector)   # per-step threshold variant
+        ghat = mask * a
+        return CompressOut(ghat, mask, {"err": a - ghat, "step": state["step"] + 1})
+
+    if cfg.kind == "dgc":
+        # Deep Gradient Compression [Lin et al. '18]: momentum correction.
+        mom = cfg.momentum * state["mom"] + g
+        a = state["err"] + mom
+        mask = _mask_from(a, k, cfg.selector)
+        ghat = mask * a
+        new = {"err": a - ghat, "mom": mom * (1.0 - mask), "step": state["step"] + 1}
+        vals = idx = None
+        if cfg.selector == "exact":
+            vals, idx = _pack(a, a, k)
+        return CompressOut(ghat, mask, new, vals, idx)
+
+    if cfg.kind == "regtopk":
+        if cfg.state_format == "sparse":
+            return _compress_regtopk_sparse(cfg, state, g, k, omega)
+        if use_fused_kernel:
+            return _compress_regtopk_fused(cfg, state, g, k, omega)
+        a = state["err"] + g
+        # posterior distortion (Algorithm 1, line 5); safe-divide where a ~ 0
+        denom = omega * a
+        safe = jnp.where(jnp.abs(denom) > _TINY, denom, jnp.sign(denom) * _TINY + _TINY)
+        delta_sent = (state["g_agg_prev"] - omega * state["a_prev"]) / safe
+        delta = state["s_prev"] * delta_sent + cfg.Q * (1.0 - state["s_prev"])
+        reg = jnp.tanh(jnp.abs(1.0 + delta) / cfg.mu)
+        score = a * reg
+        is_first = state["step"] == 0
+        score = jnp.where(is_first, a, score)   # t=0: plain TOP-k
+        mask = _mask_from(score, k, cfg.selector)
+        ghat = mask * a
+        new = {
+            "err": a - ghat,
+            "a_prev": a,
+            "s_prev": mask,
+            "g_agg_prev": state["g_agg_prev"],  # replaced by observe_aggregate
+            "step": state["step"] + 1,
+        }
+        vals = idx = None
+        if cfg.selector == "exact":
+            vals, idx = _pack(a, score, k)
+        return CompressOut(ghat, mask, new, vals, idx)
+
+    raise ValueError(f"unknown sparsifier {cfg.kind!r}")
+
+
+def _compress_regtopk_sparse(cfg: SparsifierConfig, state: dict,
+                             g: jnp.ndarray, k: int, omega: float) -> CompressOut:
+    """REGTOP-k with O(k) posterior state (state_format="sparse").
+
+    Algorithm 1 line 5 reads a^{t-1} and g^{t-1} ONLY at the support of
+    s^{t-1}; everywhere else Delta = Q. So the dense (a_prev, s_prev,
+    g_agg_prev) vectors reduce to three k-sized arrays — 4J fp32 of state
+    becomes J (+O(k)), which is what lets the 32B-class configs fit HBM.
+    Update math is identical to the dense path.
+    """
+    dt = jnp.dtype(cfg.ef_dtype)
+    a = state["err"].astype(dt) + g.astype(dt)
+    idx_p = state["idx_prev"]
+    from repro.core import bigvec as _bv
+    a_sel = _bv.gather(a, idx_p)
+    denom = omega * a_sel
+    safe = jnp.where(jnp.abs(denom) > _TINY, denom,
+                     jnp.sign(denom) * _TINY + _TINY)
+    delta_sel = (state["g_prev_sel"] - omega * state["a_prev_sel"]) / safe
+    reg_sel = jnp.tanh(jnp.abs(1.0 + delta_sel) / cfg.mu)
+    reg_q = jnp.tanh(jnp.abs(1.0 + cfg.Q) / cfg.mu).astype(dt)
+    from repro.core import bigvec
+    reg = bigvec.scatter_set(jnp.full(a.shape, reg_q, dt), idx_p,
+                             reg_sel.astype(dt))
+    score = jnp.where(state["step"] == 0, a, a * reg)
+    from repro.core import select as _select
+    idx = _select.topk_indices(score, k)
+    vals = bigvec.gather(a, idx)
+    ghat = bigvec.scatter_set(jnp.zeros_like(a), idx, vals)
+    new = {
+        "err": bigvec.scatter_set(a, idx, 0.0),
+        "idx_prev": idx.astype(jnp.uint32),
+        "a_prev_sel": vals,
+        "g_prev_sel": state["g_prev_sel"],   # filled by observe_aggregate
+        "step": state["step"] + 1,
+    }
+    mask = bigvec.mask_from_indices(a.shape[0], idx, a.dtype)
+    return CompressOut(ghat, mask, new, vals, idx)
+
+
+def _compress_regtopk_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
+                            k: int, omega: float) -> CompressOut:
+    """REGTOP-k via the fused Pallas error-feedback kernel (kernels/fused_ef)."""
+    from repro.kernels.fused_ef.ops import fused_regtopk_scores, fused_apply_mask
+    a, score = fused_regtopk_scores(
+        g, state["err"], state["a_prev"], state["g_agg_prev"], state["s_prev"],
+        omega=omega, mu=cfg.mu, Q=cfg.Q)
+    score = jnp.where(state["step"] == 0, a, score)
+    mask = _mask_from(score, k, cfg.selector)
+    ghat, err = fused_apply_mask(a, mask)
+    new = {"err": err, "a_prev": a, "s_prev": mask,
+           "g_agg_prev": state["g_agg_prev"], "step": state["step"] + 1}
+    vals = idx = None
+    if cfg.selector == "exact":
+        vals, idx = _pack(a, score, k)
+    return CompressOut(ghat, mask, new, vals, idx)
+
+
+def observe_aggregate(cfg: SparsifierConfig, state: dict, g_agg: jnp.ndarray) -> dict:
+    """Store the aggregated gradient g^t the server 'broadcasts' (footnote 1)."""
+    if cfg.kind == "regtopk":
+        state = dict(state)
+        if cfg.state_format == "sparse":
+            from repro.core import bigvec
+            state["g_prev_sel"] = bigvec.gather(g_agg, state["idx_prev"]).astype(
+                jnp.dtype(cfg.ef_dtype))
+        else:
+            state["g_agg_prev"] = g_agg.astype(jnp.dtype(cfg.ef_dtype))
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Single-process multi-worker reference driver (tests / paper experiments)
+# ---------------------------------------------------------------------------
+
+def make_round_fn(cfg: SparsifierConfig, n_workers: int):
+    """Jitted vmapped aggregation round over stacked worker states/grads.
+
+    states_stacked: pytree with leading (N,) axis; grads: (N, J).
+    Returns (g_agg (J,), new_states_stacked). Equal weights w_n = 1/N.
+    """
+    omega = 1.0 / n_workers
+
+    if cfg.kind == "sketchtopk":
+        from repro.core import select as _select
+        from repro.core import sketch as _sketch
+
+        def round_sketch(states, grads):
+            j = grads.shape[1]
+            k = resolve_k(cfg, j)
+            width = _sketch.resolve_width(k, cfg.sketch_width)
+            a = states["err"] + grads.astype(jnp.float32)    # (N, J)
+            sk = jnp.sum(jax.vmap(
+                lambda ai: _sketch.encode(ai, cfg.sketch_rows, width))(a),
+                0) * omega
+            gmag = _sketch.estimate(sk, j)
+            mask = _select.topk_mask(gmag, k, cfg.selector)
+            ghat = mask[None] * a
+            g_agg = jnp.sum(ghat, 0) * omega
+            return g_agg, {"err": a - ghat, "step": states["step"] + 1}
+
+        return jax.jit(round_sketch)
+
+    def one(state, g):
+        out = compress(cfg, state, g, omega=omega)
+        return out.ghat, out.state
+
+    def round_fn(states, grads):
+        ghats, new_states = jax.vmap(one)(states, grads)
+        g_agg = jnp.sum(ghats, 0) * omega
+        new_states = jax.vmap(
+            lambda s: observe_aggregate(cfg, s, g_agg))(new_states)
+        return g_agg, new_states
+
+    return jax.jit(round_fn)
+
+
+def stack_states(states: list):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def sparsified_round(cfg: SparsifierConfig, states: list, grads: list,
+                     omegas: Optional[list] = None, key=None):
+    """One aggregation round over N in-process workers (validation path).
+
+    Returns (g_agg, new_states). Used by the paper-experiment benchmarks and
+    tests; the production path is core/distributed.py under shard_map.
+    """
+    n = len(grads)
+    omegas = omegas or [1.0 / n] * n
+    j = grads[0].shape[0]
+    if cfg.kind == "sketchtopk":
+        from repro.core import select as _select
+        from repro.core import sketch as _sketch
+        k = resolve_k(cfg, j)
+        width = _sketch.resolve_width(k, cfg.sketch_width)
+        a_list = [st["err"] + g.astype(jnp.float32)
+                  for st, g in zip(states, grads)]
+        sk_agg = sum(w * _sketch.encode(a, cfg.sketch_rows, width)
+                     for w, a in zip(omegas, a_list))
+        gmag = _sketch.estimate(sk_agg, j)
+        mask = _select.topk_mask(gmag, k, cfg.selector)
+        g_agg = sum(w * (mask * a) for w, a in zip(omegas, a_list))
+        new_states = [{"err": a - mask * a, "step": st["step"] + 1}
+                      for a, st in zip(a_list, states)]
+        return g_agg, new_states
+    if cfg.kind == "globaltopk":
+        # genie: mask from the true aggregated accumulated gradient
+        a_list = [grads[i].astype(jnp.float32) for i in range(n)]
+        a_agg = sum(w * a for w, a in zip(omegas, a_list))
+        k = resolve_k(cfg, j)
+        mask = select.topk_mask(a_agg, k, cfg.selector)
+        g_agg = mask * a_agg
+        return g_agg, states
+    outs = []
+    for i in range(n):
+        ki = None if key is None else jax.random.fold_in(key, i)
+        outs.append(compress(cfg, states[i], grads[i], key=ki, omega=omegas[i]))
+    g_agg = sum(w * o.ghat for w, o in zip(omegas, outs))
+    new_states = [observe_aggregate(cfg, o.state, g_agg) for o in outs]
+    return g_agg, new_states

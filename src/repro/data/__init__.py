@@ -1,0 +1,3 @@
+from repro.data.synthetic import (
+    lm_batch, lm_batch_specs, linreg_dataset, image_dataset,
+)

@@ -1,0 +1,101 @@
+"""Deterministic synthetic data pipelines.
+
+Everything is generated from fold_in(seed, step, rank) PRNG streams — fully
+deterministic, shardable, no host I/O. Three generators:
+
+- ``lm_batch``: token batches (+ modality stubs) for the LM architectures;
+- ``linreg_dataset``: the paper §4.1 Gaussian linear-model datasets
+  (per-worker ground truth t_n ~ N(u_n, h^2), u_n ~ N(U, sigma^2));
+- ``image_dataset``: synthetic 10-class image set standing in for CIFAR-10
+  in the §4.2 analogue experiment (class-conditional Gaussian means over
+  32x32x3, fixed across steps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# LM batches
+# ---------------------------------------------------------------------------
+
+def lm_batch(cfg, batch: int, seq: int, seed: int, step) -> dict:
+    """One deterministic LM batch for model config cfg (local shapes)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    kt, kp = jax.random.split(key)
+    tokens = jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    targets = jnp.concatenate([tokens[:, 1:],
+                               jnp.full((batch, 1), -1, jnp.int32)], 1)
+    out = {"tokens": tokens, "targets": targets}
+    if cfg.frontend == "vision_stub":
+        out["patches"] = jax.random.normal(
+            kp, (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+        # patch positions carry no LM loss
+        mask = jnp.arange(seq)[None, :] < cfg.n_frontend_tokens
+        out["targets"] = jnp.where(mask, -1, targets)
+    elif cfg.frontend == "audio_stub":
+        out["frames"] = jax.random.normal(
+            kp, (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    return out
+
+
+def lm_batch_specs(cfg, batch: int, seq: int, dtype=jnp.int32) -> dict:
+    """ShapeDtypeStruct stand-ins matching lm_batch (dry-run input_specs)."""
+    out = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.frontend == "vision_stub":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    elif cfg.frontend == "audio_stub":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Paper §4.1 linear regression
+# ---------------------------------------------------------------------------
+
+def linreg_dataset(n_workers=20, n_points=500, dim=100, U=0.0, sigma2=5.0,
+                   h2=1.0, noise=0.5, seed=0):
+    """Per-worker (X, y) plus the global LS optimum w*."""
+    rng = np.random.default_rng(seed)
+    xs, ys = [], []
+    for n in range(n_workers):
+        u_n = rng.normal(U, np.sqrt(sigma2))
+        t_n = rng.normal(u_n, np.sqrt(h2), size=(dim,))
+        X = rng.normal(0.0, 1.0, size=(n_points, dim))
+        eps = rng.normal(0.0, np.sqrt(noise), size=(n_points,))
+        y = X @ t_n + eps
+        xs.append(X)
+        ys.append(y)
+    # global LS optimum of (1/N) sum_n ||X_n w - y_n||^2 / (2 D_n)
+    A = sum(x.T @ x for x in xs)
+    b = sum(x.T @ y for x, y in zip(xs, ys))
+    w_star = np.linalg.solve(A, b)
+    return ([jnp.asarray(x) for x in xs], [jnp.asarray(y) for y in ys],
+            jnp.asarray(w_star))
+
+
+# ---------------------------------------------------------------------------
+# §4.2 analogue: synthetic 10-class images
+# ---------------------------------------------------------------------------
+
+def image_dataset(n_train=2000, n_test=500, n_classes=10, hw=16, seed=0):
+    """Class-conditional Gaussian images (B, hw, hw, 3) + labels."""
+    rng = np.random.default_rng(seed)
+    means = rng.normal(0.0, 1.0, size=(n_classes, hw, hw, 3)).astype(np.float32)
+
+    def make(n, s):
+        r = np.random.default_rng(s)
+        y = r.integers(0, n_classes, size=(n,))
+        x = means[y] + r.normal(0.0, 1.5, size=(n, hw, hw, 3)).astype(np.float32)
+        return jnp.asarray(x), jnp.asarray(y)
+
+    xtr, ytr = make(n_train, seed + 1)
+    xte, yte = make(n_test, seed + 2)
+    return xtr, ytr, xte, yte

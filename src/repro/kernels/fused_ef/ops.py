@@ -1,0 +1,39 @@
+"""Jit-friendly wrappers for the fused error-feedback Pallas kernels:
+padding to block multiples + interpret-mode selection (CPU validation runs
+the kernel body under interpret=True; on TPU it compiles natively).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_ef.kernel import BLOCK, apply_pallas, scores_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad(x, j_pad):
+    return jnp.pad(x.astype(jnp.float32), (0, j_pad - x.shape[0]))
+
+
+def fused_regtopk_scores(g, err, a_prev, g_agg, s_prev, *, omega, mu, Q):
+    """(a, score) for the REGTOP-k selector; inputs (J,) any float dtype."""
+    j = g.shape[0]
+    j_pad = -(-j // BLOCK) * BLOCK
+    a, score = scores_pallas(
+        _pad(g, j_pad), _pad(err, j_pad), _pad(a_prev, j_pad),
+        _pad(g_agg, j_pad), _pad(s_prev, j_pad),
+        omega=float(omega), mu=float(mu), q=float(Q),
+        interpret=_interpret())
+    return a[:j], score[:j]
+
+
+def fused_apply_mask(a, mask):
+    """(ghat, err_new) = (mask*a, a - mask*a)."""
+    j = a.shape[0]
+    j_pad = -(-j // BLOCK) * BLOCK
+    ghat, err = apply_pallas(_pad(a, j_pad), _pad(mask, j_pad),
+                             interpret=_interpret())
+    return ghat[:j], err[:j]

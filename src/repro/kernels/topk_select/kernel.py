@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: magnitude histogram for threshold top-k selection.
+
+TPU adaptation of radix-select (DESIGN.md §2.2): one O(J) VMEM-tiled pass
+builds a BINS-bin histogram of |x| / amax; the k-th magnitude threshold is
+the smallest bin boundary whose tail count >= k. The TPU grid is sequential,
+so the kernel accumulates into the same output block across grid steps
+(out index_map -> (0, 0)).
+
+Block layout: x reshaped to (J/BLOCK, BLOCK) rows, BLOCK = 8 * 128 * 4
+(fp32 VMEM tile-aligned); per grid step the kernel histograms one row via a
+compare-and-sum against the bin index vector.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BINS = 2048
+BLOCK = 8 * 128 * 4   # 4096 elements per grid step
+
+
+def _hist_kernel(amax_ref, x_ref, hist_ref, *, bins: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    amax = amax_ref[0, 0]
+    x = x_ref[...]                                   # (1, BLOCK)
+    scaled = jnp.abs(x.astype(jnp.float32)) / amax
+    bidx = jnp.clip((scaled * bins).astype(jnp.int32), 0, bins - 1)  # (1, B)
+    # one-hot count: (BLOCK, bins) compare, summed over the block
+    onehot = (bidx.reshape(-1, 1) ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, bins), 1))
+    hist_ref[...] += jnp.sum(onehot.astype(jnp.int32), axis=0,
+                             keepdims=True)
+
+
+def histogram_pallas(x: jnp.ndarray, amax: jnp.ndarray, bins: int = BINS,
+                     interpret: bool = True) -> jnp.ndarray:
+    """x: (J,) with J % BLOCK == 0 (caller pads). Returns (bins,) int32."""
+    j = x.shape[0]
+    assert j % BLOCK == 0, j
+    rows = j // BLOCK
+    xr = x.reshape(rows, BLOCK)
+    amax2 = jnp.maximum(amax, 1e-30).reshape(1, 1).astype(jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, bins=bins),
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),          # amax (SMEM-ish)
+            pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),      # x row
+        ],
+        out_specs=pl.BlockSpec((1, bins), lambda i: (0, 0)),  # accumulate
+        out_shape=jax.ShapeDtypeStruct((1, bins), jnp.int32),
+        interpret=interpret,
+    )(amax2, xr)
+    return out[0]

@@ -1,0 +1,30 @@
+"""Jit-friendly wrapper for the histogram threshold-select kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_select.kernel import BINS, BLOCK, histogram_pallas
+from repro.kernels.topk_select.ref import threshold_from_hist
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def histogram_threshold_op(x: jnp.ndarray, k: int, bins: int = BINS):
+    """k-th |x| magnitude via the Pallas histogram. x: (J,) any float."""
+    j = x.shape[0]
+    j_pad = -(-j // BLOCK) * BLOCK
+    xp = jnp.pad(x.astype(jnp.float32), (0, j_pad - j))
+    amax = jnp.max(jnp.abs(xp))
+    hist = histogram_pallas(xp, amax, bins, interpret=_interpret())
+    # padding contributes j_pad - j zeros to bin 0; harmless for the tail
+    # count unless k reaches into bin 0 — correct by subtracting them.
+    hist = hist.at[0].add(-(j_pad - j))
+    return threshold_from_hist(hist, amax, k, x.dtype)
+
+
+def topk_mask_op(x: jnp.ndarray, k: int, bins: int = BINS):
+    tau = histogram_threshold_op(x, k, bins)
+    return (jnp.abs(x) >= tau).astype(x.dtype)

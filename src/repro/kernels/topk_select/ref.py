@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the histogram threshold top-k kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.topk_select.kernel import BINS
+
+
+def histogram_ref(x: jnp.ndarray, amax: jnp.ndarray, bins: int = BINS):
+    """Identical semantics to kernel.histogram_pallas: linear histogram of
+    |x|/amax into `bins` bins (clipped)."""
+    amax = jnp.maximum(amax, 1e-30)
+    scaled = jnp.abs(x.astype(jnp.float32)) / amax
+    bidx = jnp.clip((scaled * bins).astype(jnp.int32), 0, bins - 1)
+    return jnp.zeros((bins,), jnp.int32).at[bidx].add(1)
+
+
+def threshold_from_hist(hist: jnp.ndarray, amax: jnp.ndarray, k: int,
+                        dtype=jnp.float32):
+    """Smallest bin boundary tau with count(|x| >= tau) >= k."""
+    bins = hist.shape[0]
+    tail = jnp.cumsum(hist[::-1])[::-1]
+    ok = tail >= k
+    b = jnp.max(jnp.where(ok, jnp.arange(bins), -1))
+    return jnp.where(b >= 0, b.astype(jnp.float32) / bins * amax, 0.0).astype(dtype)
+
+
+def topk_mask_ref(x: jnp.ndarray, k: int, bins: int = BINS):
+    amax = jnp.max(jnp.abs(x))
+    hist = histogram_ref(x, amax, bins)
+    tau = threshold_from_hist(hist, amax, k)
+    return (jnp.abs(x) >= tau).astype(x.dtype)

@@ -1,0 +1,21 @@
+"""Production mesh construction. Must be a FUNCTION so importing this module
+never touches jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax init).
+"""
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (TPU v5e); 2 pods = 512 chips multi-pod."""
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(data: int, model: int, pods: int = 1):
+    """Arbitrary mesh for tests / small runs."""
+    import jax
+    if pods > 1:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

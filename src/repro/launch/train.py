@@ -1,0 +1,105 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b \
+      --smoke --steps 50 --sparsifier regtopk --sparsity 0.01 \
+      --data 4 --model 2 --devices 8
+
+--devices N forces N host devices (set BEFORE jax import); --smoke uses the
+reduced config of the arch family so the run fits on CPU.
+"""
+import argparse
+import os
+import sys
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--sparsifier", default="regtopk")
+    ap.add_argument("--sparsity", type=float, default=0.01)
+    ap.add_argument("--mu", type=float, default=0.5)
+    ap.add_argument("--comm", default="simulate",
+                    choices=["simulate", "sparse", "dense"])
+    ap.add_argument("--optimizer", default="adam")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import (OptimizerConfig, RunConfig, SHAPES,
+                                    SparsifierConfig, get_config,
+                                    reduced_config)
+    from repro.data import lm_batch
+    from repro.launch.mesh import make_mesh
+    from repro.train.step import (build_parallel, build_train_step,
+                                  init_train_state, resolve_model_cfg)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced_config(cfg)
+    run = RunConfig(
+        model=cfg, shape=SHAPES["train_4k"],
+        sparsifier=SparsifierConfig(kind=args.sparsifier,
+                                    sparsity=args.sparsity, mu=args.mu,
+                                    comm_mode=args.comm),
+        optimizer=OptimizerConfig(kind=args.optimizer, lr=args.lr),
+        seed=args.seed, steps=args.steps,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+    )
+    mesh = make_mesh(args.data, args.model, args.pods)
+    pal = build_parallel(mesh)
+    mcfg = resolve_model_cfg(run)
+    key = jax.random.PRNGKey(args.seed)
+    with mesh:
+        params, opt_state, ef_state = init_train_state(run, mesh, pal, key)
+        step, _, _ = build_train_step(run, mesh, pal)
+        jstep = jax.jit(step, donate_argnums=(0, 1, 2))
+        n = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+        print(f"[train] {cfg.name}: {n:,} params (global), mesh="
+              f"{dict(zip(mesh.axis_names, mesh.devices.shape))}, "
+              f"sparsifier={args.sparsifier}@{args.sparsity}")
+        import time
+        t0 = time.time()
+        for t in range(args.steps):
+            batch = lm_batch(mcfg, args.batch, args.seq, args.seed, t)
+            params, opt_state, ef_state, metrics = jstep(
+                params, opt_state, ef_state, batch, key)
+            if t % args.log_every == 0 or t == args.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                print(f"step {t:5d} loss {m['loss']:.4f} "
+                      f"gnorm {m['gnorm_local']:.3f} "
+                      f"nz {m['agg_nonzero']:.4f} "
+                      f"({time.time()-t0:.1f}s)")
+            if (run.checkpoint_every and run.checkpoint_dir
+                    and t and t % run.checkpoint_every == 0):
+                from repro.checkpoint import save_checkpoint
+                save_checkpoint(run.checkpoint_dir, t, params, opt_state,
+                                ef_state)
+        if run.checkpoint_dir:
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(run.checkpoint_dir, args.steps, params,
+                            opt_state, ef_state)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

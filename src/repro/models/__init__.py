@@ -1,0 +1,5 @@
+from repro.models.parallel import Parallel
+from repro.models.transformer import (
+    init_params, loss_fn, prefill, decode_step, init_decode_cache,
+    layer_pattern, n_superblocks,
+)

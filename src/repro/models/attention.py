@@ -1,0 +1,635 @@
+"""Attention: GQA (+RoPE, bias), MLA (DeepSeek-V2), sliding-window; full-seq
+(train/prefill) and cached decode paths.
+
+Distribution modes (pal.attn_dist):
+
+- ``sp`` (default, Megatron-SP): attention weights head-sharded over the
+  model axis (head counts PADDED to multiples of tp — assigned archs are not
+  divisible; padded heads have zero-init out-projections so semantics are
+  unchanged). In sequence-parallel mode the residual stream arrives
+  seq-sharded; we all-gather seq, run chunked (flash-style, online-softmax)
+  attention on the rank's local heads over the full sequence, and
+  psum_scatter the output back to seq shards.
+
+- ``ring``: context-parallel ring attention. Attention weights are
+  REPLICATED over the model axis (each rank computes all heads for its seq
+  block); K/V blocks rotate via ppermute. For MLA the ring payload is the
+  COMPRESSED (ckv, krope) stream — kv_lora+rope dims instead of 2*H*hd per
+  token (beyond-paper optimization, cheap to replicate thanks to MLA's
+  low-rank projections).
+
+Decode: KV cache is head-sharded over model (sp) and optionally
+sequence-sharded over ``pal.cache_seq_axis`` (context-parallel decode for
+batch < data-axis size, e.g. long_500k) with flash LSE-merge psums.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.parallel import (
+    Parallel, all_gather_model, axis_index, heads_padded,
+    ppermute_model, psum_model, psum_scatter_model, shard_slice,
+)
+
+NEG_INF = -1e30
+Q_CHUNK = 1024
+KV_CHUNK = 2048
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def apply_rope(x, pos, rot_dim: int, theta: float):
+    """x: (B, S, H, hd); pos: (S,) int32. Rotates the first rot_dim dims."""
+    if rot_dim == 0:
+        return x
+    freqs = theta ** (-jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim)
+    angle = pos[:, None].astype(jnp.float32) * freqs         # (S, rot/2)
+    cos = jnp.cos(angle)[None, :, None, :]
+    sin = jnp.sin(angle)[None, :, None, :]
+    xr = x[..., :rot_dim].astype(jnp.float32)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    rot = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    rot = rot.reshape(xr.shape)
+    return jnp.concatenate([rot.astype(x.dtype), x[..., rot_dim:]], -1)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _head_counts(cfg, pal: Parallel):
+    """(local_q_heads, local_kv_heads) under the current distribution."""
+    if getattr(pal, "attn_dist", "sp") == "ring":
+        return cfg.n_heads, cfg.n_kv_heads       # replicated
+    hp = heads_padded(cfg.n_heads, pal)
+    kvp = heads_padded(cfg.n_kv_heads, pal)
+    assert hp % kvp == 0, (hp, kvp)
+    return shard_slice(hp, pal), shard_slice(kvp, pal)
+
+
+def init_attention(key, cfg, pal: Parallel, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    hl, kvl = _head_counts(cfg, pal)
+    if cfg.attn_kind == "mla" and not cross:
+        vhd = cfg.v_head_dim or hd
+        return {
+            "dkv": dense_init(ks[0], d, cfg.kv_lora_rank + cfg.rope_head_dim),
+            "kv_norm": jnp.ones((cfg.kv_lora_rank,), jnp.float32),
+            "uk": dense_init(ks[1], cfg.kv_lora_rank, hl * hd),
+            "uv": dense_init(ks[2], cfg.kv_lora_rank, hl * vhd),
+            "wq": dense_init(ks[3], d, hl * (hd + cfg.rope_head_dim)),
+            "wo": dense_init(ks[4], hl * vhd, d),
+        }
+    p = {
+        "wq": dense_init(ks[0], d, hl * hd),
+        "wk": dense_init(ks[1], d, kvl * hd),
+        "wv": dense_init(ks[2], d, kvl * hd),
+        "wo": dense_init(ks[3], hl * hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hl * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kvl * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kvl * hd,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def _proj_qkv(p, x, cfg, pos):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(b, s, -1, hd)
+    k = k.reshape(b, s, -1, hd)
+    v = v.reshape(b, s, -1, hd)
+    if cfg.rope:
+        rot = int(hd * cfg.rotary_pct)
+        q = apply_rope(q, pos, rot, cfg.rope_theta)
+        k = apply_rope(k, pos, rot, cfg.rope_theta)
+    return q, k, v
+
+
+def _proj_mla(p, x, cfg, pos):
+    from repro.models.layers import norm_fwd
+    b, s, _ = x.shape
+    hd, rhd = cfg.resolved_head_dim, cfg.rope_head_dim
+    dkv = x @ p["dkv"].astype(x.dtype)
+    ckv, krope = dkv[..., :cfg.kv_lora_rank], dkv[..., cfg.kv_lora_rank:]
+    ckv = norm_fwd({"scale": p["kv_norm"]}, ckv, "rmsnorm")
+    krope = apply_rope(krope[:, :, None, :], pos, rhd, cfg.rope_theta)[:, :, 0]
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, -1, hd + rhd)
+    qn, qr = q[..., :hd], q[..., hd:]
+    qr = apply_rope(qr, pos, rhd, cfg.rope_theta)
+    return jnp.concatenate([qn, qr], -1), ckv, krope
+
+
+def _mla_expand(p, ckv, krope, n_heads, cfg, dtype):
+    b, s, _ = ckv.shape
+    hd, rhd = cfg.resolved_head_dim, cfg.rope_head_dim
+    vhd = cfg.v_head_dim or hd
+    k_nope = (ckv @ p["uk"].astype(dtype)).reshape(b, s, n_heads, hd)
+    v = (ckv @ p["uv"].astype(dtype)).reshape(b, s, n_heads, vhd)
+    k_rope = jnp.broadcast_to(krope[:, :, None, :], (b, s, n_heads, rhd)).astype(dtype)
+    return jnp.concatenate([k_nope, k_rope], -1), v
+
+
+# ---------------------------------------------------------------------------
+# SDPA primitives (fp32 softmax)
+# ---------------------------------------------------------------------------
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,*); GQA broadcast; mask (Sq,Sk) bool."""
+    b, sq = q.shape[0], q.shape[1]
+    g = q.shape[2] // k.shape[2]
+    qg = q.reshape(b, sq, k.shape[2], g, q.shape[3])
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+    return o.reshape(b, sq, -1, v.shape[3])
+
+
+def _sdpa_partial(q, k, v, mask, scale):
+    """Partial softmax block: returns (o_unnormalized, m, l); m,l (B,Sq,H)."""
+    b, sq = q.shape[0], q.shape[1]
+    g = q.shape[2] // k.shape[2]
+    qg = q.reshape(b, sq, k.shape[2], g, q.shape[3])
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, -1)
+    w = jnp.exp(s - m[..., None])
+    l = jnp.sum(w, -1)
+    o = jnp.einsum("bkgqs,bskh->bkgqh", w.astype(v.dtype), v)
+    h = k.shape[2] * g
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, v.shape[3])
+    m = m.transpose(0, 3, 1, 2).reshape(b, sq, h)
+    l = l.transpose(0, 3, 1, 2).reshape(b, sq, h)
+    return o, m, l
+
+
+def mask_padded_heads(o, cfg, pal: Parallel):
+    """Zero attention outputs of PADDED heads (head counts are rounded up to
+    tp multiples — DESIGN.md §2.1) so padding is semantically neutral.
+    o: (B, S, Hl, hd). Runs only under shard_map (uses axis_index)."""
+    if getattr(pal, "attn_dist", "sp") == "ring" or not pal.tp_on:
+        return o
+    hl = o.shape[2]
+    if hl * pal.tp <= cfg.n_heads:
+        return o
+    gh = axis_index(pal) * hl + jnp.arange(hl)
+    return o * (gh < cfg.n_heads)[None, None, :, None].astype(o.dtype)
+
+
+def _merge_two(o1, m1, l1, o2, m2, l2):
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    o = o1 * a1[..., None].astype(o1.dtype) + o2 * a2[..., None].astype(o2.dtype)
+    return o, m, l1 * a1 + l2 * a2
+
+
+def _finalize(o, l):
+    return o / jnp.maximum(l, 1e-30)[..., None].astype(o.dtype)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, scale, causal=True, window=0):
+    """Flash-style chunked attention: scan over q chunks, inner scan over kv
+    chunks with online softmax. Never materializes (Sq, Sk) scores.
+    q_pos (Sq,), k_pos (Sk,) are global positions for masking."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    vhd = v.shape[3]
+    qc = min(Q_CHUNK, sq)
+    kc = min(KV_CHUNK, sk)
+    nq, nk = sq // qc, sk // kc
+    if sq % qc or sk % kc:                        # ragged: fall back
+        mask = _mask_from_pos(q_pos, k_pos, causal, window)
+        return _sdpa(q, k, v, mask, scale)
+
+    qs = q.reshape(b, nq, qc, h, hd).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(nq, qc)
+
+    def per_q(qi, qpi):
+        o0 = jnp.zeros((b, qc, h, vhd), v.dtype)
+        m0 = jnp.full((b, qc, h), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, qc, h), jnp.float32)
+
+        def body(carry, inp):
+            o, m, l = carry
+            kb, vb, kpb = inp
+            mask = _mask_from_pos(qpi, kpb, causal, window)
+            ob, mb, lb = _sdpa_partial(qi, kb, vb, mask, scale)
+            return _merge_two(o, m, l, ob, mb, lb), None
+
+        ks_ = k.reshape(b, nk, kc, k.shape[2], hd).transpose(1, 0, 2, 3, 4)
+        vs_ = v.reshape(b, nk, kc, v.shape[2], vhd).transpose(1, 0, 2, 3, 4)
+        kps = k_pos.reshape(nk, kc)
+        (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0), (ks_, vs_, kps))
+        return _finalize(o, l)
+
+    outs = jax.lax.map(lambda t: per_q(t[0], t[1]), (qs, qp))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, vhd)
+
+
+def _mask_from_pos(q_pos, k_pos, causal, window):
+    if causal:
+        m = q_pos[:, None] >= k_pos[None, :]
+        if window:
+            m &= q_pos[:, None] - k_pos[None, :] < window
+        return m
+    return jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+
+
+
+# ---------------------------------------------------------------------------
+# MLA absorbed attention (cfg.mla_absorb): scores and context are computed in
+# the COMPRESSED kv_lora space — q_nope is projected through W_uk once
+# (per query), attention weights contract against c_kv directly, and the
+# per-head value expansion W_uv is applied to the CONTEXT instead of every
+# key. Never materializes (S, H, hd) K/V — the HBM win the §Perf iteration
+# for deepseek-v2 targets. Exactly equivalent to the expanded path.
+# ---------------------------------------------------------------------------
+
+def _absorb_q(p, q, cfg):
+    """q (B,S,H,hd+rhd) -> (q_lora (B,S,H,lora), q_rope (B,S,H,rhd))."""
+    hd = cfg.resolved_head_dim
+    qn, qr = q[..., :hd], q[..., hd:]
+    b, s, h, _ = qn.shape
+    uk = p["uk"].astype(qn.dtype).reshape(cfg.kv_lora_rank, h, hd)
+    ql = jnp.einsum("bshd,lhd->bshl", qn, uk)
+    return ql, qr
+
+
+def _sdpa_absorbed_chunked(p, q, ckv, krope, cfg, scale, q_pos, k_pos,
+                           causal=True, window=0):
+    """Chunked absorbed MLA attention. Returns (B,Sq,H,vhd)."""
+    ql, qr = _absorb_q(p, q, cfg)
+    b, sq, h, lora = ql.shape
+    sk = ckv.shape[1]
+    vhd = cfg.v_head_dim or cfg.resolved_head_dim
+    uv = p["uv"].astype(ckv.dtype).reshape(lora, h, vhd)
+    kc = min(KV_CHUNK, sk)
+    if sk % kc:
+        kc = sk
+    nk = sk // kc
+
+    o0 = jnp.zeros((b, sq, h, lora), ckv.dtype)
+    m0 = jnp.full((b, sq, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, h), jnp.float32)
+
+    def body(carry, inp):
+        o, m, l = carry
+        cb, rb, kpb = inp                                 # (B,kc,lora)...
+        s_ = (jnp.einsum("bqhl,bsl->bhqs", ql, cb) +
+              jnp.einsum("bqhr,bsr->bhqs", qr, rb)).astype(jnp.float32) * scale
+        mask = _mask_from_pos(q_pos, kpb, causal, window)
+        s_ = jnp.where(mask[None, None], s_, NEG_INF)
+        mb = jnp.max(s_, -1)                              # (B,H,Sq)
+        w = jnp.exp(s_ - mb[..., None])
+        lb = jnp.sum(w, -1)
+        ob = jnp.einsum("bhqs,bsl->bqhl", w.astype(cb.dtype), cb)
+        mb = mb.transpose(0, 2, 1)
+        lb = lb.transpose(0, 2, 1)
+        mn = jnp.maximum(m, mb)
+        a1 = jnp.exp(m - mn)
+        a2 = jnp.exp(mb - mn)
+        o = o * a1[..., None].astype(o.dtype) + ob * a2[..., None].astype(o.dtype)
+        return (o, mn, l * a1 + lb * a2), None
+
+    cs = ckv.reshape(b, nk, kc, lora).transpose(1, 0, 2, 3)
+    rs = krope.reshape(b, nk, kc, -1).transpose(1, 0, 2, 3)
+    kps = k_pos.reshape(nk, kc)
+    (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0), (cs, rs, kps))
+    ctx = _finalize(o, l)                                 # (B,Sq,H,lora)
+    return jnp.einsum("bqhl,lhv->bqhv", ctx, uv)
+
+
+def _decode_attend_absorbed(p, q, cache, pos, cfg, pal: Parallel, scale):
+    """Absorbed MLA decode over the compressed cache (LSE-merge aware)."""
+    ckv, krope = cache["ckv"], cache["krope"]
+    ql, qr = _absorb_q(p, q, cfg)                        # (B,1,H,lora)
+    b, _, h, lora = ql.shape
+    sl = ckv.shape[1]
+    vhd = cfg.v_head_dim or cfg.resolved_head_dim
+    uv = p["uv"].astype(ckv.dtype).reshape(lora, h, vhd)
+    s_ = (jnp.einsum("bqhl,bsl->bhqs", ql, ckv) +
+          jnp.einsum("bqhr,bsr->bhqs", qr, krope)).astype(jnp.float32) * scale
+    if pal.cache_seq_axis is None:
+        valid = jnp.arange(sl) <= pos
+        s_ = jnp.where(valid[None, None, None], s_, NEG_INF)
+        w = jax.nn.softmax(s_, -1)
+        ctx = jnp.einsum("bhqs,bsl->bqhl", w.astype(ckv.dtype), ckv)
+        return jnp.einsum("bqhl,lhv->bqhv", ctx, uv)
+    r = jax.lax.axis_index(pal.cache_seq_axis)
+    gpos = r * sl + jnp.arange(sl)
+    s_ = jnp.where((gpos <= pos)[None, None, None], s_, NEG_INF)
+    m = jnp.max(s_, -1)
+    w = jnp.exp(s_ - m[..., None])
+    l = jnp.sum(w, -1)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", w.astype(ckv.dtype), ckv)
+    mg = jax.lax.pmax(m, pal.cache_seq_axis)
+    a = jnp.exp(m - mg)
+    ctx = jax.lax.psum(ctx * a.transpose(0, 2, 1)[..., None].astype(ctx.dtype),
+                       pal.cache_seq_axis)
+    l = jax.lax.psum(l * a, pal.cache_seq_axis).transpose(0, 2, 1)
+    ctx = ctx / jnp.maximum(l, 1e-30)[..., None].astype(ctx.dtype)
+    return jnp.einsum("bqhl,lhv->bqhv", ctx, uv)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill-as-part-of-train)
+# ---------------------------------------------------------------------------
+
+def attn_fwd_full(p, x, cfg, pal: Parallel, *, causal=True, pos0=0,
+                  window=0, cross_kv=None):
+    """x: (B, S/tp, d) if pal.seq_parallel else (B, S, d). Returns same
+    sharding as input."""
+    hd = cfg.resolved_head_dim
+    scale = hd ** -0.5
+    if cfg.attn_kind == "sliding" and window == 0:
+        window = cfg.window
+    ring = getattr(pal, "attn_dist", "sp") == "ring" and pal.tp_on
+
+    if cross_kv is not None:
+        # cross-attention (whisper decoder): kv precomputed from encoder.
+        if pal.seq_parallel:
+            x = all_gather_model(x, pal, axis=1)
+        b, s, _ = x.shape
+        q = x @ p["wq"].astype(x.dtype)
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(q.dtype)
+        q = q.reshape(b, s, -1, hd)
+        k, v = cross_kv
+        o = _sdpa_chunked(q, k, v, jnp.arange(s), jnp.arange(k.shape[1]),
+                          scale, causal=False)
+        o = mask_padded_heads(o, cfg, pal)
+        y = o.reshape(b, s, -1) @ p["wo"].astype(o.dtype)
+        if pal.seq_parallel:
+            return psum_scatter_model(y, pal, axis=1)
+        return psum_model(y, pal)
+
+    if ring:
+        return _ring_fwd(p, x, cfg, pal, scale, causal, window)
+
+    if pal.seq_parallel:
+        x = all_gather_model(x, pal, axis=1)
+    b, s, _ = x.shape
+    pos = pos0 + jnp.arange(s)
+    if cfg.attn_kind == "mla":
+        q, ckv, krope = _proj_mla(p, x, cfg, pos)
+        if cfg.mla_absorb:
+            o = _sdpa_absorbed_chunked(p, q, ckv, krope, cfg, scale, pos,
+                                       pos, causal, window)
+        else:
+            k, v = _mla_expand(p, ckv, krope, q.shape[2], cfg, x.dtype)
+            o = _sdpa_chunked(q, k, v, pos, pos, scale, causal, window)
+    else:
+        q, k, v = _proj_qkv(p, x, cfg, pos)
+        o = _sdpa_chunked(q, k, v, pos, pos, scale, causal, window)
+    o = mask_padded_heads(o, cfg, pal)
+    y = o.reshape(b, s, -1) @ p["wo"].astype(o.dtype)
+    if pal.seq_parallel:
+        return psum_scatter_model(y, pal, axis=1)
+    return psum_model(y, pal)
+
+
+def _ring_fwd(p, x, cfg, pal: Parallel, scale, causal, window):
+    """Context-parallel ring attention; x (B, Sl, d) seq-sharded; attention
+    weights replicated (all heads computed per rank)."""
+    b, sl, _ = x.shape
+    tp = pal.tp
+    r = axis_index(pal)
+    pos = r * sl + jnp.arange(sl)
+    mla = cfg.attn_kind == "mla"
+    if mla:
+        q, ckv, krope = _proj_mla(p, x, cfg, pos)
+        kv_payload = (ckv, krope)
+    else:
+        q, k, v = _proj_qkv(p, x, cfg, pos)
+        kv_payload = (k, v)
+    h = q.shape[2]
+    vhd = (cfg.v_head_dim or cfg.resolved_head_dim) if mla else kv_payload[1].shape[3]
+    o0 = jnp.zeros((b, sl, h, vhd), x.dtype)
+    m0 = jnp.full((b, sl, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sl, h), jnp.float32)
+
+    def body(i, carry):
+        o, m, l, payload = carry
+        src = (r - i) % tp
+        k_pos = src * sl + jnp.arange(sl)
+        if mla:
+            kb, vb = _mla_expand(p, payload[0], payload[1], h, cfg, x.dtype)
+        else:
+            kb, vb = payload
+        mask = _mask_from_pos(pos, k_pos, causal, window)
+        ob, mb, lb = _sdpa_partial(q, kb, vb, mask, scale)
+        o, m, l = _merge_two(o, m, l, ob, mb, lb)
+        payload = tuple(ppermute_model(t, pal, 1) for t in payload)
+        return (o, m, l, payload)
+
+    o, m, l, _ = jax.lax.fori_loop(0, tp, body, (o0, m0, l0, kv_payload))
+    o = _finalize(o, l)
+    o = mask_padded_heads(o, cfg, pal)
+    y = o.reshape(b, sl, -1) @ p["wo"].astype(o.dtype)
+    return y                                       # stays seq-sharded; no psum
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, pal: Parallel, batch: int, max_seq: int, dtype):
+    """Per-layer cache. If pal.cache_seq_axis is set the seq dim here is the
+    PER-RANK slice (caller divides max_seq by the axis size)."""
+    hd = cfg.resolved_head_dim
+    if cfg.attn_kind == "mla":
+        return {
+            "ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_seq, cfg.rope_head_dim), dtype),
+        }
+    _, kvl = _head_counts(cfg, pal)
+    return {
+        "k": jnp.zeros((batch, max_seq, kvl, hd), dtype),
+        "v": jnp.zeros((batch, max_seq, kvl, hd), dtype),
+    }
+
+
+def cache_max_seq(cfg, seq_len: int) -> int:
+    """Global cache length for a given context length."""
+    if cfg.attn_kind == "sliding":
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+def _cache_write(arr, new, slot, pal: Parallel):
+    """Write new (B,1,...) at global slot index; seq dim possibly sharded
+    over pal.cache_seq_axis."""
+    if pal.cache_seq_axis is None:
+        return jax.lax.dynamic_update_slice_in_dim(arr, new.astype(arr.dtype), slot, 1)
+    sl = arr.shape[1]
+    r = jax.lax.axis_index(pal.cache_seq_axis)
+    local = slot - r * sl
+    inb = (local >= 0) & (local < sl)
+    upd = jax.lax.dynamic_update_slice_in_dim(
+        arr, new.astype(arr.dtype), jnp.clip(local, 0, sl - 1), 1)
+    return jnp.where(inb, upd, arr)
+
+
+def attn_decode(p, x, cache, pos, cfg, pal: Parallel, cross_kv=None):
+    """x (B,1,d), pos scalar int32 -> (y (B,1,d), cache)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    scale = hd ** -0.5
+    sliding = cfg.attn_kind == "sliding"
+
+    if cross_kv is not None:
+        q = x @ p["wq"].astype(x.dtype)
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(q.dtype)
+        q = q.reshape(b, 1, -1, hd)
+        k, v = cross_kv
+        o, m, l = _sdpa_partial(q, k, v, jnp.ones((1, k.shape[1]), bool), scale)
+        o = _finalize(o, l)
+        o = mask_padded_heads(o, cfg, pal)
+        y = o.reshape(b, 1, -1) @ p["wo"].astype(o.dtype)
+        return psum_model(y, pal), cache
+
+    posv = jnp.full((1,), pos, jnp.int32)
+    if cfg.attn_kind == "mla":
+        q, ckv, krope = _proj_mla(p, x, cfg, posv)
+        cache = {"ckv": _cache_write(cache["ckv"], ckv, pos, pal),
+                 "krope": _cache_write(cache["krope"], krope, pos, pal)}
+        if cfg.mla_absorb:
+            o = _decode_attend_absorbed(p, q, cache, pos, cfg, pal, scale)
+        else:
+            k, v = _mla_expand(p, cache["ckv"], cache["krope"], q.shape[2],
+                               cfg, x.dtype)
+            o = _decode_attend(q, k, v, pos, pal, scale, False, 0)
+        o = mask_padded_heads(o, cfg, pal)
+        y = o.reshape(b, 1, -1) @ p["wo"].astype(o.dtype)
+        return psum_model(y, pal), cache
+
+    q, k_new, v_new = _proj_qkv(p, x, cfg, posv)
+    if sliding:
+        w_total = cfg.window
+        slot = pos % jnp.int32(min(w_total, _global_cache_len(cache, pal)))
+    else:
+        slot = pos
+    cache = {"k": _cache_write(cache["k"], k_new, slot, pal),
+             "v": _cache_write(cache["v"], v_new, slot, pal)}
+    o = _decode_attend(q, cache["k"], cache["v"], pos, pal, scale,
+                       sliding, cfg.window)
+    o = mask_padded_heads(o, cfg, pal)
+    y = o.reshape(b, 1, -1) @ p["wo"].astype(o.dtype)
+    return psum_model(y, pal), cache
+
+
+def _global_cache_len(cache, pal: Parallel) -> int:
+    n = cache["k"].shape[1]
+    if pal.cache_seq_axis is not None:
+        # static per-rank slice; global = slice * axis size (set by caller via
+        # pal metadata; we recover it statically from the mesh at trace time)
+        import jax.core
+        n = n * jax.lax.axis_size(pal.cache_seq_axis)
+    return n
+
+
+def _decode_attend(q, k, v, pos, pal: Parallel, scale, sliding, window):
+    sl = k.shape[1]
+    if pal.cache_seq_axis is None:
+        gpos = jnp.arange(sl)
+        if sliding:
+            cap = sl                       # ring buffer of length min(window, S)
+            slot_pos = pos - ((pos - gpos) % cap)
+            valid = (slot_pos >= 0) & (slot_pos <= pos) & (pos - slot_pos < window)
+        else:
+            valid = gpos <= pos
+        o, m, l = _sdpa_partial(q, k, v, valid[None, :], scale)
+        return _finalize(o, l)
+    r = jax.lax.axis_index(pal.cache_seq_axis)
+    nax = jax.lax.axis_size(pal.cache_seq_axis)
+    gpos = r * sl + jnp.arange(sl)
+    if sliding:
+        cap = sl * nax
+        slot_pos = pos - ((pos - gpos) % cap)
+        valid = (slot_pos >= 0) & (slot_pos <= pos) & (pos - slot_pos < window)
+    else:
+        valid = gpos <= pos
+    o, m, l = _sdpa_partial(q, k, v, valid[None, :], scale)
+    mg = jax.lax.pmax(m, pal.cache_seq_axis)
+    a = jnp.exp(m - mg)
+    o = jax.lax.psum(o * a[..., None].astype(o.dtype), pal.cache_seq_axis)
+    l = jax.lax.psum(l * a, pal.cache_seq_axis)
+    return _finalize(o, l)
+
+
+# ---------------------------------------------------------------------------
+# Prefill that returns a cache (serving)
+# ---------------------------------------------------------------------------
+
+def attn_prefill(p, x, cfg, pal: Parallel, *, max_seq=None):
+    """Prompt forward + cache build. x (B, S, d) full (serving prefill is
+    batch-sharded over data, seq unsharded). Cache seq dim is NOT sharded
+    here (prefill shapes have batch >= data size)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    scale = hd ** -0.5
+    window = cfg.window if cfg.attn_kind == "sliding" else 0
+    max_seq = max_seq or s
+    pos = jnp.arange(s)
+    if cfg.attn_kind == "mla":
+        q, ckv, krope = _proj_mla(p, x, cfg, pos)
+        if cfg.mla_absorb:
+            o = _sdpa_absorbed_chunked(p, q, ckv, krope, cfg, scale, pos,
+                                       pos, True, window)
+        else:
+            k, v = _mla_expand(p, ckv, krope, q.shape[2], cfg, x.dtype)
+            o = _sdpa_chunked(q, k, v, pos, pos, scale, True, window)
+        cache = init_cache(cfg, pal, b, max_seq, x.dtype)
+        cache["ckv"] = _prefix_write(cache["ckv"], ckv)
+        cache["krope"] = _prefix_write(cache["krope"], krope)
+    else:
+        q, k, v = _proj_qkv(p, x, cfg, pos)
+        o = _sdpa_chunked(q, k, v, pos, pos, scale, True, window)
+        cache = init_cache(cfg, pal, b, min(max_seq, cfg.window) if window else max_seq, x.dtype)
+        cw = cache["k"].shape[1]
+        if window and s > cw:
+            # keep the last cw positions at slots (position % cw)
+            sel = jnp.arange(s - cw, s)
+            cache["k"] = cache["k"].at[:, sel % cw].set(k[:, sel].astype(cache["k"].dtype))
+            cache["v"] = cache["v"].at[:, sel % cw].set(v[:, sel].astype(cache["v"].dtype))
+        else:
+            cache["k"] = _prefix_write(cache["k"], k)
+            cache["v"] = _prefix_write(cache["v"], v)
+    o = mask_padded_heads(o, cfg, pal)
+    y = o.reshape(b, s, -1) @ p["wo"].astype(o.dtype)
+    return psum_model(y, pal), cache
+
+
+def _prefix_write(arr, new):
+    return jax.lax.dynamic_update_slice_in_dim(arr, new.astype(arr.dtype), 0, 1)
+
+
+# cross-attention K/V for whisper (computed once from encoder output)
+def init_cross_kv(p, enc_out, cfg, pal: Parallel):
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = enc_out @ p["wk"].astype(enc_out.dtype)
+    v = enc_out @ p["wv"].astype(enc_out.dtype)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return k.reshape(b, s, -1, hd), v.reshape(b, s, -1, hd)

@@ -1,0 +1,79 @@
+"""Small residual CNN classifier (ResNet-18-class analogue for §4.2).
+
+Pure JAX; used by the paper-claim benchmark that stands in for
+ResNet-18/CIFAR-10 (no dataset in this container — DESIGN.md §1). Three
+residual stages over 16x16x3 synthetic images, ~200k params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * fan ** -0.5
+
+
+def init_cnn(key, n_classes=10, width=32):
+    ks = jax.random.split(key, 12)
+    w = width
+    p = {
+        "stem": _conv_init(ks[0], 3, 3, 3, w),
+        "b1a": _conv_init(ks[1], 3, 3, w, w),
+        "b1b": _conv_init(ks[2], 3, 3, w, w),
+        "b2a": _conv_init(ks[3], 3, 3, w, 2 * w),
+        "b2b": _conv_init(ks[4], 3, 3, 2 * w, 2 * w),
+        "b2s": _conv_init(ks[5], 1, 1, w, 2 * w),
+        "b3a": _conv_init(ks[6], 3, 3, 2 * w, 4 * w),
+        "b3b": _conv_init(ks[7], 3, 3, 4 * w, 4 * w),
+        "b3s": _conv_init(ks[8], 1, 1, 2 * w, 4 * w),
+        "head_w": jax.random.normal(ks[9], (4 * w, n_classes)) * (4 * w) ** -0.5,
+        "head_b": jnp.zeros((n_classes,)),
+    }
+    return p
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _norm(x):
+    # parameter-free group-norm-ish normalization (keeps the bench about the
+    # sparsifier, not BN statistics synchronization)
+    mu = jnp.mean(x, axis=(1, 2, 3), keepdims=True)
+    sd = jnp.std(x, axis=(1, 2, 3), keepdims=True) + 1e-5
+    return (x - mu) / sd
+
+
+def cnn_fwd(p, x):
+    h = jax.nn.relu(_norm(_conv(x, p["stem"])))
+    r = h
+    h = jax.nn.relu(_norm(_conv(h, p["b1a"])))
+    h = jax.nn.relu(r + _norm(_conv(h, p["b1b"])))
+    r = _conv(h, p["b2s"], 2)
+    h = jax.nn.relu(_norm(_conv(h, p["b2a"], 2)))
+    h = jax.nn.relu(r + _norm(_conv(h, p["b2b"])))
+    r = _conv(h, p["b3s"], 2)
+    h = jax.nn.relu(_norm(_conv(h, p["b3a"], 2)))
+    h = jax.nn.relu(r + _norm(_conv(h, p["b3b"])))
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ p["head_w"] + p["head_b"]
+
+
+def cnn_loss(p, x, y):
+    logits = cnn_fwd(p, x)
+    nll = -jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]), y]
+    return jnp.mean(nll)
+
+
+def cnn_accuracy(p, x, y, batch=250):
+    n = x.shape[0]
+    correct = 0
+    fwd = jax.jit(cnn_fwd)
+    for i in range(0, n, batch):
+        logits = fwd(p, x[i:i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i:i + batch]))
+    return correct / n

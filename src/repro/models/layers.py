@@ -1,0 +1,160 @@
+"""Shared layers: norms, MLPs, embeddings — pure functional JAX.
+
+Parameter convention: nested dicts of jnp arrays. Every ``init_*`` returns a
+dict; the matching ``*_fwd`` applies it. TP sharding follows DESIGN.md §2.1:
+MLP up-projections are column-parallel (output dim sharded), down-projections
+row-parallel (input dim sharded, psum / psum_scatter after).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.parallel import (
+    Parallel, all_gather_model, psum_model, psum_scatter_model, shard_slice,
+)
+
+
+def dense_init(key, d_in, d_out, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else d_in ** -0.5
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_fwd(p, x, kind="rmsnorm", eps=1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        y = y * p["scale"]
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU for act=silu, plain 2-layer for act=gelu)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, pal: Parallel, d_ff=None):
+    d, dff = cfg.d_model, (d_ff or cfg.d_ff)
+    dffl = shard_slice(dff, pal)                  # column-parallel shard
+    ks = jax.random.split(key, 3)
+    p = {"down": dense_init(ks[2], dffl, d)}
+    if cfg.act == "silu":
+        p["gate"] = dense_init(ks[0], d, dffl)
+        p["up"] = dense_init(ks[1], d, dffl)
+    else:
+        p["up"] = dense_init(ks[1], d, dffl)
+        p["up_b"] = jnp.zeros((dffl,), jnp.float32)
+        p["down_b"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def mlp_fwd(p, x, cfg, pal: Parallel):
+    """x: (..., S?, d). In seq-parallel mode x is seq-sharded; we all-gather
+    seq before the column-parallel matmul and psum_scatter after the
+    row-parallel one (Megatron-SP schedule)."""
+    seq_ax = x.ndim - 2
+    if pal.seq_parallel:
+        x = all_gather_model(x, pal, axis=seq_ax)
+    if cfg.act == "silu":
+        h = jax.nn.silu(x @ p["gate"].astype(x.dtype)) * (x @ p["up"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ p["up"].astype(x.dtype) + p["up_b"].astype(x.dtype))
+    y = h @ p["down"].astype(x.dtype)
+    if pal.seq_parallel:
+        y = psum_scatter_model(y, pal, axis=seq_ax)
+    else:
+        y = psum_model(y, pal)
+    if cfg.act != "silu":
+        y = y + p["down_b"].astype(y.dtype)  # added once, after the reduction
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head (vocab-sharded over model axis)
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg, pal: Parallel):
+    from repro.models.parallel import pad_to
+    v = pad_to(cfg.vocab_size, max(pal.tp, 1))
+    vl = shard_slice(v, pal)
+    ks = jax.random.split(key, 2)
+    p = {"tok": jax.random.normal(ks[0], (vl, cfg.d_model), jnp.float32) * 0.02}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[1], cfg.d_model, vl, scale=cfg.d_model ** -0.5)
+    return p
+
+
+def embed_fwd(p, tokens, cfg, pal: Parallel, reduce: str = "psum"):
+    """tokens (B, S) -> (B, S, d). Vocab-sharded: local one-hot matmul, then
+    reduce: "psum" (full output), "scatter" (psum_scatter on the seq dim —
+    fuses the vocab reduction with the seq-parallel slice AND makes the
+    embedding gradient exact under SP), or "none" (partial)."""
+    vl = p["tok"].shape[0]
+    if pal.tp_on:
+        from repro.models.parallel import axis_index
+        base = axis_index(pal) * vl
+        local = tokens - base
+        oh = jax.nn.one_hot(jnp.clip(local, 0, vl - 1), vl, dtype=p["tok"].dtype)
+        oh = oh * ((local >= 0) & (local < vl))[..., None]
+        x = oh @ p["tok"]
+        if reduce == "psum":
+            x = psum_model(x, pal)
+        elif reduce == "scatter":
+            x = psum_scatter_model(x, pal, axis=1)
+    else:
+        x = p["tok"][tokens]
+    return x.astype(jnp.dtype(cfg.dtype))
+
+
+def lm_head_fwd(p, x, cfg, pal: Parallel):
+    """x (B, S, d) -> logits (B, S, V_local) — vocab stays sharded; the loss
+    computes a sharded softmax (psum over model for the normalizer). Vocab
+    ids >= cfg.vocab_size (padding to a tp multiple) are masked to -inf."""
+    w = p["tok"] if cfg.tie_embeddings else p["head"]
+    logits = x @ (w.T if cfg.tie_embeddings else w).astype(x.dtype)
+    vl = logits.shape[-1]
+    if vl * max(pal.tp, 1) > cfg.vocab_size:
+        from repro.models.parallel import axis_index
+        gids = axis_index(pal) * vl + jnp.arange(vl)
+        logits = jnp.where(gids < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def sharded_xent(logits, targets, cfg, pal: Parallel, vocab_offset=None):
+    """Cross-entropy over vocab-sharded logits (B, S, V_local), fp32 math."""
+    lf = logits.astype(jnp.float32)
+    vl = lf.shape[-1]
+    m = jnp.max(lf, -1, keepdims=True)
+    if pal.tp_on:
+        m = jax.lax.pmax(jax.lax.stop_gradient(m), pal.model_axis)
+    else:
+        m = jax.lax.stop_gradient(m)
+    z = jnp.exp(lf - m)
+    denom = psum_model(jnp.sum(z, -1, keepdims=True), pal)
+    if pal.tp_on:
+        from repro.models.parallel import axis_index
+        base = axis_index(pal) * vl
+        local = targets - base
+        inb = (local >= 0) & (local < vl)
+        tgt_logit = jnp.take_along_axis(
+            lf, jnp.clip(local, 0, vl - 1)[..., None], axis=-1)[..., 0]
+        tgt_logit = psum_model(jnp.where(inb, tgt_logit, 0.0), pal)
+    else:
+        tgt_logit = jnp.take_along_axis(lf, targets[..., None], -1)[..., 0]
+    logp = tgt_logit - (m[..., 0] + jnp.log(denom[..., 0]))
+    return -logp

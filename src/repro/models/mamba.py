@@ -1,0 +1,174 @@
+"""Mamba-1 selective SSM block, channel-parallel over the model axis.
+
+TPU adaptation (DESIGN.md §2.2): SSM channels (d_inner) are independent, so
+TP shards channels — each rank scans the FULL sequence for its channel slice
+(no sequential cross-rank dependency). In sequence-parallel mode the block
+all-gathers the seq dim on entry and psum_scatters on exit, exactly like the
+attention block. The (B, C, dt) data-dependent projections need the full
+d_inner, so their input projection is row-parallel with one small psum.
+
+Prefill/train uses a chunked scan: sequential ``lax.scan`` over seq chunks,
+associative scan inside the chunk — bounds the (B, chunk, d_inner_l, d_state)
+working set. Decode carries (conv_buf, ssm_state) and is O(1) in context
+length (this is what makes long_500k native for mamba archs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.parallel import (
+    Parallel, all_gather_model, psum_model, psum_scatter_model, shard_slice,
+)
+
+SCAN_CHUNK = 512
+
+
+def _dims(cfg, pal: Parallel):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    dil = shard_slice(d_inner, pal)
+    dt_rank = cfg.ssm.dt_rank or max(1, -(-cfg.d_model // 16))
+    return d_inner, dil, dt_rank
+
+
+def init_mamba(key, cfg, pal: Parallel):
+    d = cfg.d_model
+    ds = cfg.ssm.d_state
+    dc = cfg.ssm.d_conv
+    d_inner, dil, dt_rank = _dims(cfg, pal)
+    ks = jax.random.split(key, 8)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (dil, 1))
+    return {
+        "in_x": dense_init(ks[0], d, dil),                   # col-parallel
+        "in_z": dense_init(ks[6], d, dil),
+        "conv_w": jax.random.normal(ks[1], (dc, dil), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((dil,), jnp.float32),
+        "x_proj": dense_init(ks[2], dil, dt_rank + 2 * ds),  # row-parallel -> psum
+        "dt_proj": dense_init(ks[3], dt_rank, dil, scale=dt_rank ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (dil,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((dil,), jnp.float32),
+        "out_proj": dense_init(ks[5], dil, d),               # row-parallel
+    }
+
+
+def _conv1d(x, w, b):
+    """Depthwise causal conv. x (B, S, C), w (K, C) -> (B, S, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b.astype(out.dtype)
+
+
+def _ssm_scan_chunked(u, dt, bmat, cmat, a, d_skip, h0):
+    """Selective scan. u,dt: (B,S,C); bmat,cmat: (B,S,N); a: (C,N).
+    Returns (y (B,S,C), h_final (B,C,N)). Chunked over S."""
+    bsz, s, c = u.shape
+    n = bmat.shape[-1]
+    chunk = min(SCAN_CHUNK, s)
+    if s % chunk:
+        chunk = s
+    ns = s // chunk
+
+    da = jnp.exp(dt[..., None] * (-a))                       # (B,S,C,N) decay
+    dbu = (dt * u)[..., None] * bmat[:, :, None, :]          # (B,S,C,N) input
+
+    def chunk_body(h, inp):
+        da_c, dbu_c, c_c = inp                               # (B,chunk,C,N)...
+
+        def assoc(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b2 + a2 * b1
+
+        aa, bb = jax.lax.associative_scan(assoc, (da_c, dbu_c), axis=1)
+        h_all = aa * h[:, None] + bb                          # (B,chunk,C,N)
+        y_c = jnp.einsum("bscn,bsn->bsc", h_all, c_c)
+        return h_all[:, -1], y_c
+
+    da_s = da.reshape(bsz, ns, chunk, c, n).transpose(1, 0, 2, 3, 4)
+    dbu_s = dbu.reshape(bsz, ns, chunk, c, n).transpose(1, 0, 2, 3, 4)
+    c_s = cmat.reshape(bsz, ns, chunk, n).transpose(1, 0, 2, 3)
+    h_fin, ys = jax.lax.scan(chunk_body, h0, (da_s, dbu_s, c_s))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, s, c)
+    return y + u * d_skip, h_fin
+
+
+def mamba_fwd(p, x, cfg, pal: Parallel, h0=None, return_state=False):
+    """Full-seq forward. x (B, S/tp, d) if seq-parallel else (B, S, d).
+    With return_state=True also returns the decode cache {conv, h}."""
+    seq_ax = 1
+    if pal.seq_parallel:
+        x = all_gather_model(x, pal, axis=seq_ax)
+    bsz, s, _ = x.shape
+    _, dil, dt_rank = _dims(cfg, pal)
+    ds = cfg.ssm.d_state
+    dc = cfg.ssm.d_conv
+
+    u_pre = x @ p["in_x"].astype(x.dtype)
+    z = x @ p["in_z"].astype(x.dtype)
+    u = jax.nn.silu(_conv1d(u_pre, p["conv_w"].astype(u_pre.dtype), p["conv_b"]))
+
+    dbc = psum_model((u @ p["x_proj"].astype(u.dtype)).astype(jnp.float32), pal)
+    dt_low, bmat, cmat = (dbc[..., :dt_rank], dbc[..., dt_rank:dt_rank + ds],
+                          dbc[..., dt_rank + ds:])
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] + p["dt_bias"])  # (B,S,dil) fp32
+
+    a = jnp.exp(p["A_log"])
+    h0 = h0 if h0 is not None else jnp.zeros((bsz, dil, ds), jnp.float32)
+    y, h_fin = _ssm_scan_chunked(u.astype(jnp.float32), dt, bmat, cmat, a,
+                                 p["D"], h0)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(y.dtype)
+    if pal.seq_parallel:
+        out = psum_scatter_model(out, pal, axis=seq_ax)
+    else:
+        out = psum_model(out, pal)
+    if return_state:
+        conv_buf = jnp.zeros((bsz, dc - 1, dil), x.dtype)
+        take = min(dc - 1, s)
+        conv_buf = conv_buf.at[:, dc - 1 - take:].set(
+            u_pre[:, s - take:].astype(conv_buf.dtype))
+        return out, {"conv": conv_buf, "h": h_fin}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(cfg, pal: Parallel, batch: int, dtype):
+    _, dil, _ = _dims(cfg, pal)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, dil), dtype),
+        "h": jnp.zeros((batch, dil, cfg.ssm.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p, x, cache, cfg, pal: Parallel):
+    """x (B, 1, d) -> (y (B, 1, d), cache). O(1) per token."""
+    bsz = x.shape[0]
+    _, dil, dt_rank = _dims(cfg, pal)
+    ds = cfg.ssm.d_state
+    u = x[:, 0] @ p["in_x"].astype(x.dtype)
+    z = x[:, 0] @ p["in_z"].astype(x.dtype)
+    win = jnp.concatenate([cache["conv"], u[:, None]], 1)    # (B, dc, dil)
+    conv = jnp.sum(win * p["conv_w"].astype(win.dtype), 1) + p["conv_b"].astype(win.dtype)
+    u = jax.nn.silu(conv)
+    dbc = psum_model((u @ p["x_proj"].astype(u.dtype)).astype(jnp.float32), pal)
+    dt_low, bmat, cmat = (dbc[..., :dt_rank], dbc[..., dt_rank:dt_rank + ds],
+                          dbc[..., dt_rank + ds:])
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] + p["dt_bias"])
+    a = jnp.exp(p["A_log"])
+    da = jnp.exp(dt[..., None] * (-a))                       # (B, dil, ds)
+    h = da * cache["h"] + (dt * u.astype(jnp.float32))[..., None] * bmat[:, None, :]
+    y = jnp.einsum("bcn,bn->bc", h, cmat) + u.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"].astype(y.dtype))[:, None]
+    out = psum_model(out, pal)
+    new_cache = {"conv": win[:, 1:], "h": h}
+    return out, new_cache

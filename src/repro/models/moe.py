@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN with expert parallelism over the model axis.
+
+Fixed-capacity top-k routing (GShard/Switch style), TPU-friendly: static
+shapes, scatter/gather dispatch, ``all_to_all`` expert exchange. Expert count
+is padded to a multiple of the model-axis size (granite-moe: 40 -> 48 at
+tp=16; padded experts are masked to -inf in the router and carry zero-init
+weights). Shared experts (DeepSeek-V2) run as a dense column/row-parallel
+MLP alongside the routed path.
+
+Aux losses: Switch load-balance loss and router z-loss, returned per call
+and averaged over layers by the caller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.parallel import (
+    Parallel, pad_to, psum_model, shard_slice,
+)
+
+
+def _padded_experts(cfg, pal: Parallel) -> int:
+    return pad_to(cfg.moe.n_experts, max(pal.tp, 1))
+
+
+def init_moe(key, cfg, pal: Parallel):
+    m = cfg.moe
+    d = cfg.d_model
+    e_pad = _padded_experts(cfg, pal)
+    el = shard_slice(e_pad, pal)
+    ks = jax.random.split(key, 5)
+
+    def expert_stack(k, d_in, d_out):
+        return jax.random.normal(k, (el, d_in, d_out), jnp.float32) * d_in ** -0.5
+
+    p = {
+        "router": dense_init(ks[0], d, e_pad, scale=0.02),
+        "gate": expert_stack(ks[1], d, m.d_expert),
+        "up": expert_stack(ks[2], d, m.d_expert),
+        "down": expert_stack(ks[3], m.d_expert, d),
+    }
+    if m.n_shared_experts:
+        from repro.models.layers import init_mlp
+        p["shared"] = init_mlp(ks[4], cfg, pal,
+                               d_ff=m.d_expert * m.n_shared_experts)
+    return p
+
+
+def capacity(n_tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(n_tokens * top_k / n_experts * factor)
+    return max(8, pad_to(c, 8))
+
+
+def moe_fwd(p, x, cfg, pal: Parallel):
+    """x: (B, T, d) local tokens (seq-sharded over model in SP mode).
+    Returns (y, aux) with aux = {lb_loss, z_loss, drop_frac}."""
+    m = cfg.moe
+    b, t, d = x.shape
+    xt = x.reshape(b * t, d)
+    n_tok = b * t
+    e_pad = _padded_experts(cfg, pal)
+    el = p["gate"].shape[0]
+    tp = max(pal.tp, 1)
+
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
+    if e_pad > m.n_experts:
+        pad_mask = jnp.arange(e_pad) >= m.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, -1)                       # (T, E)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)             # (T, K)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # aux losses (computed on the real experts only)
+    me = jnp.mean(probs[:, :m.n_experts], 0)
+    sel = jax.nn.one_hot(top_e, e_pad, dtype=jnp.float32)    # (T, K, E)
+    fe = jnp.mean(jnp.sum(sel, 1), 0)[:m.n_experts]
+    lb_loss = m.n_experts * jnp.sum(me * fe)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)
+
+    # capacity + slot assignment: position of each (token, choice) within its
+    # expert's queue, in token order, choices flattened K-major.
+    cap = capacity(n_tok, e_pad, m.top_k, m.capacity_factor)
+    sel_flat = sel.reshape(n_tok * m.top_k, e_pad)
+    pos_in_e = (jnp.cumsum(sel_flat, 0) - sel_flat)          # (T*K, E)
+    slot = jnp.sum(pos_in_e * sel_flat, -1).astype(jnp.int32)  # (T*K,)
+    expert = top_e.reshape(-1).astype(jnp.int32)
+    keep = slot < cap
+    drop_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    # dispatch: scatter tokens into (E, cap, d)
+    flat_idx = jnp.where(keep, expert * cap + slot, e_pad * cap)  # OOB -> drop row
+    buf = jnp.zeros((e_pad * cap + 1, d), xt.dtype)
+    tok_rep = jnp.repeat(xt, m.top_k, axis=0)                # (T*K, d)
+    buf = buf.at[flat_idx].add(tok_rep)
+    buf = buf[:-1].reshape(e_pad, cap, d)
+
+    if pal.tp_on:
+        # EP: every rank holds (e_pad, cap, d) contributions for all experts;
+        # all_to_all splits the expert dim across ranks and concatenates the
+        # tp source shards along the capacity dim -> (el, tp*cap, d).
+        buf = jax.lax.all_to_all(buf, pal.model_axis, split_axis=0,
+                                 concat_axis=1, tiled=True)
+
+    # expert FFN (local experts, batched einsum)
+    if cfg.act == "silu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["gate"].astype(buf.dtype)))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, p["up"].astype(buf.dtype))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["up"].astype(buf.dtype)))
+    out = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(buf.dtype))
+
+    if pal.tp_on:
+        out = jax.lax.all_to_all(out, pal.model_axis, split_axis=1,
+                                 concat_axis=0, tiled=True)
+
+    # combine: gather each kept (token, choice) slot, weight by router prob
+    out_flat = jnp.concatenate([out.reshape(e_pad * cap, d),
+                                jnp.zeros((1, d), out.dtype)], 0)
+    per_choice = out_flat[flat_idx]                          # (T*K, d)
+    w = (top_p.reshape(-1) * keep).astype(per_choice.dtype)
+    y = jnp.sum((per_choice * w[:, None]).reshape(n_tok, m.top_k, d), 1)
+    y = y.reshape(b, t, d)
+
+    if m.n_shared_experts:
+        from repro.models.layers import mlp_fwd
+        y = y + mlp_fwd(p["shared"], x, cfg, pal)
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "drop_frac": drop_frac}
+    return y, aux

@@ -1,0 +1,82 @@
+"""Parallelism context threaded through model code.
+
+All model code takes a :class:`Parallel` describing the mesh axes it runs
+under (inside ``shard_map``). With ``model_axis=None`` the collectives are
+no-ops and the code is single-device — tests and the paper-experiment
+drivers use that path; the dry-run and launcher use named axes.
+
+TP conventions (DESIGN.md §2.1):
+- MLP/MoE: column-parallel up, row-parallel down (+psum or psum_scatter).
+- Attention: head sharding with PADDING to the model-axis size (assigned
+  archs have head counts not divisible by 16 — padded q/kv heads have
+  zero-init projections, so semantics are unchanged; the waste shows up in
+  the roofline MODEL_FLOPS ratio and is attacked in §Perf).
+- SSM (mamba/xlstm): channel-parallel over d_inner / head_dim rows.
+- Sequence parallel: residual stream sharded (batch/data, seq/model, d).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Parallel:
+    model_axis: Optional[str] = None   # TP axis name (None = single device)
+    data_axes: tuple = ()              # DP axis name(s), e.g. ("pod", "data")
+    tp: int = 1                        # static size of model axis
+    seq_parallel: bool = False         # residual stream seq-sharded over model
+    cache_seq_axis: Optional[object] = None  # decode cache seq-shard axis (str|tuple)
+    attn_dist: str = "sp"              # "sp" (Megatron-SP) | "ring" (context parallel)
+    remat: bool = True
+
+    @property
+    def tp_on(self) -> bool:
+        return self.model_axis is not None and self.tp > 1
+
+
+def pad_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def heads_padded(n_heads: int, pal: Parallel) -> int:
+    return pad_to(n_heads, pal.tp) if pal.tp_on else n_heads
+
+
+def psum_model(x, pal: Parallel):
+    return jax.lax.psum(x, pal.model_axis) if pal.tp_on else x
+
+
+def psum_scatter_model(x, pal: Parallel, axis: int):
+    """Row-parallel output reduction in sequence-parallel mode."""
+    if not pal.tp_on:
+        return x
+    return jax.lax.psum_scatter(x, pal.model_axis, scatter_dimension=axis,
+                                tiled=True)
+
+
+def all_gather_model(x, pal: Parallel, axis: int):
+    if not pal.tp_on:
+        return x
+    return jax.lax.all_gather(x, pal.model_axis, axis=axis, tiled=True)
+
+
+def axis_index(pal: Parallel):
+    return jax.lax.axis_index(pal.model_axis) if pal.tp_on else jnp.zeros((), jnp.int32)
+
+
+def ppermute_model(x, pal: Parallel, shift: int = 1):
+    n = pal.tp
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return jax.lax.ppermute(x, pal.model_axis, perm)
+
+
+def shard_slice(n: int, pal: Parallel) -> int:
+    """Static per-rank length of a dimension of size n sharded over model."""
+    if not pal.tp_on:
+        return n
+    assert n % pal.tp == 0, f"{n} not divisible by tp={pal.tp}"
+    return n // pal.tp

@@ -1,0 +1,129 @@
+"""Analytic parameter counts (tp=1, unpadded) — used for MODEL_FLOPS in the
+roofline analysis. Mirrors the init shapes in this package exactly.
+"""
+from __future__ import annotations
+
+
+def _attn_params(cfg) -> int:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    if cfg.attn_kind == "mla":
+        vhd = cfg.v_head_dim or hd
+        n = d * (cfg.kv_lora_rank + cfg.rope_head_dim)       # dkv
+        n += cfg.kv_lora_rank                                 # kv_norm
+        n += cfg.kv_lora_rank * cfg.n_heads * hd              # uk
+        n += cfg.kv_lora_rank * cfg.n_heads * vhd             # uv
+        n += d * cfg.n_heads * (hd + cfg.rope_head_dim)       # wq
+        n += cfg.n_heads * vhd * d                            # wo
+        return n
+    n = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+    if cfg.qkv_bias:
+        n += cfg.n_heads * hd + 2 * cfg.n_kv_heads * hd
+    return n
+
+
+def _mlp_params(cfg, d_ff) -> int:
+    d = cfg.d_model
+    if cfg.act == "silu":
+        return 3 * d * d_ff
+    return 2 * d * d_ff + d_ff + d
+
+
+def _moe_params(cfg) -> tuple[int, int]:
+    """(total, active) MoE FFN params per MoE layer."""
+    m = cfg.moe
+    d = cfg.d_model
+    per_expert = 3 * d * m.d_expert if cfg.act == "silu" else 2 * d * m.d_expert
+    total = d * m.n_experts + m.n_experts * per_expert
+    active = d * m.n_experts + m.top_k * per_expert
+    if m.n_shared_experts:
+        sh = _mlp_params(cfg, m.d_expert * m.n_shared_experts)
+        total += sh
+        active += sh
+    return total, active
+
+
+def _mamba_params(cfg) -> int:
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    ds = cfg.ssm.d_state
+    dc = cfg.ssm.d_conv
+    dtr = cfg.ssm.dt_rank or max(1, -(-d // 16))
+    n = d * 2 * di                       # in_proj
+    n += dc * di + di                    # conv
+    n += di * (dtr + 2 * ds)             # x_proj
+    n += dtr * di + di                   # dt_proj + bias
+    n += di * ds + di                    # A_log, D
+    n += di * d                          # out_proj
+    return n
+
+
+def _mlstm_params(cfg) -> int:
+    d = cfg.d_model
+    di = int(cfg.ssm.mlstm_proj_factor * d)
+    h = cfg.n_heads
+    n = d + d                            # norm
+    n += d * di + d * di                 # up, up_gate
+    n += 3 * di * di                     # wq wk wv (v dim = di)
+    n += di * 2 * h                      # gates
+    n += di                              # ln_h
+    n += di * d                          # down
+    return n
+
+
+def _slstm_params(cfg) -> int:
+    d = cfg.d_model
+    di = -(-int(cfg.ssm.slstm_proj_factor * d) // 16) * 16
+    return 2 * d + d * 4 * di + di + di * d
+
+
+def _norm_params(cfg) -> int:
+    return cfg.d_model * (2 if cfg.norm == "layernorm" else 1)
+
+
+def count_params_analytic(cfg) -> int:
+    from repro.models.transformer import layer_pattern, n_superblocks
+    pattern = layer_pattern(cfg)
+    nsb = n_superblocks(cfg)
+    n = cfg.vocab_size * cfg.d_model
+    if not cfg.tie_embeddings:
+        n += cfg.d_model * cfg.vocab_size
+    n += _norm_params(cfg)
+
+    def layer_n(mixer, ffn):
+        ln = 0
+        if mixer == "attn":
+            ln += _norm_params(cfg) + _attn_params(cfg)
+        elif mixer == "mamba":
+            ln += _norm_params(cfg) + _mamba_params(cfg)
+        elif mixer == "mlstm":
+            ln += _mlstm_params(cfg)
+        elif mixer == "slstm":
+            ln += _slstm_params(cfg)
+        if cfg.is_encoder_decoder:
+            ln += _norm_params(cfg) + _attn_params(cfg)      # cross
+        if ffn == "dense":
+            ln += _norm_params(cfg) + _mlp_params(cfg, cfg.d_ff)
+        elif ffn == "moe":
+            ln += _norm_params(cfg) + _moe_params(cfg)[0]
+        return ln
+
+    n += nsb * sum(layer_n(m, f) for m, f in pattern)
+    n += cfg.n_dense_prefix * layer_n(pattern[0][0], "dense")
+    if cfg.is_encoder_decoder:
+        enc_layer = (_norm_params(cfg) + _attn_params(cfg) +
+                     _norm_params(cfg) + _mlp_params(cfg, cfg.d_ff))
+        n += cfg.n_enc_layers * enc_layer + _norm_params(cfg)
+    return n
+
+
+def count_active_params(cfg) -> int:
+    """Active (per-token) params — MoE counts only routed top-k experts."""
+    if cfg.moe is None:
+        return count_params_analytic(cfg)
+    from repro.models.transformer import layer_pattern, n_superblocks
+    total = count_params_analytic(cfg)
+    pattern = layer_pattern(cfg)
+    nsb = n_superblocks(cfg)
+    n_moe_layers = nsb * sum(1 for _, f in pattern if f == "moe")
+    tot_moe, act_moe = _moe_params(cfg)
+    return total - n_moe_layers * (tot_moe - act_moe)

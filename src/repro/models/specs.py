@@ -1,0 +1,102 @@
+"""PartitionSpec trees for the parameter pytree.
+
+Specs are derived from the params structure by (parent-module, leaf-name)
+rules that mirror the sharding conventions in each module's init. Used for:
+
+- shard_map in_specs/out_specs of params in train/serve steps,
+- identifying REPLICATED leaves whose gradients need a psum over the model
+  axis (Megatron-SP layernorm-grad rule, DESIGN.md §2.1),
+- dry-run in_shardings.
+
+Scanned super-block stacks have a leading (n_superblocks,) dim -> specs get
+a leading None.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# (parent module key, leaf key) -> dim index sharded over the model axis,
+# or None for replicated. "*" matches any parent.
+_COL = 1          # output-dim sharded (column parallel)
+_ROW = 0          # input-dim sharded (row parallel)
+_VEC = 0          # 1-D sharded vector
+_REP = None
+
+_RULES = {
+    # attention (GQA + MLA)
+    ("attn", "wq"): _COL, ("attn", "wk"): _COL, ("attn", "wv"): _COL,
+    ("attn", "wo"): _ROW,
+    ("attn", "bq"): _VEC, ("attn", "bk"): _VEC, ("attn", "bv"): _VEC,
+    ("attn", "dkv"): _REP, ("attn", "kv_norm"): _REP,
+    ("attn", "uk"): _COL, ("attn", "uv"): _COL,
+    ("cross", "wq"): _COL, ("cross", "wk"): _COL, ("cross", "wv"): _COL,
+    ("cross", "wo"): _ROW,
+    ("cross", "bq"): _VEC, ("cross", "bk"): _VEC, ("cross", "bv"): _VEC,
+    # dense MLP
+    ("mlp", "gate"): _COL, ("mlp", "up"): _COL, ("mlp", "down"): _ROW,
+    ("mlp", "up_b"): _VEC, ("mlp", "down_b"): _REP,
+    ("shared", "gate"): _COL, ("shared", "up"): _COL, ("shared", "down"): _ROW,
+    ("shared", "up_b"): _VEC, ("shared", "down_b"): _REP,
+    # MoE (expert dim sharded)
+    ("moe", "router"): _REP,
+    ("moe", "gate"): 0, ("moe", "up"): 0, ("moe", "down"): 0,
+    # mamba (channel parallel)
+    ("mamba", "conv_w"): 1, ("mamba", "conv_b"): _VEC,
+    ("mamba", "x_proj"): _ROW, ("mamba", "dt_proj"): _COL,
+    ("mamba", "dt_bias"): _VEC, ("mamba", "A_log"): 0, ("mamba", "D"): _VEC,
+    ("mamba", "out_proj"): _ROW,
+    # mLSTM (value-dim sharded on its own axis; q/k/up replicated)
+    ("mlstm", "up"): _REP, ("mlstm", "up_gate"): 2,
+    ("mlstm", "wq"): _REP, ("mlstm", "wk"): _REP, ("mlstm", "wv"): 2,
+    ("mlstm", "wif"): _REP, ("mlstm", "ln_h"): 1, ("mlstm", "down"): 1,
+    # sLSTM (split gate projections, col-parallel)
+    ("slstm", "wi"): _COL, ("slstm", "wf"): _COL, ("slstm", "wz"): _COL,
+    ("slstm", "wo"): _COL,
+    ("slstm", "ln_h"): _VEC, ("slstm", "down"): _ROW,
+    ("mamba", "in_x"): _COL, ("mamba", "in_z"): _COL,
+    # embedding / head (vocab sharded)
+    ("embed", "tok"): 0, ("embed", "head"): _COL,
+}
+
+_NORM_KEYS = {"scale", "bias"}  # all norms replicated
+_NORM_PARENTS = {"norm", "norm1", "norm2", "norm_x", "final_norm", "kv_norm"}
+
+
+def _leaf_spec(path, leaf, model_axis: str):
+    keys = [k.key for k in path if hasattr(k, "key")]
+    name = keys[-1]
+    parent = keys[-2] if len(keys) >= 2 else ""
+    # norms anywhere -> replicated
+    if parent in _NORM_PARENTS or (name in _NORM_KEYS):
+        dim = _REP
+    elif (parent, name) in _RULES:
+        dim = _RULES[(parent, name)]
+    elif name == "kv_norm":
+        dim = _REP
+    else:
+        raise KeyError(f"no sharding rule for param {'/'.join(keys)}")
+    ndim = leaf.ndim
+    # scanned stacks ('blocks' in path) have a leading stack dim
+    stacked = "blocks" in keys
+    if dim is None:
+        return P()
+    d = dim + (1 if stacked else 0)
+    if d >= ndim:  # 1-D vec under stack
+        d = ndim - 1
+    spec = [None] * ndim
+    spec[d] = model_axis
+    return P(*spec)
+
+
+def param_specs(params, model_axis: str = "model"):
+    """PartitionSpec tree matching the params pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _leaf_spec(p, l, model_axis), params)
+
+
+def replicated_mask(params):
+    """Boolean tree: True for leaves replicated over the model axis (their
+    grads need a psum over model)."""
+    specs = param_specs(params)
+    return jax.tree_util.tree_map(lambda s: all(a is None for a in s), specs)

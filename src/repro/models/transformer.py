@@ -1,0 +1,577 @@
+"""Composable decoder (and encoder-decoder) transformer over heterogeneous
+layer stacks: attention / Mamba / xLSTM mixers, dense / MoE FFNs.
+
+Layers are grouped into SUPER-BLOCKS of period P (jamba: 8, xlstm: 2, else
+1); the stack is a ``jax.lax.scan`` over stacked super-block params — one
+trace per distinct layer body regardless of depth (compile-time control for
+the 27..64-layer assigned configs). Each super-block is rematerialized
+(jax.checkpoint) in training when cfg.remat.
+
+Residual stream in training is sequence-sharded over the model axis when
+pal.seq_parallel (Megatron-SP); every mixer gathers/scatters internally.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xl
+from repro.models.layers import (
+    embed_fwd, init_embed, init_mlp, init_norm, lm_head_fwd, mlp_fwd,
+    norm_fwd, sharded_xent,
+)
+from repro.models.parallel import (
+    Parallel, all_gather_model, axis_index, psum_model, shard_slice,
+)
+
+LOSS_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# Layer pattern
+# ---------------------------------------------------------------------------
+
+def superblock_period(cfg) -> int:
+    p = 1
+    if cfg.ssm is not None and cfg.ssm.kind == "xlstm":
+        p = 2
+    if cfg.attn_every > 1:
+        p = max(p, cfg.attn_every)
+    if cfg.moe is not None:
+        p = max(p, cfg.moe.moe_every)
+    return p
+
+
+def layer_pattern(cfg):
+    """[(mixer, ffn_kind)] for one super-block period. mixer: attn|mamba|
+    mlstm|slstm; ffn: dense|moe|none."""
+    p = superblock_period(cfg)
+    out = []
+    for j in range(p):
+        if cfg.attn_every == 0:
+            mixer = "mlstm" if (cfg.ssm.kind == "xlstm" and j % 2 == 0) else (
+                "slstm" if cfg.ssm.kind == "xlstm" else "mamba")
+        elif cfg.attn_every == 1 or j % cfg.attn_every == cfg.attn_offset:
+            mixer = "attn"
+        else:
+            mixer = cfg.ssm.kind if cfg.ssm.kind != "xlstm" else "mlstm"
+        if cfg.moe is not None and j % cfg.moe.moe_every == cfg.moe.moe_offset:
+            ffn = "moe"
+        elif cfg.d_ff > 0:
+            ffn = "dense"
+        else:
+            ffn = "none"
+        out.append((mixer, ffn))
+    return out
+
+
+def n_superblocks(cfg) -> int:
+    p = superblock_period(cfg)
+    body = cfg.n_layers - cfg.n_dense_prefix
+    assert body % p == 0, (cfg.name, body, p)
+    return body // p
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg, pal: Parallel, mixer: str, ffn: str,
+                cross: bool = False, causal: bool = True):
+    ks = jax.random.split(key, 6)
+    p = {}
+    if mixer == "attn":
+        p["norm1"] = init_norm(cfg)
+        p["attn"] = attn.init_attention(ks[0], cfg, pal)
+    elif mixer == "mamba":
+        p["norm1"] = init_norm(cfg)
+        p["mamba"] = mam.init_mamba(ks[0], cfg, pal)
+    elif mixer == "mlstm":
+        p["mlstm"] = xl.init_mlstm(ks[0], cfg, pal)
+    elif mixer == "slstm":
+        p["slstm"] = xl.init_slstm(ks[0], cfg, pal)
+    if cross:
+        p["norm_x"] = init_norm(cfg)
+        p["cross"] = attn.init_attention(ks[1], cfg, pal, cross=True)
+    if ffn == "dense":
+        p["norm2"] = init_norm(cfg)
+        p["mlp"] = init_mlp(ks[2], cfg, pal)
+    elif ffn == "moe":
+        p["norm2"] = init_norm(cfg)
+        p["moe"] = moe_mod.init_moe(ks[2], cfg, pal)
+    return p
+
+
+def init_params(cfg, pal: Parallel, key):
+    ks = jax.random.split(key, 8)
+    pattern = layer_pattern(cfg)
+    nsb = n_superblocks(cfg)
+
+    def init_sb(k):
+        kk = jax.random.split(k, len(pattern))
+        return {f"l{j}": _init_layer(kk[j], cfg, pal, m, f,
+                                     cross=cfg.is_encoder_decoder)
+                for j, (m, f) in enumerate(pattern)}
+
+    params = {
+        "embed": init_embed(ks[0], cfg, pal),
+        "blocks": jax.vmap(init_sb)(jax.random.split(ks[1], nsb)),
+        "final_norm": init_norm(cfg),
+    }
+    if cfg.n_dense_prefix:
+        kk = jax.random.split(ks[2], cfg.n_dense_prefix)
+        params["prefix"] = [
+            _init_layer(kk[i], cfg, pal, pattern[0][0], "dense",
+                        cross=cfg.is_encoder_decoder)
+            for i in range(cfg.n_dense_prefix)]
+    if cfg.is_encoder_decoder:
+        def init_enc_layer(k):
+            return _init_layer(k, cfg, pal, "attn", "dense", causal=False)
+        params["encoder"] = {
+            "blocks": jax.vmap(init_enc_layer)(
+                jax.random.split(ks[3], cfg.n_enc_layers)),
+            "final_norm": init_norm(cfg),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer forward (training / full-seq)
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(p, x, cfg, pal: Parallel, mixer: str, ffn: str, aux,
+               causal=True, cross_kv=None, window=0):
+    if mixer == "attn":
+        h = norm_fwd(p["norm1"], x, cfg.norm)
+        x = x + attn.attn_fwd_full(p["attn"], h, cfg, pal, causal=causal,
+                                   window=window)
+    elif mixer == "mamba":
+        h = norm_fwd(p["norm1"], x, cfg.norm)
+        x = x + mam.mamba_fwd(p["mamba"], h, cfg, pal)
+    elif mixer == "mlstm":
+        x = x + xl.mlstm_fwd(p["mlstm"], x, cfg, pal)
+    elif mixer == "slstm":
+        x = x + xl.slstm_fwd(p["slstm"], x, cfg, pal)
+    if "cross" in p and cross_kv is not None and bool(cross_kv):
+        h = norm_fwd(p["norm_x"], x, cfg.norm)
+        kv = attn.init_cross_kv(p["cross"], cross_kv.enc_out, cfg, pal)
+        x = x + attn.attn_fwd_full(p["cross"], h, cfg, pal, causal=False,
+                                   cross_kv=kv)
+    if ffn == "dense":
+        h = norm_fwd(p["norm2"], x, cfg.norm)
+        x = x + mlp_fwd(p["mlp"], h, cfg, pal)
+    elif ffn == "moe":
+        h = norm_fwd(p["norm2"], x, cfg.norm)
+        y, a = moe_mod.moe_fwd(p["moe"], h, cfg, pal)
+        x = x + y
+        aux = {k: aux[k] + a[k] for k in a}
+    return x, aux
+
+
+def _zero_aux():
+    return {"lb_loss": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32),
+            "drop_frac": jnp.zeros((), jnp.float32)}
+
+
+def forward_hidden(params, x, cfg, pal: Parallel, cross_kv=None, window=0):
+    """Run the full layer stack on embedded input x. Returns (x, aux)."""
+    pattern = layer_pattern(cfg)
+    aux = _zero_aux()
+    for p in params.get("prefix", []):
+        x, aux = _layer_fwd(p, x, cfg, pal, pattern[0][0], "dense", aux,
+                            cross_kv=cross_kv, window=window)
+
+    def sb_fwd(carry, sbp):
+        x, aux = carry
+        for j, (m, f) in enumerate(pattern):
+            x, aux = _layer_fwd(sbp[f"l{j}"], x, cfg, pal, m, f, aux,
+                                cross_kv=cross_kv, window=window)
+        return (x, aux), None
+
+    body = jax.checkpoint(sb_fwd) if cfg.remat else sb_fwd
+    (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+    x = norm_fwd(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+def encode(params, frames, cfg, pal: Parallel):
+    """Whisper encoder over stub frame embeddings (B, S_enc, d)."""
+    s = frames.shape[1]
+    pos = _sinusoidal(s, cfg.d_model, frames.dtype)
+    x = frames + pos
+
+    def enc_fwd(x, lp):
+        x, _ = _layer_fwd(lp, x, cfg, pal, "attn", "dense", _zero_aux(),
+                          causal=False)
+        return x, None
+
+    body = jax.checkpoint(enc_fwd) if cfg.remat else enc_fwd
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return norm_fwd(params["encoder"]["final_norm"], x, cfg.norm)
+
+
+def _sinusoidal(s, d, dtype):
+    pos = jnp.arange(s)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((s, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return pe[None].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding of a (possibly multimodal) batch
+# ---------------------------------------------------------------------------
+
+def embed_batch(params, batch, cfg, pal: Parallel, seq_shard: bool):
+    """tokens (B, S) [+ patches (B, P, d)] -> x, possibly seq-sharded.
+
+    NB: the vocab-sharded embedding psum requires every model rank to query
+    the SAME token ids (each contributes its vocab shard) — so we embed the
+    full sequence first and slice the rank's seq shard afterwards.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    shard = seq_shard and pal.tp_on
+    x = embed_fwd(params["embed"], tokens, cfg, pal,
+                  reduce="scatter" if shard else "psum")
+    if shard:
+        sl = shard_slice(s, pal)
+        pos0 = axis_index(pal) * sl
+    else:
+        sl, pos0 = s, 0
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        patches = batch["patches"].astype(x.dtype)      # (B, P, d)
+        npat = patches.shape[1]
+        gpos = pos0 + jnp.arange(sl)
+        idx = jnp.clip(gpos, 0, npat - 1)
+        over = jnp.take(patches, idx, axis=1)
+        x = jnp.where((gpos < npat)[None, :, None], over, x)
+    if not cfg.rope and cfg.ssm is None:
+        # absolute sinusoidal positions (whisper decoder, non-rope dense)
+        pe = _sinusoidal(s, cfg.d_model, x.dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(pe, pos0, sl, 1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Loss (training)
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, batch, cfg, pal: Parallel, window=0):
+    """Next-token xent (mean over non-masked targets) + MoE aux losses.
+
+    batch: tokens (B, S) int32; targets (B, S) int32 with -1 = masked;
+    vlm: patches (B, P, d); audio: frames (B, S_enc, d).
+    """
+    cross_kv = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, batch["frames"].astype(jnp.dtype(cfg.dtype)),
+                         cfg, pal)
+        # per-layer cross K/V computed lazily inside layers would recompute
+        # the projection each scan step; instead pass enc_out and project
+        # inside each layer (params differ per layer).
+        cross_kv = enc_out
+    x = embed_batch(params, batch, cfg, pal, seq_shard=pal.seq_parallel)
+    x, aux = forward_hidden(params, x, cfg, pal,
+                            cross_kv=_CrossFromEnc(cross_kv), window=window)
+    if pal.seq_parallel:
+        x = all_gather_model(x, pal, axis=1)
+    targets = batch["targets"]
+    loss = _chunked_xent(params, x, targets, cfg, pal)
+    if cfg.moe is not None:
+        m = cfg.moe
+        nl = sum(1 for _, f in layer_pattern(cfg) if f == "moe") * n_superblocks(cfg)
+        aux_term = (m.load_balance_loss * aux["lb_loss"] +
+                    m.router_z_loss * aux["z_loss"]) / max(nl, 1)
+        if pal.tp_on:
+            # local loss is a per-rank DISJOINT contribution (see
+            # _chunked_xent); each rank's aux covers its seq shard, and the
+            # global aux average is sum_r aux_r / tp -> add aux_r / tp here.
+            aux_term = aux_term / pal.tp
+            aux = {k: jax.lax.pmean(jax.lax.stop_gradient(v),
+                                    pal.model_axis) for k, v in aux.items()}
+        loss = loss + aux_term
+    return loss, aux
+
+
+def global_loss(loss_local, pal: Parallel):
+    """Combine per-rank disjoint loss contributions into the global loss
+    value (metrics only — never differentiate through this)."""
+    if pal.tp_on:
+        return jax.lax.psum(loss_local, pal.model_axis)
+    return loss_local
+
+
+class _CrossFromEnc:
+    """Sentinel wrapper: layers project enc_out with their own cross wk/wv."""
+    def __init__(self, enc_out):
+        self.enc_out = enc_out
+
+    def __bool__(self):
+        return self.enc_out is not None
+
+
+def _chunked_xent(params, x, targets, cfg, pal: Parallel):
+    """Cross-entropy over vocab-sharded logits, chunked over seq.
+
+    SPMD-correct loss composition: every model rank computes the nll for all
+    positions (x is seq-gathered, logits vocab-sharded with psums inside),
+    but each rank SUMS ONLY ITS OWN seq-slice — contributions are disjoint,
+    and one final psum yields the global loss. Summing redundant copies
+    instead would inflate gradients by tp through the psum transposes.
+    """
+    b, s, _ = x.shape
+    chunk = min(LOSS_CHUNK, s)
+    if s % chunk:
+        chunk = s
+    n = s // chunk
+    xs = x.reshape(b, n, chunk, -1).transpose(1, 0, 2, 3)
+    ts = targets.reshape(b, n, chunk).transpose(1, 0, 2)
+    if pal.tp_on:
+        sl = s // pal.tp
+        r = axis_index(pal)
+        own_lo, own_hi = r * sl, (r + 1) * sl
+    offs = jnp.arange(n) * chunk
+
+    def body(carry, inp):
+        xc, tc, off = inp
+        logits = lm_head_fwd(params["embed"], xc, cfg, pal)
+        valid = (tc >= 0).astype(jnp.float32)
+        if pal.tp_on:
+            gpos = off + jnp.arange(chunk)
+            own = (gpos >= own_lo) & (gpos < own_hi)
+            valid = valid * own[None, :]
+        nll = sharded_xent(logits, jnp.maximum(tc, 0), cfg, pal)
+        loss = jnp.sum(nll * valid)
+        return (carry[0] + loss, carry[1] + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)),
+                                 (xs, ts, offs))
+    if pal.tp_on:
+        # Return the LOCAL contribution tot_r / CNT (global count). The
+        # global loss is psum(local) — but that psum must happen OUTSIDE the
+        # grad: differentiating a replicated post-psum loss inflates every
+        # gradient by tp via the psum transpose. SPMD collective transposes
+        # deliver the cross-rank terms automatically when each rank seeds
+        # only its own disjoint contribution.
+        cnt = jax.lax.psum(jax.lax.stop_gradient(cnt), pal.model_axis)
+        return tot / jnp.maximum(cnt, 1.0)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _layer_cache_init(cfg, pal: Parallel, mixer: str, batch: int,
+                      cache_seq: int, dtype):
+    if mixer == "attn":
+        return attn.init_cache(cfg, pal, batch, cache_seq, dtype)
+    if mixer == "mamba":
+        return mam.init_mamba_cache(cfg, pal, batch, dtype)
+    if mixer == "mlstm":
+        return xl.init_mlstm_cache(cfg, pal, batch)
+    if mixer == "slstm":
+        return xl.init_slstm_cache(cfg, pal, batch)
+    raise ValueError(mixer)
+
+
+def init_decode_cache(cfg, pal: Parallel, batch: int, max_seq: int, dtype,
+                      enc_seq: int = 0):
+    """Cache pytree for decode. max_seq here is the PER-RANK cache length
+    when pal.cache_seq_axis is set (caller divides)."""
+    pattern = layer_pattern(cfg)
+    nsb = n_superblocks(cfg)
+    hd = cfg.resolved_head_dim
+
+    def sb_cache(_):
+        return {f"l{j}": _layer_cache_init(cfg, pal, m, batch, max_seq, dtype)
+                for j, (m, f) in enumerate(pattern)}
+
+    cache = {
+        "pos": jnp.zeros((), jnp.int32),
+        "blocks": jax.vmap(sb_cache)(jnp.arange(nsb)),
+    }
+    if cfg.n_dense_prefix:
+        cache["prefix"] = [
+            _layer_cache_init(cfg, pal, pattern[0][0], batch, max_seq, dtype)
+            for _ in range(cfg.n_dense_prefix)]
+    if cfg.is_encoder_decoder:
+        from repro.models.parallel import heads_padded
+        kvl = shard_slice(heads_padded(cfg.n_kv_heads, pal), pal) \
+            if getattr(pal, "attn_dist", "sp") != "ring" else cfg.n_kv_heads
+        z = jnp.zeros((nsb, batch, enc_seq, kvl, hd), dtype)
+        cache["cross"] = {"k": z, "v": jnp.array(z)}
+    return cache
+
+
+def _layer_decode(p, x, lc, pos, cfg, pal: Parallel, mixer, ffn, cross_kv=None):
+    if mixer == "attn":
+        h = norm_fwd(p["norm1"], x, cfg.norm)
+        y, lc = attn.attn_decode(p["attn"], h, lc, pos, cfg, pal)
+        x = x + y
+    elif mixer == "mamba":
+        h = norm_fwd(p["norm1"], x, cfg.norm)
+        y, lc = mam.mamba_decode(p["mamba"], h, lc, cfg, pal)
+        x = x + y
+    elif mixer == "mlstm":
+        y, lc = xl.mlstm_decode(p["mlstm"], x, lc, cfg, pal)
+        x = x + y
+    elif mixer == "slstm":
+        y, lc = xl.slstm_decode(p["slstm"], x, lc, cfg, pal)
+        x = x + y
+    if "cross" in p and cross_kv is not None:
+        h = norm_fwd(p["norm_x"], x, cfg.norm)
+        y, _ = attn.attn_decode(p["cross"], h, None, pos, cfg, pal,
+                                cross_kv=cross_kv)
+        x = x + y
+    if ffn == "dense":
+        x = x + mlp_fwd(p["mlp"], norm_fwd(p["norm2"], x, cfg.norm), cfg, pal)
+    elif ffn == "moe":
+        y, _ = moe_mod.moe_fwd(p["moe"], norm_fwd(p["norm2"], x, cfg.norm), cfg, pal)
+        x = x + y
+    return x, lc
+
+
+def decode_step(params, cache, token, cfg, pal: Parallel):
+    """token (B, 1) int32 -> (logits (B, V_padded), new cache). One step."""
+    pattern = layer_pattern(cfg)
+    pos = cache["pos"]
+    x = embed_fwd(params["embed"], token, cfg, pal)
+    if not cfg.rope and cfg.ssm is None:
+        pe = _sinusoidal_at(pos, cfg.d_model, x.dtype)
+        x = x + pe
+    new_cache = dict(cache)
+    if cfg.n_dense_prefix:
+        new_prefix = []
+        for p, lc in zip(params["prefix"], cache["prefix"]):
+            x, lc = _layer_decode(p, x, lc, pos, cfg, pal, pattern[0][0], "dense")
+            new_prefix.append(lc)
+        new_cache["prefix"] = new_prefix
+
+    cross = cache.get("cross")
+
+    def sb_dec(x, inp):
+        if cross is not None:
+            sbp, sbc, ckv = inp
+        else:
+            sbp, sbc = inp
+            ckv = None
+        new_sbc = {}
+        for j, (m, f) in enumerate(pattern):
+            xkv = (ckv["k"], ckv["v"]) if ckv is not None else None
+            x, lc = _layer_decode(sbp[f"l{j}"], x, sbc[f"l{j}"], pos, cfg, pal,
+                                  m, f, cross_kv=xkv)
+            new_sbc[f"l{j}"] = lc
+        return x, new_sbc
+
+    xs = (params["blocks"], cache["blocks"], cross) if cross is not None \
+        else (params["blocks"], cache["blocks"])
+    x, new_blocks = jax.lax.scan(sb_dec, x, xs)
+    new_cache["blocks"] = new_blocks
+    new_cache["pos"] = pos + 1
+    x = norm_fwd(params["final_norm"], x, cfg.norm)
+    logits = lm_head_fwd(params["embed"], x, cfg, pal)      # (B,1,V_local)
+    logits = all_gather_model(logits, pal, axis=2)[:, 0]
+    return logits, new_cache
+
+
+def _sinusoidal_at(pos, d, dtype):
+    dim = jnp.arange(0, d, 2).astype(jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((d,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+    return pe[None, None].astype(dtype)
+
+
+def _layer_prefill(p, x, cfg, pal: Parallel, mixer, ffn, max_seq, dtype,
+                   cross_kv=None):
+    """Full-prompt forward returning (x, layer_cache)."""
+    b = x.shape[0]
+    if mixer == "attn":
+        h = norm_fwd(p["norm1"], x, cfg.norm)
+        y, lc = attn.attn_prefill(p["attn"], h, cfg, pal, max_seq=max_seq)
+        x = x + y
+    elif mixer == "mamba":
+        h = norm_fwd(p["norm1"], x, cfg.norm)
+        y, st = mam.mamba_fwd(p["mamba"], h, cfg, pal, return_state=True)
+        x = x + y
+        lc = st
+    elif mixer == "mlstm":
+        y, st = xl.mlstm_fwd(p["mlstm"], x, cfg, pal, return_state=True)
+        x = x + y
+        lc = st
+    elif mixer == "slstm":
+        y, st = xl.slstm_fwd(p["slstm"], x, cfg, pal, return_state=True)
+        x = x + y
+        lc = st
+    if "cross" in p and cross_kv is not None:
+        h = norm_fwd(p["norm_x"], x, cfg.norm)
+        kv = attn.init_cross_kv(p["cross"], cross_kv, cfg, pal)
+        x = x + attn.attn_fwd_full(p["cross"], h, cfg, pal, causal=False,
+                                   cross_kv=kv)
+    if ffn == "dense":
+        x = x + mlp_fwd(p["mlp"], norm_fwd(p["norm2"], x, cfg.norm), cfg, pal)
+    elif ffn == "moe":
+        y, _ = moe_mod.moe_fwd(p["moe"], norm_fwd(p["norm2"], x, cfg.norm), cfg, pal)
+        x = x + y
+    return x, lc
+
+
+def prefill(params, batch, cfg, pal: Parallel, max_seq: int):
+    """Prompt forward building the decode cache. batch: tokens (B, S) [+
+    patches/frames]. Returns (last_logits (B, V_padded), cache). Serving is
+    batch-parallel over data; seq is NOT sharded here (pal.seq_parallel off
+    in serve paths); cache seq dim is full length max_seq (sliding archs:
+    min(window, max_seq))."""
+    pattern = layer_pattern(cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, batch["frames"].astype(dtype), cfg, pal)
+    x = embed_batch(params, batch, cfg, pal, seq_shard=False)
+
+    cache = init_decode_cache(cfg, pal, b, max_seq, dtype,
+                              enc_seq=enc_out.shape[1] if enc_out is not None else 0)
+    if cfg.n_dense_prefix:
+        new_prefix = []
+        for p in params["prefix"]:
+            x, lc = _layer_prefill(p, x, cfg, pal, pattern[0][0], "dense",
+                                   max_seq, dtype, cross_kv=enc_out)
+            new_prefix.append(lc)
+        cache["prefix"] = new_prefix
+
+    def sb_pre(x, sbp):
+        new_sbc = {}
+        ck = None
+        for j, (m, f) in enumerate(pattern):
+            x, lc = _layer_prefill(sbp[f"l{j}"], x, cfg, pal, m, f, max_seq,
+                                   dtype, cross_kv=enc_out)
+            new_sbc[f"l{j}"] = lc
+            if cfg.is_encoder_decoder:
+                k, v = attn.init_cross_kv(sbp[f"l{j}"]["cross"], enc_out, cfg, pal)
+                ck = {"k": k.astype(dtype), "v": v.astype(dtype)}
+        out = (new_sbc, ck) if cfg.is_encoder_decoder else new_sbc
+        return x, out
+
+    x, collected = jax.lax.scan(sb_pre, x, params["blocks"])
+    if cfg.is_encoder_decoder:
+        cache["blocks"], cross = collected
+        cache["cross"] = cross
+    else:
+        cache["blocks"] = collected
+    cache["pos"] = jnp.full((), s, jnp.int32)
+    x = norm_fwd(params["final_norm"], x, cfg.norm)
+    logits = lm_head_fwd(params["embed"], x[:, -1:], cfg, pal)
+    logits = all_gather_model(logits, pal, axis=2)[:, 0]
+    return logits, cache

@@ -1,0 +1,227 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+exponential gating), per arXiv:2405.04517, alternating in the stack.
+
+TP: the value/output dimension of each head is sharded over the model axis
+(the matrix memory C (hd_v, hd_k) shards on rows); q/k projections are
+replicated (small). sLSTM recurrent kernels are omitted (input-driven gates
+only) — noted in DESIGN.md; the exponential-gating stabilizer state (m) is
+kept exactly as in the paper.
+
+Both blocks are pre-LN residual blocks with internal up/down projections
+(mLSTM proj factor 2, sLSTM 4/3) — the assigned config has d_ff=0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_norm, norm_fwd
+from repro.models.parallel import (
+    Parallel, all_gather_model, psum_model, psum_scatter_model, shard_slice,
+)
+
+
+def _mlstm_dims(cfg, pal: Parallel):
+    d_inner = int(cfg.ssm.mlstm_proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    hd = d_inner // h
+    hdv_l = shard_slice(hd, pal)          # value dim rows sharded
+    return d_inner, h, hd, hdv_l
+
+
+def init_mlstm(key, cfg, pal: Parallel):
+    d = cfg.d_model
+    d_inner, h, hd, hdv_l = _mlstm_dims(cfg, pal)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": init_norm(cfg),
+        "up": dense_init(ks[0], d, d_inner),          # replicated (pre-split)
+        # head-major 3-D layouts: the v dim of each head is sharded on its
+        # OWN axis so the global array layout is tp-independent
+        "up_gate": dense_init(ks[1], d, h * hdv_l).reshape(d, h, hdv_l),
+        "wq": dense_init(ks[2], d_inner, h * hd),     # replicated
+        "wk": dense_init(ks[3], d_inner, h * hd),
+        "wv": dense_init(ks[4], d_inner, h * hdv_l).reshape(d_inner, h, hdv_l),
+        "wif": dense_init(ks[5], d_inner, 2 * h, scale=0.02),  # i,f gates
+        "ln_h": jnp.ones((h, hdv_l), jnp.float32),
+        "down": dense_init(ks[6], h * hdv_l, d).reshape(h, hdv_l, d),
+    }
+
+
+def _mlstm_scan(q, k, v, ig, fg, state):
+    """q,k: (B,S,H,hd); v: (B,S,H,hdv_l); ig,fg: (B,S,H) raw gates.
+    state: (C (B,H,hdv_l,hd), n (B,H,hd), m (B,H)). Sequential lax.scan over
+    S with stabilized exponential gating."""
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, it, ft = inp                      # (B,H,hd)... (B,H)
+        m_new = jnp.maximum(ft + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + m - m_new)
+        c = f_[..., None, None] * c + i_[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])      # (B,H,hdv_l,hd)
+        n = f_[..., None] * n + i_[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", c, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+        h = num / den[..., None]
+        return (c, n, m_new), h
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (q, k, v))
+    gs = tuple(t.transpose(1, 0, 2) for t in (ig, fg))
+    (c, n, m), hs = jax.lax.scan(step, state, xs + gs)
+    return hs.transpose(1, 0, 2, 3), (c, n, m)        # (B,S,H,hdv_l)
+
+
+def mlstm_fwd(p, x, cfg, pal: Parallel, state=None, return_state=False):
+    if pal.seq_parallel:
+        x = all_gather_model(x, pal, axis=1)
+    b, s, _ = x.shape
+    d_inner, h, hd, hdv_l = _mlstm_dims(cfg, pal)
+    xi = norm_fwd(p["norm"], x, cfg.norm)
+    u = (xi @ p["up"].astype(xi.dtype))
+    og = jax.nn.sigmoid(jnp.einsum("bsd,dhv->bshv", xi, p["up_gate"].astype(xi.dtype)))
+    q = (u @ p["wq"].astype(u.dtype)).reshape(b, s, h, hd)
+    k = (u @ p["wk"].astype(u.dtype)).reshape(b, s, h, hd) * hd ** -0.5
+    v = jnp.einsum("bsu,uhv->bshv", u, p["wv"].astype(u.dtype))
+    gf = (u @ p["wif"].astype(u.dtype)).astype(jnp.float32)
+    ig, fg = gf[..., :h], jax.nn.log_sigmoid(gf[..., h:])
+    state = state if state is not None else (
+        jnp.zeros((b, h, hdv_l, hd), jnp.float32),
+        jnp.zeros((b, h, hd), jnp.float32),
+        jnp.zeros((b, h), jnp.float32))
+    hs, (c, n, m) = _mlstm_scan(q.astype(jnp.float32), k.astype(jnp.float32),
+                                v.astype(jnp.float32), ig, fg, state)
+    hs = (hs * p["ln_h"]).astype(x.dtype) * og            # (B,S,h,hdv_l)
+    out = jnp.einsum("bshv,hvd->bsd", hs, p["down"].astype(hs.dtype))
+    out = psum_scatter_model(out, pal, axis=1) if pal.seq_parallel else psum_model(out, pal)
+    if return_state:
+        return out, {"c": c, "n": n, "m": m}
+    return out
+
+
+def init_mlstm_cache(cfg, pal: Parallel, batch: int):
+    _, h, hd, hdv_l = _mlstm_dims(cfg, pal)
+    return {"c": jnp.zeros((batch, h, hdv_l, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32),
+            "m": jnp.zeros((batch, h), jnp.float32)}
+
+
+def mlstm_decode(p, x, cache, cfg, pal: Parallel):
+    b = x.shape[0]
+    d_inner, h, hd, hdv_l = _mlstm_dims(cfg, pal)
+    xi = norm_fwd(p["norm"], x[:, 0], cfg.norm)
+    u = xi @ p["up"].astype(xi.dtype)
+    og = jax.nn.sigmoid(jnp.einsum("bd,dhv->bhv", xi, p["up_gate"].astype(xi.dtype)))
+    q = (u @ p["wq"].astype(u.dtype)).reshape(b, h, hd).astype(jnp.float32)
+    k = ((u @ p["wk"].astype(u.dtype)).reshape(b, h, hd) * hd ** -0.5).astype(jnp.float32)
+    v = jnp.einsum("bu,uhv->bhv", u, p["wv"].astype(u.dtype)).astype(jnp.float32)
+    gf = (u @ p["wif"].astype(u.dtype)).astype(jnp.float32)
+    ig, fg = gf[..., :h], jax.nn.log_sigmoid(gf[..., h:])
+    c, n, m = cache["c"], cache["n"], cache["m"]
+    m_new = jnp.maximum(fg + m, ig)
+    i_ = jnp.exp(ig - m_new)
+    f_ = jnp.exp(fg + m - m_new)
+    c = f_[..., None, None] * c + i_[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n = f_[..., None] * n + i_[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    hv = (num / den[..., None])                            # (B,h,hdv_l)
+    hv = (hv * p["ln_h"]).astype(x.dtype) * og
+    out = jnp.einsum("bhv,hvd->bd", hv, p["down"].astype(hv.dtype))[:, None]
+    out = psum_model(out, pal)
+    return out, {"c": c, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _slstm_dims(cfg, pal: Parallel):
+    # round up to a multiple of 16 so d_inner is mesh-independent and
+    # MXU-aligned (same shapes at tp=1 and tp=16)
+    d_inner = -(-int(cfg.ssm.slstm_proj_factor * cfg.d_model) // 16) * 16
+    dil = shard_slice(d_inner, pal)
+    return d_inner, dil
+
+
+def init_slstm(key, cfg, pal: Parallel):
+    d = cfg.d_model
+    d_inner, dil = _slstm_dims(cfg, pal)
+    ks = jax.random.split(key, 4)
+    kk = jax.random.split(ks[0], 4)
+    return {
+        "norm": init_norm(cfg),
+        "wi": dense_init(kk[0], d, dil),              # col-parallel gates
+        "wf": dense_init(kk[1], d, dil),
+        "wz": dense_init(kk[2], d, dil),
+        "wo": dense_init(kk[3], d, dil),
+        "ln_h": jnp.ones((dil,), jnp.float32),
+        "down": dense_init(ks[1], dil, d),            # row-parallel
+    }
+
+
+def slstm_fwd(p, x, cfg, pal: Parallel, state=None, return_state=False):
+    if pal.seq_parallel:
+        x = all_gather_model(x, pal, axis=1)
+    b, s, _ = x.shape
+    _, dil = _slstm_dims(cfg, pal)
+    xi = norm_fwd(p["norm"], x, cfg.norm)
+    ig = (xi @ p["wi"].astype(xi.dtype)).astype(jnp.float32)
+    fg = (xi @ p["wf"].astype(xi.dtype)).astype(jnp.float32)
+    zg = (xi @ p["wz"].astype(xi.dtype)).astype(jnp.float32)
+    og = (xi @ p["wo"].astype(xi.dtype)).astype(jnp.float32)
+    fg = jax.nn.log_sigmoid(fg)
+    zg = jnp.tanh(zg)
+    og = jax.nn.sigmoid(og)
+    state = state if state is not None else (
+        jnp.zeros((b, dil), jnp.float32), jnp.zeros((b, dil), jnp.float32),
+        jnp.zeros((b, dil), jnp.float32))
+
+    def step(carry, inp):
+        c, n, m = carry
+        it, ft, zt, ot = inp
+        m_new = jnp.maximum(ft + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + m - m_new)
+        c = f_ * c + i_ * zt
+        n = f_ * n + i_
+        h = ot * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new), h
+
+    xs = tuple(t.transpose(1, 0, 2) for t in (ig, fg, zg, og))
+    (c, n, m), hs = jax.lax.scan(step, state, xs)
+    hs = hs.transpose(1, 0, 2)
+    hs = (hs * p["ln_h"]).astype(x.dtype)
+    out = hs @ p["down"].astype(hs.dtype)
+    out = psum_scatter_model(out, pal, axis=1) if pal.seq_parallel else psum_model(out, pal)
+    if return_state:
+        return out, {"c": c, "n": n, "m": m}
+    return out
+
+
+def init_slstm_cache(cfg, pal: Parallel, batch: int):
+    _, dil = _slstm_dims(cfg, pal)
+    z = jnp.zeros((batch, dil), jnp.float32)
+    return {"c": z, "n": z, "m": z}
+
+
+def slstm_decode(p, x, cache, cfg, pal: Parallel):
+    b = x.shape[0]
+    xi = norm_fwd(p["norm"], x[:, 0], cfg.norm)
+    ig = (xi @ p["wi"].astype(xi.dtype)).astype(jnp.float32)
+    fg = (xi @ p["wf"].astype(xi.dtype)).astype(jnp.float32)
+    zg = (xi @ p["wz"].astype(xi.dtype)).astype(jnp.float32)
+    og = (xi @ p["wo"].astype(xi.dtype)).astype(jnp.float32)
+    fg = jax.nn.log_sigmoid(fg)
+    zg = jnp.tanh(zg)
+    og = jax.nn.sigmoid(og)
+    c, n, m = cache["c"], cache["n"], cache["m"]
+    m_new = jnp.maximum(fg + m, ig)
+    i_ = jnp.exp(ig - m_new)
+    f_ = jnp.exp(fg + m - m_new)
+    c = f_ * c + i_ * zg
+    n = f_ * n + i_
+    h = og * c / jnp.maximum(n, 1.0)
+    h = (h * p["ln_h"]).astype(x.dtype)
+    out = (h @ p["down"].astype(h.dtype))[:, None]
+    return psum_model(out, pal), {"c": c, "n": n, "m": m_new}

@@ -1,0 +1,3 @@
+from repro.optim.optimizer import (
+    init_opt_state, apply_updates, lr_at_step, opt_shard_len,
+)

@@ -1,0 +1,85 @@
+"""Optimizers over FLAT fp32 vectors with ZeRO-1 sharding over data ranks.
+
+The training step keeps parameters as a pytree (model-sharded), but the
+optimizer operates on the flat per-rank vector (the same J_local layout the
+sparsifier uses). With ZeRO-1 (optimizer.zero1), each of the DP data ranks
+owns a 1/DP slice of (master, m, v); after gradient aggregation every rank
+updates its slice and the updated master is all-gathered over the data axes.
+
+States are fp32 regardless of the model dtype (master copy included).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def opt_shard_len(j_local: int, dp: int) -> int:
+    """Padded per-data-rank slice length."""
+    return -(-j_local // dp)
+
+
+def lr_at_step(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.warmup_steps:
+        warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    else:
+        warm = 1.0
+    if cfg.schedule == "cosine":
+        t = jnp.clip((step - cfg.warmup_steps) /
+                     max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    else:
+        decay = 1.0
+    return lr * warm * decay
+
+
+def init_opt_state(cfg: OptimizerConfig, master_slice: jnp.ndarray) -> dict:
+    """State for one rank's slice. master_slice: (shard,) fp32 params."""
+    z = jnp.zeros_like(master_slice)
+    st = {"master": master_slice, "step": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "momentum":
+        st["m"] = z
+    elif cfg.kind in ("adam", "adamw"):
+        st["m"] = z
+        st["v"] = z
+    return st
+
+
+def apply_updates(cfg: OptimizerConfig, state: dict, g_slice: jnp.ndarray):
+    """One optimizer step on this rank's slice. Returns (new_master, state)."""
+    m0 = state["master"]
+    step = state["step"]
+    lr = lr_at_step(cfg, step)
+    g = g_slice.astype(jnp.float32)
+    if cfg.grad_clip:
+        # caller passes the GLOBAL grad norm via state["gnorm"] if clipping
+        gn = state.get("gnorm", jnp.linalg.norm(g))
+        g = g * jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+    new = dict(state)
+    if cfg.kind == "sgd":
+        upd = g
+    elif cfg.kind == "momentum":
+        m = cfg.momentum * state["m"] + g
+        new["m"] = m
+        upd = m
+    elif cfg.kind in ("adam", "adamw"):
+        t = (step + 1).astype(jnp.float32)
+        m = cfg.b1 * state["m"] + (1 - cfg.b1) * g
+        v = cfg.b2 * state["v"] + (1 - cfg.b2) * g * g
+        mhat = m / (1 - cfg.b1 ** t)
+        vhat = v / (1 - cfg.b2 ** t)
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        new["m"], new["v"] = m, v
+    else:
+        raise ValueError(cfg.kind)
+    if cfg.weight_decay and cfg.kind == "adamw":
+        upd = upd + cfg.weight_decay * m0
+    master = m0 - lr * upd
+    new["master"] = master
+    new["step"] = step + 1
+    new.pop("gnorm", None)
+    return master, new

@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (
+    HW_V5E, roofline_terms, model_flops, analyze_record, format_table,
+)

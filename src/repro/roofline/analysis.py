@@ -1,0 +1,105 @@
+"""Three-term roofline analysis from dry-run compile artifacts.
+
+Terms per (arch x shape x mesh), DESIGN.md §5 — all in seconds:
+
+  compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory     = HLO_bytes / (chips x HBM_bw)
+  collective = collective_bytes / (chips x link_bw)
+
+Conventions: ``compiled.cost_analysis()`` on a jit-of-shard_map returns the
+PER-DEVICE program's flops/bytes (the SPMD module is per-device), so compute
+and memory terms divide by 1 chip; collective bytes parsed from the HLO are
+also per-device payloads. MODEL_FLOPS uses the 6*N*D training rule (2*N*D
+per token forward for decode) with N = ACTIVE params.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops_bf16: float      # per chip
+    hbm_bw: float               # bytes/s per chip
+    ici_bw: float               # bytes/s per link
+
+
+HW_V5E = Hardware("tpu-v5e", 197e12, 819e9, 50e9)
+
+
+def model_flops(kind: str, active_params: int, global_batch: int,
+                seq_len: int) -> float:
+    """Useful model FLOPs for the whole step (all chips)."""
+    if kind == "train":
+        return 6.0 * active_params * global_batch * seq_len
+    if kind == "prefill":
+        return 2.0 * active_params * global_batch * seq_len
+    # decode: one token per sequence
+    return 2.0 * active_params * global_batch
+
+
+def roofline_terms(rec: dict, hw: Hardware = HW_V5E) -> dict:
+    """rec: one dryrun.py record. Returns the three terms + diagnosis."""
+    mesh = rec["mesh"]
+    chips = 1
+    for v in mesh.values():
+        chips *= v
+    # loop-aware HLO parse (per-device); falls back to cost_analysis fields
+    flops = rec.get("hlo_flops", rec["flops"])
+    hbm = rec.get("hlo_bytes", rec["bytes_accessed"])
+    wire = rec.get("hlo_collective_wire_bytes",
+                   rec["collective_bytes"]["total"])
+    t_compute = flops / hw.peak_flops_bf16
+    t_memory = hbm / hw.hbm_bw
+    t_coll = wire / hw.ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["kind"], rec["active_params"],
+                     rec_global_batch(rec), rec_seq_len(rec))
+    hlo_total_flops = flops * chips
+    terms.update({
+        "dominant": dominant.replace("_s", ""),
+        "chips": chips,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total_flops,
+        "useful_ratio": mf / hlo_total_flops if hlo_total_flops > 0 else 0.0,
+        "step_time_lb_s": max(terms.values()),
+        "mfu_upper_bound": (mf / chips / hw.peak_flops_bf16) /
+                           max(max(terms.values()), 1e-12),
+    })
+    return terms
+
+
+def rec_global_batch(rec: dict) -> int:
+    from repro.configs.base import SHAPES
+    return SHAPES[rec["shape"]].global_batch
+
+
+def rec_seq_len(rec: dict) -> int:
+    from repro.configs.base import SHAPES
+    return SHAPES[rec["shape"]].seq_len
+
+
+def analyze_record(rec: dict, hw: Hardware = HW_V5E) -> dict:
+    out = dict(rec)
+    out["roofline"] = roofline_terms(rec, hw)
+    return out
+
+
+def format_table(records: list, hw: Hardware = HW_V5E) -> str:
+    """Markdown table for EXPERIMENTS.md §Roofline."""
+    rows = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | useful FLOPs ratio | MFU ub |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in records:
+        t = roofline_terms(rec, hw)
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | "
+            f"{t['compute_s']*1e3:.2f} | {t['memory_s']*1e3:.2f} | "
+            f"{t['collective_s']*1e3:.2f} | {t['dominant']} | "
+            f"{t['useful_ratio']:.2f} | {t['mfu_upper_bound']*100:.0f}% |")
+    return "\n".join(rows)

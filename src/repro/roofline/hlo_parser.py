@@ -1,0 +1,273 @@
+"""Loop-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (scan bodies are
+not multiplied by trip count), which under-reports every scanned-layer model
+by ~n_layers x. This parser rebuilds the numbers from ``compiled.as_text()``:
+
+- computations are parsed with their instructions;
+- the call graph is walked from ENTRY; while bodies multiply by
+  ``backend_config known_trip_count`` (default 1 + flag if unknown);
+- per instruction we accumulate:
+    * FLOPs for dot/convolution (2 x out_elems x contracted size),
+    * HBM bytes ~ operand + output bytes of surface instructions (fusion
+      internals excluded — a fusion reads its operands and writes its output
+      once),
+    * collective WIRE bytes per device with ring factors:
+        all-gather: out x (g-1)/g         all-reduce: out x 2(g-1)/g
+        reduce-scatter: out x (g-1)       all-to-all: out x (g-1)/g
+        collective-permute: out x 1
+      (g = replica group size parsed from replica_groups).
+
+Numbers are per-device (the SPMD module is per-device).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+             "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2,
+             "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+             "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _split_instr(line: str):
+    """Parse '%name = TYPE opcode(operands...), attrs' robustly (TYPE may be
+    a tuple in parens). Returns (name, type_str, opcode, operand_span) or
+    None."""
+    line = _COMMENT_RE.sub("", line)
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i < n and line[i] == "(":          # tuple type
+        depth = 0
+        j = i
+        while j < n:
+            depth += line[j] == "("
+            depth -= line[j] == ")"
+            j += 1
+            if depth == 0:
+                break
+        type_str = line[i:j]
+        i = j
+    else:                                  # simple type token
+        j = line.find(" ", i)
+        if j < 0:
+            return None
+        type_str = line[i:j]
+        i = j
+    # opcode: next identifier followed by '('
+    m2 = re.match(r"\s*([\w\-]+)\(", line[i:])
+    if not m2:
+        return None
+    opcode = m2.group(1)
+    start = i + m2.end()
+    depth = 1
+    j = start
+    while j < n and depth:
+        depth += line[j] == "("
+        depth -= line[j] == ")"
+        j += 1
+    return name, type_str, opcode, line[start:j - 1], line
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "iota", "broadcast",
+                   "partition-id", "replica-id"}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _type_bytes_elems(type_str: str):
+    """bytes and element count of a (possibly tuple) HLO type string."""
+    total_b = 0
+    total_e = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_b += n * _DT_BYTES[dt]
+        total_e += n
+    return total_b, total_e
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    type_str: str
+    line: str
+    out_bytes: int = 0
+    out_elems: int = 0
+    operands: list = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+
+
+def parse_hlo(text: str):
+    comps = {}
+    cur = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _HEADER_RE.match(line.strip()) if "{" in line else None
+            if m and "->" in line:
+                cur = Computation(m.group(2))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _split_instr(line)
+        if parsed is None:
+            continue
+        name, type_str, opcode, operand_span, clean = parsed
+        ins = Instr(name, opcode, type_str, clean)
+        ins.out_bytes, ins.out_elems = _type_bytes_elems(type_str)
+        ins.operands = re.findall(r"%([\w.\-]+)", operand_span)
+        cur.instrs.append(ins)
+    return comps
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _wire_bytes(opcode: str, out_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if opcode == "all-gather":
+        return out_bytes * (g - 1) / g
+    if opcode == "all-reduce":
+        return out_bytes * 2 * (g - 1) / g
+    if opcode == "reduce-scatter":
+        return out_bytes * (g - 1)
+    if opcode == "all-to-all":
+        return out_bytes * (g - 1) / g
+    if opcode == "collective-permute":
+        return float(out_bytes)
+    return 0.0
+
+
+def _dot_flops(ins: Instr, shapes: dict) -> float:
+    """2 x out_elems x contracted-dim product."""
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    if not m or not ins.operands:
+        return 2.0 * ins.out_elems   # fallback
+    lhs = shapes.get(ins.operands[0])
+    if lhs is None:
+        return 2.0 * ins.out_elems
+    contract = 1
+    for d in m.group(1).split(","):
+        if d and int(d) < len(lhs):
+            contract *= lhs[int(d)]
+    return 2.0 * ins.out_elems * contract
+
+
+def analyze_hlo(text: str, n_devices_default: int = 1) -> dict:
+    comps = parse_hlo(text)
+    # instruction output shapes (dims only) for dot contraction lookup
+    shapes = {}
+    for c in comps.values():
+        for ins in c.instrs:
+            mm = _SHAPE_RE.findall(ins.type_str)
+            if mm:
+                dims = [int(d) for d in mm[0][1].split(",") if d]
+                shapes[ins.name] = dims
+
+    # ENTRY is emitted last by XLA (and usually named main*)
+    names = list(comps)
+    entry = next((n for n in names if n.startswith("main") or ".main" in n),
+                 names[-1] if names else None)
+
+    out = {
+        "flops": 0.0, "hbm_bytes": 0.0,
+        "collectives": {k: 0.0 for k in COLLECTIVE_OPS},
+        "collective_wire_bytes": 0.0,
+        "unknown_trip_loops": 0,
+    }
+
+    def visit(comp_name: str, mult: float, stack=()):
+        c = comps.get(comp_name)
+        if c is None or comp_name in stack:
+            return
+        for ins in c.instrs:
+            if ins.opcode == "while":
+                m = _TRIP_RE.search(ins.line)
+                trip = int(m.group(1)) if m else 1
+                if not m:
+                    out["unknown_trip_loops"] += 1
+                mb = re.search(r"body=%([\w.\-]+)", ins.line)
+                if mb:
+                    visit(mb.group(1), mult * trip, stack + (comp_name,))
+                continue
+            if ins.opcode == "conditional":
+                for mb in re.finditer(r"%([\w.\-]+)", ins.line):
+                    if mb.group(1) in comps and "region" in mb.group(1):
+                        visit(mb.group(1), mult, stack + (comp_name,))
+                continue
+            if ins.opcode in ("dot", "convolution"):
+                out["flops"] += mult * _dot_flops(ins, shapes)
+            if ins.opcode in COLLECTIVE_OPS:
+                g = _group_size(ins.line, n_devices_default)
+                wb = _wire_bytes(ins.opcode, ins.out_bytes, g)
+                out["collectives"][ins.opcode] += mult * wb
+                out["collective_wire_bytes"] += mult * wb
+            if ins.opcode not in _SKIP_BYTES_OPS:
+                # HBM traffic model: every value is written once and charged
+                # one read at its FIRST consumption (repeat reads of the same
+                # buffer are assumed cached/fused on TPU — documented
+                # approximation; see module docstring).
+                if ("dynamic-update-slice" in ins.name
+                        or ins.opcode == "dynamic-update-slice"):
+                    # in-place aliased update: traffic = the UPDATE slice
+                    # (read + write), not the whole stacked buffer
+                    ops_b = sorted(_producer_bytes.get(o, 0)
+                                   for o in ins.operands)
+                    upd = sum(ops_b[:-1]) if len(ops_b) > 1 else 0
+                    out["hbm_bytes"] += mult * 2 * upd
+                    continue
+                reads = 0
+                for o in ins.operands:
+                    if o not in _consumed:
+                        _consumed.add(o)
+                        reads += _producer_bytes.get(o, 0)
+                out["hbm_bytes"] += mult * (ins.out_bytes + reads)
+
+    # producer bytes map + first-consumption tracking
+    _producer_bytes = {}
+    _consumed = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            _producer_bytes[ins.name] = ins.out_bytes
+
+    visit(entry, 1.0)
+    return out
+
+
+def analyze_compiled(compiled, n_devices_default: int = 1) -> dict:
+    return analyze_hlo(compiled.as_text(), n_devices_default)

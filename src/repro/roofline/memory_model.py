@@ -1,0 +1,97 @@
+"""Analytic per-device memory model for the production mesh ("does it fit
+16 GB of v5e HBM?"). Derived from our sharding rules — exact for parameter /
+state / cache residency; activations use the remat working-set estimate.
+
+XLA's CompiledMemoryStats on the CPU backend aggregates buffers in a
+backend-dependent way (see EXPERIMENTS.md §4 note), so the fits-check uses
+this model; the raw XLA numbers are recorded alongside in the dry-run JSON.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import RunConfig, SHAPES
+from repro.core.sparsify import resolve_k
+from repro.models.params import count_params_analytic
+
+
+@dataclass
+class MemoryBreakdown:
+    params: float
+    grads: float
+    opt: float
+    ef: float
+    cache: float
+    activations: float
+
+    @property
+    def total(self):
+        return (self.params + self.grads + self.opt + self.ef + self.cache +
+                self.activations)
+
+
+def _dtype_bytes(dt: str) -> int:
+    return {"bfloat16": 2, "float32": 4, "float16": 2}[dt]
+
+
+def per_device_memory(run: RunConfig, *, tp=16, dp=16, kind="train",
+                      state_format=None, ef_dtype=None) -> MemoryBreakdown:
+    cfg = run.model
+    sp = run.sparsifier
+    state_format = state_format or sp.state_format
+    ef_dtype = ef_dtype or sp.ef_dtype
+    shape = run.shape
+    n = count_params_analytic(cfg)
+    j_local = n / tp                       # flat per-(data,model)-rank vector
+    pb = _dtype_bytes(cfg.dtype)
+    params = n / tp * pb
+    if kind != "train":
+        b_local = max(shape.global_batch // dp, 1)
+        cache = 0.0
+        if cfg.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+            # KV cache (full or sliding window), seq sharded when batch < dp
+            kv = cfg.n_kv_heads
+            kvp = -(-kv // tp) * tp
+            hd = cfg.resolved_head_dim
+            seq = shape.seq_len
+            if cfg.attn_kind == "sliding" or (shape.name == "long_500k"
+                                              and cfg.attn_kind == "full"):
+                seq = min(seq, cfg.window)
+            seq_local = seq if shape.global_batch >= dp else seq // dp
+            n_attn = cfg.n_layers if cfg.attn_every <= 1 else \
+                cfg.n_layers // cfg.attn_every
+            if cfg.attn_kind == "mla":
+                per_tok = cfg.kv_lora_rank + cfg.rope_head_dim
+            else:
+                per_tok = 2 * (kvp // tp) * hd
+            cache = b_local * seq_local * per_tok * pb * n_attn
+        return MemoryBreakdown(params, 0, 0, 0, cache,
+                               0.1e9)  # decode activations are tiny
+    grads = j_local * 4                    # fp32 flat gradient (transient)
+    opt = 3 * (j_local / dp) * 4           # ZeRO-1 master+m+v fp32
+    efb = _dtype_bytes(ef_dtype)
+    k = resolve_k(sp, int(j_local))
+    if sp.kind == "regtopk" and state_format == "dense":
+        ef = (1 * j_local + 3 * j_local) * efb     # err + a_prev+s_prev+g_prev
+    elif sp.kind == "regtopk":
+        ef = j_local * efb + 3 * k * 4
+    elif sp.kind in ("topk", "thresholdk", "sketchtopk"):
+        ef = j_local * efb
+    elif sp.kind == "dgc":
+        ef = 2 * j_local * efb
+    else:
+        ef = 0.0
+    # activations: remat keeps one super-block working set + layer inputs
+    b_local = shape.global_batch // dp
+    seq_local = shape.seq_len // tp        # SP-sharded residual stream
+    from repro.models.transformer import n_superblocks, superblock_period
+    nsb = n_superblocks(cfg)
+    resid = b_local * shape.seq_len * cfg.d_model * pb  # gathered, transient
+    saved = nsb * b_local * seq_local * cfg.d_model * pb * superblock_period(cfg)
+    activations = saved + 4 * resid
+    return MemoryBreakdown(params, grads, opt, ef, 0.0, activations)
+
+
+def fits_hbm(run: RunConfig, hbm_bytes=16e9, **kw) -> tuple:
+    mb = per_device_memory(run, **kw)
+    return mb.total <= hbm_bytes, mb

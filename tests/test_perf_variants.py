@@ -1,0 +1,98 @@
+"""Perf-variant correctness: absorbed MLA equivalence, bigvec ops, serve
+launcher smoke."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced_config
+from repro.core import bigvec
+from repro.models import attention as attn
+from repro.models.parallel import Parallel
+
+PAL = Parallel()
+
+
+def _mla_cfg(absorb):
+    cfg = reduced_config(get_config("deepseek-v2-lite-16b"))
+    return dataclasses.replace(cfg, mla_absorb=absorb)
+
+
+class TestAbsorbedMLA:
+    def setup_method(self, _):
+        self.p = attn.init_attention(jax.random.PRNGKey(0), _mla_cfg(False),
+                                     PAL)
+        self.x = jax.random.normal(jax.random.PRNGKey(1),
+                                   (2, 40, _mla_cfg(False).d_model))
+
+    def test_full_forward_equivalent(self):
+        y1 = attn.attn_fwd_full(self.p, self.x, _mla_cfg(False), PAL,
+                                causal=True)
+        y2 = attn.attn_fwd_full(self.p, self.x, _mla_cfg(True), PAL,
+                                causal=True)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=5e-5)
+
+    def test_prefill_and_decode_equivalent(self):
+        y1, c1 = attn.attn_prefill(self.p, self.x, _mla_cfg(False), PAL,
+                                   max_seq=48)
+        y2, c2 = attn.attn_prefill(self.p, self.x, _mla_cfg(True), PAL,
+                                   max_seq=48)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=5e-5)
+        nxt = jax.random.normal(jax.random.PRNGKey(2), (2, 1, self.x.shape[-1]))
+        d1, _ = attn.attn_decode(self.p, nxt, dict(c1), jnp.int32(40),
+                                 _mla_cfg(False), PAL)
+        d2, _ = attn.attn_decode(self.p, nxt, dict(c2), jnp.int32(40),
+                                 _mla_cfg(True), PAL)
+        np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=5e-5)
+
+
+class TestBigvec:
+    def test_roundtrip_small(self):
+        a = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+        idx = jnp.asarray([3, 999, 0, 512], jnp.uint32)
+        np.testing.assert_array_equal(np.asarray(bigvec.gather(a, idx)),
+                                      np.asarray(a)[np.asarray(idx)])
+        b = bigvec.scatter_set(a, idx, 0.0)
+        assert float(jnp.abs(b[np.asarray(idx)]).max()) == 0.0
+        c = bigvec.scatter_add(jnp.zeros(1000), idx, 2.0)
+        assert float(c.sum()) == 8.0
+        m = bigvec.mask_from_indices(1000, idx, jnp.float32)
+        assert int(m.sum()) == 4
+
+    def test_blocked_path_matches(self):
+        import repro.core.bigvec as bv
+        a = jax.random.normal(jax.random.PRNGKey(1), (10_000,))
+        idx = jax.random.randint(jax.random.PRNGKey(2), (64,), 0,
+                                 10_000).astype(jnp.uint32)
+        old_needs, old_cols = bv._needs_big, bv.COLS
+        bv._needs_big = lambda j: True
+        bv.COLS = 1 << 10
+        try:
+            g = bv.gather(a, idx)
+            s = bv.scatter_set(a, idx, 0.0)
+            m = bv.mask_from_indices(10_000, idx, jnp.float32)
+        finally:
+            bv._needs_big, bv.COLS = old_needs, old_cols
+        np.testing.assert_array_equal(np.asarray(g),
+                                      np.asarray(a)[np.asarray(idx)])
+        assert float(jnp.abs(s[np.asarray(idx)]).max()) == 0.0
+        assert int(m.sum()) == len(set(np.asarray(idx).tolist()))
+
+
+def test_serve_launcher_smoke():
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch",
+         "deepseek-v2-lite-16b", "--smoke", "--devices", "4", "--data", "2",
+         "--model", "2", "--batch", "4", "--prompt-len", "24",
+         "--new-tokens", "4", "--mla-absorb"],
+        capture_output=True, text=True, timeout=1200, env=env, cwd=root)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "decode 4 steps" in out.stdout

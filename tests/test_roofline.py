@@ -1,0 +1,89 @@
+"""Roofline machinery: HLO parser on a synthetic module + real compiled
+module; term computation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.analysis import HW_V5E, model_flops, roofline_terms
+from repro.roofline.hlo_parser import analyze_hlo
+
+SYNTH = """
+HloModule test
+
+%region_body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128] get-tuple-element(%p), index=1
+  %ag = f32[32,128]{1,0} all-gather(%x), channel_id=1, replica_groups={{0,1,2,3}}, dimensions={0}
+  %w = f32[128,128]{1,0} constant({...})
+  %y = f32[32,128]{1,0} dot(%ag, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %rs = f32[8,128]{1,0} reduce-scatter(%y), channel_id=1, replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%region_body
+  ROOT %t = (s32[], f32[8,128]) tuple(%i, %rs)
+}
+
+%cond (p: (s32[], f32[8,128])) -> pred[] {
+  %p = (s32[], f32[8,128]) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+ENTRY %main.1 (a: f32[8,128]) -> f32[8,128] {
+  %a = f32[8,128] parameter(0)
+  %init = (s32[], f32[8,128]) tuple(%a, %a)
+  %w1 = (s32[], f32[8,128]) while(%init), condition=%cond, body=%region_body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,128] get-tuple-element(%w1), index=1
+}
+"""
+
+
+def test_parser_loop_multiplier_and_collectives():
+    out = analyze_hlo(SYNTH, 4)
+    # dot per iter: 2 * (32*128) * 128 = 1,048,576 flops; x10 loops
+    assert out["flops"] == 10 * 2 * 32 * 128 * 128
+    # all-gather out 32*128*4B=16384: wire = 16384*3/4; x10
+    assert abs(out["collectives"]["all-gather"] - 10 * 16384 * 0.75) < 1
+    # reduce-scatter out 8*128*4=4096: wire = 4096*3; x10
+    assert abs(out["collectives"]["reduce-scatter"] - 10 * 4096 * 3) < 1
+    assert out["unknown_trip_loops"] == 0
+
+
+def test_parser_on_real_compiled_module():
+    """Compile a scanned 2x matmul and check the trip-count multiplication
+    against the analytic dot count."""
+    w = jnp.zeros((64, 64))
+
+    def f(x, ws):
+        def body(c, w_):
+            return c @ w_, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jnp.zeros((32, 64))
+    ws = jnp.zeros((6, 64, 64))
+    compiled = jax.jit(f).lower(x, ws).compile()
+    out = analyze_hlo(compiled.as_text(), 1)
+    expect = 6 * 2 * 32 * 64 * 64
+    assert abs(out["flops"] - expect) / expect < 0.05, out["flops"]
+
+
+def test_roofline_terms_and_dominance():
+    rec = {
+        "mesh": {"data": 16, "model": 16},
+        "kind": "train", "shape": "train_4k",
+        "active_params": 3_000_000_000,
+        "flops": 1e14, "bytes_accessed": 1e12,
+        "collective_bytes": {"total": 1e11},
+        "hlo_flops": 1e14, "hlo_bytes": 8e11,
+        "hlo_collective_wire_bytes": 2e11,
+    }
+    t = roofline_terms(rec, HW_V5E)
+    assert t["compute_s"] > 0 and t["memory_s"] > 0 and t["collective_s"] > 0
+    assert t["dominant"] == "collective"      # 2e11/50e9 = 4s dominates
+    mf = model_flops("train", 3e9, 256, 4096)
+    assert t["model_flops"] == mf
+    assert 0 < t["useful_ratio"]
+
+
+def test_model_flops_kinds():
+    assert model_flops("train", 1e9, 8, 128) == 6e9 * 8 * 128
+    assert model_flops("prefill", 1e9, 8, 128) == 2e9 * 8 * 128
+    assert model_flops("decode", 1e9, 8, 128) == 2e9 * 8

@@ -1,0 +1,110 @@
+"""CountSketch coordination (beyond-paper): estimator quality by regime,
+linearity, and end-to-end convergence on the paper's linreg study."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SparsifierConfig
+from repro.core import select, sketch, sparsify
+
+
+def test_sketch_linearity():
+    j, rows, width = 5000, 3, 512
+    a = jax.random.normal(jax.random.PRNGKey(0), (j,))
+    b = jax.random.normal(jax.random.PRNGKey(1), (j,))
+    s1 = sketch.encode(a, rows, width) + sketch.encode(b, rows, width)
+    s2 = sketch.encode(a + b, rows, width)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_sketch_recall_powerlaw_vs_flat():
+    """Heavy-tailed vectors: high top-k recall; flat vectors: poor — the
+    regime boundary documented in EXPERIMENTS.md §1."""
+    rng = np.random.default_rng(0)
+    j, k, width = 40_000, 40, 8192
+    perm = rng.permutation(j)
+
+    def recall(x):
+        x = jnp.asarray(x, jnp.float32)
+        true = set(np.asarray(select.topk_indices(x, k)).tolist())
+        est = sketch.estimate(sketch.encode(x, 5, width), j)
+        got = set(np.asarray(select.topk_indices(est, k)).tolist())
+        return len(true & got) / k
+
+    power = rng.normal(size=j) * (np.arange(1, j + 1) ** -0.7)[perm]
+    flat = rng.normal(size=j)
+    assert recall(power) > 0.9
+    assert recall(flat) < 0.5
+
+
+def test_sketchtopk_round_shared_mask_and_ef():
+    cfg = SparsifierConfig(kind="sketchtopk", sparsity=0.1, sketch_width=512)
+    j, n = 400, 6
+    key = jax.random.PRNGKey(2)
+    grads = [jax.random.normal(jax.random.fold_in(key, i), (j,))
+             for i in range(n)]
+    states = [sparsify.init_state(cfg, j) for _ in range(n)]
+    g_agg, new_states = sparsify.sparsified_round(cfg, states, grads)
+    k = sparsify.resolve_k(cfg, j)
+    assert int(jnp.sum(g_agg != 0)) <= k          # ONE shared mask
+    # EF invariant per worker
+    for g, st in zip(grads, new_states):
+        a = g  # first round: err was 0
+        sel = a - st["err"]
+        assert int(jnp.sum(sel != 0)) <= k
+
+
+def test_sketchtopk_converges_linreg():
+    from repro.data.synthetic import linreg_dataset
+    xs, ys, w_star = linreg_dataset(10, 200, 50, seed=1)
+    grad_all = jax.jit(lambda w: jnp.stack(
+        [(X.T @ (X @ w - y)) / X.shape[0] for X, y in zip(xs, ys)]))
+    cfg = SparsifierConfig(kind="sketchtopk", sparsity=0.5, sketch_width=256)
+    states = sparsify.stack_states(
+        [sparsify.init_state(cfg, 50) for _ in range(10)])
+    rf = sparsify.make_round_fn(cfg, 10)
+    w = jnp.zeros((50,))
+    for _ in range(1200):
+        g, states = rf(states, grad_all(w))
+        w = w - 1e-2 * g
+    assert float(jnp.linalg.norm(w - w_star)) < 5e-3
+
+
+def test_two_stage_topk_exact():
+    import repro.core.select as S
+    x = jax.random.normal(jax.random.PRNGKey(3), (100_000,))
+    for k in (1, 64, 1000):
+        ref = np.sort(np.asarray(jax.lax.top_k(jnp.abs(x), k)[1]))
+        old = S._ROW_LIMIT
+        S._ROW_LIMIT = 1 << 13
+        try:
+            got = np.sort(np.asarray(S._two_stage_topk(jnp.abs(x), k)))
+        finally:
+            S._ROW_LIMIT = old
+        assert (ref == got).all()
+
+
+def test_regtopk_sparse_state_bit_identical():
+    import dataclasses
+    cfgd = SparsifierConfig(kind="regtopk", sparsity=0.02, mu=0.5,
+                            state_format="dense")
+    cfgs = dataclasses.replace(cfgd, state_format="sparse")
+    j = 20_000
+    sd = sparsify.init_state(cfgd, j)
+    ss = sparsify.init_state(cfgs, j)
+    key = jax.random.PRNGKey(4)
+    for t in range(4):
+        g = jax.random.normal(jax.random.fold_in(key, t), (j,))
+        od = sparsify.compress(cfgd, sd, g, omega=0.1)
+        os_ = sparsify.compress(cfgs, ss, g, omega=0.1)
+        assert (od.mask == os_.mask).all(), t
+        np.testing.assert_array_equal(np.asarray(od.ghat),
+                                      np.asarray(os_.ghat))
+        agg = 0.1 * od.ghat
+        sd = sparsify.observe_aggregate(cfgd, od.state, agg)
+        ss = sparsify.observe_aggregate(cfgs, os_.state, agg)
+    # state sizes: dense 4J + scalars, sparse J + 3k
+    dsize = sum(x.size for x in jax.tree_util.tree_leaves(sd))
+    ssize = sum(x.size for x in jax.tree_util.tree_leaves(ss))
+    assert ssize < dsize / 3
