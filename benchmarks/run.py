@@ -1,17 +1,25 @@
 """Benchmark harness — one entry per paper table/figure plus system
 benchmarks. Prints ``name,us_per_call,derived`` CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,kernels,...]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--json] \
+      [--only fig1,kernels,compress,...]
+
+``--json`` additionally persists machine-readable results for benches
+that support it (currently ``compress`` -> BENCH_compress.json), so the
+perf trajectory of the hot path is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+WRITE_JSON = False
 
 
 def _row(name, us, derived):
@@ -110,6 +118,67 @@ def bench_kernels(quick):
          "interpret" if jax.default_backend() != "tpu" else "native")
 
 
+def bench_compress(quick):
+    """Reference vs fused two-sweep compress on the production
+    (comm_mode="sparse") REGTOP-k path. us/call = min over repeats
+    (microbenchmark convention); sweeps/step from the traced-shape audit
+    (DESIGN.md §2.2). --json -> BENCH_compress.json."""
+    import dataclasses
+    from repro.configs.base import SparsifierConfig
+    from repro.core import sparsify
+    from repro.kernels.compress.audit import audit_fn
+
+    sizes = [1 << 20] if quick else [1 << 20, 1 << 24]
+    repeats = 3 if quick else 5
+    rows = []
+    for j in sizes:
+        cfg_ref = SparsifierConfig(kind="regtopk", sparsity=0.001, mu=0.5,
+                                   selector="exact", comm_mode="sparse")
+        cfg_fus = dataclasses.replace(cfg_ref, pipeline="fused")
+        g = jax.random.normal(jax.random.PRNGKey(0), (j,), jnp.float32)
+        us = {}
+        for label, cfg in (("reference", cfg_ref), ("fused", cfg_fus)):
+            state = sparsify.init_state(cfg, j)
+
+            def f(state, g):
+                o = sparsify.compress(cfg, state, g, omega=1 / 16)
+                outs = [o.mask, o.state, o.values, o.indices]
+                if o.ghat is not None:
+                    outs.append(o.ghat)
+                return tuple(jax.tree_util.tree_leaves(outs))
+
+            fn = jax.jit(f)
+            jax.block_until_ready(fn(state, g))       # compile + warm
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(state, g))
+                best = min(best, time.perf_counter() - t0)
+            aud = audit_fn(f, state, g, j=j)
+            us[label] = best * 1e6
+            rows.append({
+                "name": f"compress_regtopk_{label}_J{j}",
+                "j": j,
+                "pipeline": label,
+                "us_per_call": round(best * 1e6, 1),
+                "sweeps_per_step": aud["traversals"],
+                "read_units": round(aud["read_units"], 2),
+            })
+            _row(f"compress_regtopk_{label}_J{j}", best * 1e6,
+                 f"sweeps={aud['traversals']}")
+        speedup = us["reference"] / us["fused"]
+        rows.append({"name": f"compress_speedup_J{j}", "j": j,
+                     "speedup": round(speedup, 2)})
+        _row(f"compress_speedup_J{j}", 0.0, f"{speedup:.2f}x")
+    if WRITE_JSON:
+        payload = {"bench": "compress", "backend": jax.default_backend(),
+                   "sparsity": 0.001, "comm_mode": "sparse",
+                   "rows": rows}
+        with open("BENCH_compress.json", "w") as fh:
+            json.dump(payload, fh, indent=2)
+            fh.write("\n")
+
+
 def bench_train_step(quick):
     """Smoke-scale distributed train step wall time per sparsifier."""
     from repro.configs.base import (OptimizerConfig, RunConfig, SHAPES,
@@ -120,9 +189,11 @@ def bench_train_step(quick):
                                   init_train_state)
     cfg = reduced_config(get_config("stablelm-3b"))
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    for kind in ("none", "topk", "regtopk"):
+    for kind, pipeline in (("none", "reference"), ("topk", "reference"),
+                           ("regtopk", "reference"), ("regtopk", "fused")):
         run = RunConfig(model=cfg, shape=SHAPES["train_4k"],
-                        sparsifier=SparsifierConfig(kind=kind, sparsity=0.01),
+                        sparsifier=SparsifierConfig(kind=kind, sparsity=0.01,
+                                                    pipeline=pipeline),
                         optimizer=OptimizerConfig(kind="adam", lr=1e-3))
         pal = build_parallel(mesh)
         with mesh:
@@ -141,7 +212,8 @@ def bench_train_step(quick):
                 params, opt_state, ef_state, m = jstep(
                     params, opt_state, ef_state, batch, jax.random.PRNGKey(t))
             jax.block_until_ready(params)
-            _row(f"train_step_smoke_{kind}", (time.time() - t0) * 1e6 / n,
+            tag = kind if pipeline == "reference" else f"{kind}_{pipeline}"
+            _row(f"train_step_smoke_{tag}", (time.time() - t0) * 1e6 / n,
                  f"loss={float(m['loss']):.3f}")
 
 
@@ -151,16 +223,24 @@ BENCHES = {
     "fig3": bench_fig3_nn,
     "comm": bench_comm_volume,
     "kernels": bench_kernels,
+    "compress": bench_compress,
     "train_step": bench_train_step,
 }
 
 
 def main() -> None:
+    global WRITE_JSON
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="persist machine-readable results (BENCH_*.json)")
     ap.add_argument("--only", default="")
     args = ap.parse_args()
+    WRITE_JSON = args.json
     names = args.only.split(",") if args.only else list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown bench(es) {unknown}; known: {sorted(BENCHES)}")
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n](args.quick)

@@ -154,6 +154,20 @@ class SparsifierConfig:
     # (a_prev, g_agg_prev needed ONLY where s_prev=1 — Algorithm 1 line 5),
     # cutting state memory from 4J fp32 to J + O(k). Bit-identical updates.
     state_format: str = "dense"   # dense | sparse
+    # compression execution pipeline (DESIGN.md §2.2):
+    # - "reference": dense paper-literal math + lax.top_k selection. The
+    #   parity oracle; O(J log k) selection and ~8 O(J) HBM passes per step.
+    # - "fused": two-sweep pipeline (kernels/compress). Sweep 1 reads the
+    #   dense inputs exactly once and emits (a, score); sweep 2 compacts
+    #   fixed-k (values, indices) without a full-array sort. Error-feedback
+    #   state is implicit (err = a_prev * (1 - s_prev)), the selection mask
+    #   is stored as uint8, and the posterior state is O(k). Exact-top-k
+    #   semantics, bit-identical support vs "reference" with selector="exact".
+    #   Supported for kind in {topk, dgc, regtopk} with selector="exact" and
+    #   ef_dtype="float32" (histogram selectors over-select by design and the
+    #   sweeps accumulate in fp32); unsupported configs fall back to the
+    #   reference path.
+    pipeline: str = "reference"   # reference | fused
 
 
 @dataclass(frozen=True)

@@ -63,12 +63,15 @@ def sparse_allgather_combine(values: jnp.ndarray, indices: jnp.ndarray,
 
 
 def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
-                  axes: AxisNames, key=None,
-                  use_fused_kernel: bool = False):
+                  axes: AxisNames, key=None):
     """Full per-step gradient sync for one worker shard (inside shard_map).
 
     Returns (g_agg, new_state). `g` is this rank's flat local gradient
-    (fp32); `axes` are the data-parallel mesh axis name(s).
+    (fp32); `axes` are the data-parallel mesh axis name(s). The
+    compression pipeline (reference vs fused two-sweep) is selected by
+    cfg.pipeline; with pipeline="fused" + comm_mode="sparse" the dense
+    ghat is never materialized and the packed (values, indices) feed the
+    all-gather directly — zero extra O(J) sweeps for the sparse path.
     """
     if cfg.kind == "none":
         g_agg = dense_allreduce(g.astype(jnp.dtype(cfg.ef_dtype)), axes)
@@ -85,13 +88,12 @@ def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     if cfg.kind == "sketchtopk":
         return _sketch_sync(cfg, state, g, axes)
 
-    out = sparsify.compress(cfg, state, g, key=key, omega=omega,
-                            use_fused_kernel=use_fused_kernel)
+    out = sparsify.compress(cfg, state, g, key=key, omega=omega)
     if cfg.comm_mode == "sparse" and out.values is not None:
         g_agg = sparse_allgather_combine(out.values, out.indices,
                                          g.shape[0], axes)
     else:
-        g_agg = simulate_allreduce(out.ghat, axes)
+        g_agg = simulate_allreduce(sparsify.dense_ghat(out, g.shape[0]), axes)
     new_state = sparsify.observe_aggregate(cfg, out.state, g_agg)
     return g_agg, new_state
 

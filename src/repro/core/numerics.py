@@ -1,0 +1,20 @@
+"""Shared numeric conventions.
+
+The fused pipeline's parity with the reference path depends on both
+sides using bit-identical formulas; anything used by more than one of
+{core/sparsify, kernels/compress} lives here so the convention can only
+be changed in one place.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+TINY = 1e-12
+
+
+def safe_denom(denom, tiny: float = TINY):
+    """Zero-safe divisor: |denom| <= tiny is replaced by
+    sign(denom)*tiny + tiny (positive for denom >= 0, the REGTOP-k
+    Algorithm 1 line 5 convention)."""
+    return jnp.where(jnp.abs(denom) > tiny, denom,
+                     jnp.sign(denom) * tiny + tiny)

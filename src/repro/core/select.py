@@ -64,6 +64,17 @@ def topk_mask_exact(score: jnp.ndarray, k: int) -> jnp.ndarray:
     return bigvec.mask_from_indices(j, idx, score.dtype)
 
 
+def hist_tail_bin(hist: jnp.ndarray, target) -> jnp.ndarray:
+    """Largest bin index b whose tail count (entries in bins >= b) is
+    >= target; -1 if none. Shared by every histogram selector (linear
+    and bit-pattern) so the count(>= tau) >= target guarantee has one
+    implementation."""
+    bins = hist.shape[0]
+    tail = jnp.cumsum(hist[::-1])[::-1]
+    ok = tail >= target
+    return jnp.max(jnp.where(ok, jnp.arange(bins), -1))
+
+
 def histogram_threshold(score: jnp.ndarray, k: int, bins: int = HIST_BINS) -> jnp.ndarray:
     """k-th largest |score| estimated via a linear magnitude histogram.
 
@@ -77,11 +88,8 @@ def histogram_threshold(score: jnp.ndarray, k: int, bins: int = HIST_BINS) -> jn
     scaled = jnp.abs(score) / amax                       # in [0, 1]
     bidx = jnp.clip((scaled * bins).astype(jnp.int32), 0, bins - 1)
     hist = jnp.zeros((bins,), jnp.int32).at[bidx].add(1)
-    # count of entries with bin index >= b, for each b
-    tail = jnp.cumsum(hist[::-1])[::-1]
     # largest bin b with tail count >= k  -> threshold at that bin's lower edge
-    ok = tail >= k
-    b = jnp.max(jnp.where(ok, jnp.arange(bins), -1))
+    b = hist_tail_bin(hist, k)
     tau = jnp.where(b >= 0, b.astype(score.dtype) / bins * amax, 0.0)
     return tau
 

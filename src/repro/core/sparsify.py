@@ -19,6 +19,19 @@ REGTOP-k (Algorithm 1 of the paper):
     ghat^t   = s^t * a^t
     eps^{t+1}= a^t - ghat^t
 with plain TOP-k at t=0. mu -> 0 recovers TOP-k exactly.
+
+Execution pipelines (cfg.pipeline, DESIGN.md §2.2):
+
+- "reference": the dense math above, selection via cfg.selector. Oracle.
+- "fused": two-sweep pipeline (repro.kernels.compress) for kind in
+  {topk, dgc, regtopk}. Error feedback is implicit — the state stores
+  (a_prev, s_prev) and reconstructs eps^{t+1} = a^t * (1 - s^t)
+  in-register — the mask is uint8, and REGTOP-k's posterior is O(k)
+  (idx_prev, a_prev_sel, g_prev_sel), since Algorithm 1 line 5 reads
+  a^{t-1} and g^{t-1} only at the support of s^{t-1}. Selected support
+  is bit-identical to "reference" with selector="exact"; in
+  comm_mode="sparse" no dense ghat is materialized (CompressOut.ghat is
+  None and the packed (values, indices) drive the all-gather).
 """
 from __future__ import annotations
 
@@ -30,17 +43,18 @@ import jax.numpy as jnp
 
 from repro.configs.base import SparsifierConfig
 from repro.core import select
-
-_TINY = 1e-12
+from repro.core.numerics import safe_denom
 
 
 @dataclass
 class CompressOut:
-    ghat: jnp.ndarray        # dense sparsified gradient (J,)
-    mask: jnp.ndarray        # 0/1 selection mask (J,)
+    ghat: Optional[jnp.ndarray]  # dense sparsified gradient (J,); None for
+                                 # pipeline="fused" + comm_mode="sparse"
+                                 # (reconstructible from values/indices)
+    mask: jnp.ndarray        # 0/1 selection mask (J,); uint8 when fused
     state: Any               # updated state (pre-aggregation)
     values: Optional[jnp.ndarray] = None  # (k,) packed values (exact selector)
-    indices: Optional[jnp.ndarray] = None  # (k,) int32 indices
+    indices: Optional[jnp.ndarray] = None  # (k,) uint32 indices
 
 
 def resolve_k(cfg: SparsifierConfig, j: int) -> int:
@@ -53,9 +67,36 @@ def resolve_k(cfg: SparsifierConfig, j: int) -> int:
 # State
 # ---------------------------------------------------------------------------
 
+def _fused_supported(cfg: SparsifierConfig) -> bool:
+    # The fused pipeline implements exact-top-k selection over fp32
+    # accumulators. Configs it cannot reproduce keep the reference path:
+    # - selector != "exact": histogram selectors over-select by design;
+    # - ef_dtype != float32: the reference accumulates in ef_dtype, so
+    #   e.g. bf16 error feedback would diverge from fp32 sweeps.
+    return (cfg.pipeline == "fused"
+            and cfg.kind in ("topk", "dgc", "regtopk")
+            and cfg.selector == "exact"
+            and jnp.dtype(cfg.ef_dtype) == jnp.float32)
+
+
 def init_state(cfg: SparsifierConfig, j: int) -> dict:
     dt = jnp.dtype(cfg.ef_dtype)
     z = jnp.zeros((j,), dt)
+    if _fused_supported(cfg):
+        # implicit error feedback: err = a_prev * (1 - s_prev)
+        st = {
+            "a_prev": z,
+            "s_prev": jnp.zeros((j,), jnp.uint8),
+            "step": jnp.zeros((), jnp.int32),
+        }
+        if cfg.kind == "dgc":
+            st["mom"] = z
+        if cfg.kind == "regtopk":
+            k = resolve_k(cfg, j)
+            st["idx_prev"] = jnp.zeros((k,), jnp.uint32)
+            st["a_prev_sel"] = jnp.zeros((k,), dt)
+            st["g_prev_sel"] = jnp.zeros((k,), dt)
+        return st
     if cfg.kind in ("none", "globaltopk"):
         return {"step": jnp.zeros((), jnp.int32)}
     if cfg.kind in ("topk", "randk", "thresholdk", "sketchtopk"):
@@ -98,13 +139,20 @@ def _mask_from(score: jnp.ndarray, k: int, method: str) -> jnp.ndarray:
 
 
 def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
-             key: Optional[jax.Array] = None, omega: float = 1.0,
-             use_fused_kernel: bool = False) -> CompressOut:
-    """Sparsify one worker's flat gradient. omega = this worker's weight w_n."""
+             key: Optional[jax.Array] = None, omega: float = 1.0) -> CompressOut:
+    """Sparsify one worker's flat gradient. omega = this worker's weight w_n.
+
+    cfg.pipeline selects the execution path: "reference" (dense math,
+    cfg.selector) or "fused" (two-sweep kernels/compress pipeline, exact
+    selection; kinds without a fused implementation use the reference path).
+    """
     j = g.shape[0]
     k = resolve_k(cfg, j)
     dt = jnp.dtype(cfg.ef_dtype)
     g = g.astype(dt)
+
+    if _fused_supported(cfg):
+        return _compress_fused(cfg, state, g, k, omega)
 
     if cfg.kind == "none":
         ones = jnp.ones((j,), dt)
@@ -128,11 +176,16 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     if cfg.kind == "randk":
         a = state["err"] + g
         assert key is not None, "randk needs a PRNG key"
-        idx = jax.random.choice(key, j, (k,), replace=False).astype(jnp.int32)
-        mask = jnp.zeros((j,), dt).at[idx].set(1.0)
+        # uint32 indices + bigvec indexing (raw int32 advanced indexing
+        # overflows for J > 2^31). NB: the sampling itself
+        # (jax.random.choice) is still int32-bound upstream; full
+        # J > 2^31 randk needs a custom sampler.
+        from repro.core import bigvec
+        idx = jax.random.choice(key, j, (k,), replace=False).astype(jnp.uint32)
+        mask = bigvec.mask_from_indices(j, idx, dt)
         ghat = mask * a
         return CompressOut(ghat, mask, {"err": a - ghat, "step": state["step"] + 1},
-                           a[idx], idx)
+                           bigvec.gather(a, idx), idx)
 
     if cfg.kind == "thresholdk":
         # Strom'15: fixed threshold = k-th magnitude of the FIRST step, reused.
@@ -156,12 +209,9 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     if cfg.kind == "regtopk":
         if cfg.state_format == "sparse":
             return _compress_regtopk_sparse(cfg, state, g, k, omega)
-        if use_fused_kernel:
-            return _compress_regtopk_fused(cfg, state, g, k, omega)
         a = state["err"] + g
         # posterior distortion (Algorithm 1, line 5); safe-divide where a ~ 0
-        denom = omega * a
-        safe = jnp.where(jnp.abs(denom) > _TINY, denom, jnp.sign(denom) * _TINY + _TINY)
+        safe = safe_denom(omega * a)
         delta_sent = (state["g_agg_prev"] - omega * state["a_prev"]) / safe
         delta = state["s_prev"] * delta_sent + cfg.Q * (1.0 - state["s_prev"])
         reg = jnp.tanh(jnp.abs(1.0 + delta) / cfg.mu)
@@ -200,9 +250,7 @@ def _compress_regtopk_sparse(cfg: SparsifierConfig, state: dict,
     idx_p = state["idx_prev"]
     from repro.core import bigvec as _bv
     a_sel = _bv.gather(a, idx_p)
-    denom = omega * a_sel
-    safe = jnp.where(jnp.abs(denom) > _TINY, denom,
-                     jnp.sign(denom) * _TINY + _TINY)
+    safe = safe_denom(omega * a_sel)
     delta_sel = (state["g_prev_sel"] - omega * state["a_prev_sel"]) / safe
     reg_sel = jnp.tanh(jnp.abs(1.0 + delta_sel) / cfg.mu)
     reg_q = jnp.tanh(jnp.abs(1.0 + cfg.Q) / cfg.mu).astype(dt)
@@ -225,35 +273,65 @@ def _compress_regtopk_sparse(cfg: SparsifierConfig, state: dict,
     return CompressOut(ghat, mask, new, vals, idx)
 
 
-def _compress_regtopk_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
-                            k: int, omega: float) -> CompressOut:
-    """REGTOP-k via the fused Pallas error-feedback kernel (kernels/fused_ef)."""
-    from repro.kernels.fused_ef.ops import fused_regtopk_scores, fused_apply_mask
-    a, score = fused_regtopk_scores(
-        g, state["err"], state["a_prev"], state["g_agg_prev"], state["s_prev"],
-        omega=omega, mu=cfg.mu, Q=cfg.Q)
-    score = jnp.where(state["step"] == 0, a, score)
-    mask = _mask_from(score, k, cfg.selector)
-    ghat, err = fused_apply_mask(a, mask)
-    new = {"err": err, "a_prev": a, "s_prev": mask,
-           "g_agg_prev": state["g_agg_prev"], "step": state["step"] + 1}
-    vals = idx = None
-    if cfg.selector == "exact":
-        vals, idx = _pack(a, score, k)
-    return CompressOut(ghat, mask, new, vals, idx)
+def _compress_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
+                    k: int, omega: float) -> CompressOut:
+    """Two-sweep fused pipeline (repro.kernels.compress, DESIGN.md §2.2).
+
+    Exact top-k semantics (reference selector="exact" parity). In
+    comm_mode="sparse" no dense ghat is materialized — the packed
+    (values, indices) drive the sparse all-gather and CompressOut.ghat
+    is None.
+    """
+    from repro.core import bigvec
+    from repro.kernels.compress import ops as cops
+    kwargs = {}
+    if cfg.kind == "regtopk":
+        kwargs = dict(idx_prev=state["idx_prev"],
+                      a_prev_sel=state["a_prev_sel"].astype(jnp.float32),
+                      g_prev_sel=state["g_prev_sel"].astype(jnp.float32))
+    if cfg.kind == "dgc":
+        kwargs["mom"] = state["mom"]
+    out = cops.fused_compress_arrays(
+        cfg.kind, g, state["a_prev"], state["s_prev"], state["step"],
+        k=k, omega=omega, mu=cfg.mu, Q=cfg.Q, momentum=cfg.momentum,
+        want_ghat=cfg.comm_mode != "sparse", **kwargs)
+    dt = jnp.dtype(cfg.ef_dtype)
+    new = {"a_prev": out["a"].astype(dt), "s_prev": out["mask8"],
+           "step": state["step"] + 1}
+    if cfg.kind == "dgc":
+        # momentum masking (mom * (1 - mask)) as an O(k) scatter
+        new["mom"] = bigvec.scatter_set(out["mom"].astype(dt),
+                                        out["indices"], 0.0)
+    if cfg.kind == "regtopk":
+        new["idx_prev"] = out["indices"]
+        new["a_prev_sel"] = out["values"].astype(dt)
+        new["g_prev_sel"] = jnp.zeros_like(state["g_prev_sel"])  # observe_aggregate
+    return CompressOut(out["ghat"], out["mask8"], new,
+                       out["values"], out["indices"])
 
 
 def observe_aggregate(cfg: SparsifierConfig, state: dict, g_agg: jnp.ndarray) -> dict:
     """Store the aggregated gradient g^t the server 'broadcasts' (footnote 1)."""
     if cfg.kind == "regtopk":
         state = dict(state)
-        if cfg.state_format == "sparse":
+        if _fused_supported(cfg) or cfg.state_format == "sparse":
+            # O(k) posterior: g^{t-1} is read only at the support of s^{t-1}
             from repro.core import bigvec
             state["g_prev_sel"] = bigvec.gather(g_agg, state["idx_prev"]).astype(
                 jnp.dtype(cfg.ef_dtype))
         else:
             state["g_agg_prev"] = g_agg.astype(jnp.dtype(cfg.ef_dtype))
     return state
+
+
+def dense_ghat(out: CompressOut, j: int) -> jnp.ndarray:
+    """Dense sparsified gradient from a CompressOut, reconstructing from the
+    packed (values, indices) when the fused sparse-comm path skipped it."""
+    if out.ghat is not None:
+        return out.ghat
+    from repro.core import bigvec
+    return bigvec.scatter_set(jnp.zeros((j,), out.values.dtype),
+                              out.indices, out.values)
 
 
 # ---------------------------------------------------------------------------
@@ -290,7 +368,7 @@ def make_round_fn(cfg: SparsifierConfig, n_workers: int):
 
     def one(state, g):
         out = compress(cfg, state, g, omega=omega)
-        return out.ghat, out.state
+        return dense_ghat(out, g.shape[0]), out.state
 
     def round_fn(states, grads):
         ghats, new_states = jax.vmap(one)(states, grads)
@@ -343,6 +421,6 @@ def sparsified_round(cfg: SparsifierConfig, states: list, grads: list,
     for i in range(n):
         ki = None if key is None else jax.random.fold_in(key, i)
         outs.append(compress(cfg, states[i], grads[i], key=ki, omega=omegas[i]))
-    g_agg = sum(w * o.ghat for w, o in zip(omegas, outs))
+    g_agg = sum(w * dense_ghat(o, j) for w, o in zip(omegas, outs))
     new_states = [observe_aggregate(cfg, o.state, g_agg) for o in outs]
     return g_agg, new_states

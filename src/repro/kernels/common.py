@@ -1,0 +1,11 @@
+"""Shared kernel-dispatch helpers."""
+from __future__ import annotations
+
+import jax
+
+
+def auto_interpret() -> bool:
+    """Pallas interpret-mode auto-selection: native on TPU, interpreted
+    elsewhere. The single source of truth for backend detection across
+    the kernel packages."""
+    return jax.default_backend() != "tpu"

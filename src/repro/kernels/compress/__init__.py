@@ -1,0 +1,38 @@
+"""Two-sweep fused compression pipeline (DESIGN.md §2.2).
+
+Executes the entire TOP-k / DGC / REGTOP-k compression step in two
+O(J) sweeps over the flat gradient instead of the ~8 HBM passes plus two
+O(J log k) ``lax.top_k`` sorts the reference path performs:
+
+- **Sweep 1** reads the dense inputs (g, a_prev, s_prev [, mom]) exactly
+  once and emits ``a`` (the error-compensated gradient) and the selection
+  ``score``. Error feedback is *implicit*: ``err = a_prev * (1 - s_prev)``
+  (the EF invariant), so no dense ``err`` vector is ever read or written.
+  The Pallas kernel additionally accumulates the bit-pattern histogram
+  the TPU threshold is derived from, plus per-block amax (a diagnostic
+  witness exercised by the kernel tests; the threshold itself needs no
+  amax, since bit-pattern bins are scale-free).
+- **Sweep 2** compacts per-block top-candidate (value, index) slots; a
+  small O(candidates) trim then selects the exact top-k with
+  ``lax.top_k`` tie-break semantics (value desc, index asc). REGTOP-k's
+  O(k) posterior corrections (Algorithm 1 line 5) are applied in
+  candidate space, never densely.
+
+Execution strategies (auto-selected from the JAX backend by ``ops``):
+
+- ``pallas``:  native Pallas kernels (TPU). Threshold from the
+  accumulated bit-pattern histogram; compaction via per-block slots.
+- ``xla``:     batched-row ``lax.top_k`` compaction (CPU/GPU). Same
+  candidate contract, no interpret-mode overhead.
+- ``pallas_interpret``: the Pallas kernels under ``interpret=True`` —
+  used by tests to validate the kernel bodies on CPU.
+
+Both strategies verify exactness (per-block overflow + boundary-tie
+ambiguity) and fall back to a full ``lax.top_k`` under ``lax.cond`` on
+the rare adversarial inputs where the compacted candidate set cannot be
+proven to cover the true top-k.
+"""
+from repro.kernels.compress.ops import (  # noqa: F401
+    fused_compress_arrays,
+    sweep_plan,
+)

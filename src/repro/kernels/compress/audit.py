@@ -1,0 +1,174 @@
+"""Traced-shape audit: count O(J) HBM traversals of a jitted function.
+
+Walks the jaxpr of a function and models XLA's loop fusion to estimate
+how many full J-sized streaming passes over HBM the computation
+performs. Used by the sweep-count regression test and the compression
+benchmark, so the two-sweep pipeline's pass count is measured, not
+asserted by hand.
+
+Model (intentionally simple, deterministic, and version-stable):
+
+- *Elementwise* equations (adds, multiplies, selects, converts, pads,
+  concats, broadcasts, ...) over big operands fuse into connected
+  groups; one group = one streaming traversal, regardless of how many
+  big arrays it reads or writes (``traversals``), with the bytes it
+  touches accounted separately (``read_units`` — J-fp32-equivalents of
+  distinct big group inputs).
+- *Barrier* equations — sort/top_k, reductions, cumsums, scans,
+  pallas_call — each count as one traversal and read their big operands.
+- Scatter equations with small (O(k)) updates and gather equations with
+  small outputs are O(k) random accesses, not streaming passes.
+- ``cond`` contributes the *minimum* over its branches: the fused
+  pipeline's exact-top-k fallback branch exists for adversarial inputs
+  only, and the audit measures the steady-state path.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+import jax
+import numpy as np
+
+_ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "pow", "rem", "and", "or",
+    "xor", "not", "neg", "sign", "abs", "exp", "log", "tanh", "sqrt",
+    "rsqrt", "integer_pow", "select_n", "convert_element_type", "clamp",
+    "eq", "ne", "ge", "gt", "le", "lt", "stop_gradient", "pad",
+    "concatenate", "broadcast_in_dim", "iota", "bitcast_convert_type",
+    "shift_right_logical", "shift_left", "is_finite", "square", "copy",
+    "nextafter", "floor", "ceil", "round",
+}
+_FREE = {"reshape", "squeeze", "expand_dims", "transpose", "rev",
+         "slice", "dynamic_slice"}
+_BARRIERS = {
+    "sort", "top_k", "approx_top_k", "reduce_sum", "reduce_max",
+    "reduce_min", "reduce_prod", "reduce_and", "reduce_or", "argmax",
+    "argmin", "cumsum", "cumlogsumexp", "cummax", "cummin", "cumprod",
+    "scan", "while", "pallas_call", "reduce_precision", "clz",
+}
+
+
+def _size(var) -> int:
+    try:
+        return int(np.prod(var.aval.shape)) if var.aval.shape else 1
+    except Exception:
+        return 1
+
+
+def _bytes(var) -> int:
+    try:
+        return _size(var) * var.aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+class _UnionFind:
+    def __init__(self):
+        self.parent = {}
+
+    def find(self, x):
+        self.parent.setdefault(x, x)
+        while self.parent[x] != x:
+            self.parent[x] = self.parent[self.parent[x]]
+            x = self.parent[x]
+        return x
+
+    def union(self, a, b):
+        ra, rb = self.find(a), self.find(b)
+        if ra != rb:
+            self.parent[rb] = ra
+
+
+def audit_jaxpr(jaxpr, j: int, unit_bytes: int = 4) -> dict:
+    """Count traversals/read-units of a ClosedJaxpr for threshold size j.
+
+    Returns {"traversals": int, "read_units": float} where read_units is
+    big-input bytes / (j * unit_bytes) — J-fp32-equivalents of streamed
+    reads.
+    """
+    big = lambda v: _size(v) >= int(0.9 * j)
+    uf = _UnionFind()
+    group_of_var = {}
+    barrier_count = 0
+    read_bytes = 0
+    produced = set()
+
+    def handle(eqns):
+        nonlocal barrier_count, read_bytes
+        for eqn in eqns:
+            prim = eqn.primitive.name
+            if prim in ("pjit", "closed_call", "custom_jvp_call",
+                        "custom_vjp_call", "custom_vjp_call_jaxpr",
+                        "remat", "checkpoint"):
+                sub = eqn.params.get("jaxpr")
+                if sub is not None:
+                    handle(sub.jaxpr.eqns if hasattr(sub, "jaxpr")
+                           else sub.eqns)
+                continue
+            if prim == "cond":
+                # min over branches (steady-state path; the exact-top-k
+                # fallback branch is adversarial-input-only)
+                results = []
+                for br in eqn.params["branches"]:
+                    results.append(audit_jaxpr(br, j, unit_bytes))
+                best = min(results, key=lambda r: (r["traversals"],
+                                                   r["read_units"]))
+                barrier_count += best["traversals"]
+                read_bytes += best["read_units"] * j * unit_bytes
+                continue
+            big_in = [v for v in eqn.invars
+                      if hasattr(v, "aval") and big(v)]
+            big_out = [v for v in eqn.outvars if big(v)]
+            if not big_in and not big_out:
+                continue
+            if prim in _FREE:
+                # view-ish: propagate group membership through
+                for vo in big_out:
+                    for vi in big_in:
+                        if vi in group_of_var:
+                            group_of_var[vo] = group_of_var[vi]
+                continue
+            if prim == "gather" and not big_out:
+                continue                       # O(k) random reads
+            if prim == "scatter" or prim.startswith("scatter-"):
+                upd = eqn.invars[-1] if eqn.invars else None
+                if upd is not None and not big(upd):
+                    continue                   # O(k) random writes
+                barrier_count += 1
+                read_bytes += sum(_bytes(v) for v in big_in)
+                continue
+            if prim in _ELEMENTWISE:
+                key = ("eqn", id(eqn))
+                uf.find(key)
+                for v in big_in + big_out:
+                    if v in group_of_var:
+                        uf.union(key, group_of_var[v])
+                    group_of_var[v] = key
+                for v in big_out:
+                    produced.add(v)
+                continue
+            # everything else (sorts, reductions, pallas, unknown prims
+            # touching big data) is a barrier traversal
+            barrier_count += 1
+            read_bytes += sum(_bytes(v) for v in big_in)
+
+    handle(jaxpr.jaxpr.eqns)
+
+    # group accounting: each fused elementwise group = 1 traversal that
+    # reads its distinct big external inputs
+    groups = defaultdict(set)
+    for v, key in group_of_var.items():
+        groups[uf.find(key)].add(v)
+    n_groups = len(groups)
+    for root, vars_ in groups.items():
+        for v in vars_:
+            if v not in produced:              # external big input
+                read_bytes += _bytes(v)
+    return {"traversals": barrier_count + n_groups,
+            "read_units": read_bytes / float(j * unit_bytes)}
+
+
+def audit_fn(fn, *args, j: int, **kwargs) -> dict:
+    """Audit a python function by tracing it with jax.make_jaxpr."""
+    jaxpr = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    return audit_jaxpr(jaxpr, j)

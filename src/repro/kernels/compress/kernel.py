@@ -1,0 +1,224 @@
+"""Pallas TPU kernels for the two-sweep fused compression pipeline.
+
+Sweep 1 (``sweep1_pallas``): one VMEM-tiled pass over the dense inputs.
+Per (1, BLOCK) grid step it
+
+- reconstructs error feedback in-register (``err = a_prev * (1 - s_prev)``,
+  the EF invariant — no dense err vector exists in the fused state),
+- emits ``a`` and the selection ``score`` (``a * c`` with ``c`` the
+  off-support REGTOP-k regularizer, 1 for plain TOP-k / DGC / step 0),
+- emits the per-block amax of |score| and accumulates a BINS-bin
+  *bit-pattern* histogram of |score| (top bits of the fp32 encoding —
+  monotone in magnitude, so no separate amax pass is needed to scale the
+  bins; this folds the reference selector's amax + histogram passes into
+  the same sweep). The histogram uses an in-register bincount
+  (scatter-add into the accumulated block) rather than the O(BLOCK*BINS)
+  one-hot compare the ``topk_select`` kernel historically used.
+
+Sweep 2 (``sweep2_pallas``): one pass over ``score``. Per grid step it
+compacts candidate ``(value, index)`` pairs with ``|score| >= tau`` into
+a fixed per-block slot region of width ``MAXPB`` (static base
+``i * MAXPB`` — TPU-friendly: no cross-block running offset), plus the
+per-block candidate count used by the exactness check, and optionally
+the uint8 threshold mask (the fused pipeline skips it and rebuilds the
+exact mask as an O(k) scatter). The O(candidates) exact-k trim runs
+outside the kernel (ops.py).
+
+Scalars (step flag, tau) travel as (1, 1) inputs; static config (mode,
+regularizer constant, bins) is baked into the kernel body.
+
+TPU-native (non-interpret) validation is an open ROADMAP item; tests
+exercise these kernels under ``interpret=True`` on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 128 * 4      # 4096 fp32 elements per grid step, VMEM tile-aligned
+BINS = 2048              # 2^11 bit-pattern bins: exponent + 3 mantissa bits
+_BIN_SHIFT = 20          # fp32 bits >> 20 -> [0, 2047] for non-negative floats
+INVALID_IDX = 0xFFFFFFFF     # python int: kernels must not capture arrays
+
+
+def bit_bin(absx: jnp.ndarray) -> jnp.ndarray:
+    """Histogram bin of a non-negative fp32 value: top 11 bits of its IEEE-754
+    encoding. Monotone: x <= y  =>  bit_bin(x) <= bit_bin(y)."""
+    bits = jax.lax.bitcast_convert_type(absx.astype(jnp.float32), jnp.uint32)
+    return (bits >> _BIN_SHIFT).astype(jnp.int32)
+
+
+def bin_lower_edge(b: jnp.ndarray) -> jnp.ndarray:
+    """Smallest fp32 value mapping to bin b (the bin's lower edge)."""
+    return jax.lax.bitcast_convert_type(
+        (b.astype(jnp.uint32) << _BIN_SHIFT), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Sweep 1
+# ---------------------------------------------------------------------------
+
+def _sweep1_kernel(c_ref, *refs, mode: str, momentum: float, bins: int):
+    # dgc mode threads the momentum buffer; plain mode omits it entirely
+    # (no dead O(J) passthrough streams on the non-dgc path)
+    if mode == "dgc":
+        (g_ref, a_prev_ref, s_prev_ref, mom_ref,
+         a_ref, score_ref, mom_out_ref, amax_ref, hist_ref) = refs
+    else:
+        (g_ref, a_prev_ref, s_prev_ref,
+         a_ref, score_ref, amax_ref, hist_ref) = refs
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    a_prev = a_prev_ref[...].astype(jnp.float32)
+    s_prev = s_prev_ref[...].astype(jnp.float32)
+    err = a_prev * (1.0 - s_prev)              # EF invariant, in-register
+    if mode == "dgc":
+        mom = momentum * mom_ref[...].astype(jnp.float32) + g
+        mom_out_ref[...] = mom
+        a = err + mom
+    else:
+        a = err + g
+    score = a * c_ref[0, 0]
+    a_ref[...] = a
+    score_ref[...] = score
+    keys = jnp.abs(score)
+    amax_ref[0, 0] = jnp.max(keys)
+    # in-register bincount of the block's bit-pattern bins
+    bidx = bit_bin(keys)                                       # (1, BLOCK)
+    hist_ref[...] += jnp.zeros((1, bins), jnp.int32).at[
+        0, bidx[0]].add(1)
+
+
+def sweep1_pallas(g, a_prev, s_prev, c, *, mode: str = "plain",
+                  momentum: float = 0.0, mom=None,
+                  bins: int = BINS, interpret: bool = True):
+    """All dense inputs (J,) with J % BLOCK == 0 (caller pads).
+
+    ``c`` is the (traced) off-support score factor: the REGTOP-k
+    regularizer constant tanh(|1+Q|/mu), or 1 for TOP-k / DGC / step 0.
+    Returns (a, score, mom_out, block_amax (rows,), hist (bins,));
+    mom_out is None unless mode="dgc" (which requires ``mom``).
+    """
+    j = g.shape[0]
+    assert j % BLOCK == 0, j
+    rows = j // BLOCK
+    rs = lambda x: x.astype(jnp.float32).reshape(rows, BLOCK)
+    spec = pl.BlockSpec((1, BLOCK), lambda i: (i, 0))
+    dgc = mode == "dgc"
+    vec_out = jax.ShapeDtypeStruct((rows, BLOCK), jnp.float32)
+    inputs = [jnp.asarray(c, jnp.float32).reshape(1, 1), rs(g), rs(a_prev),
+              rs(s_prev)] + ([rs(mom)] if dgc else [])
+    outs = pl.pallas_call(
+        functools.partial(_sweep1_kernel, mode=mode,
+                          momentum=float(momentum), bins=bins),
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0))]      # factor c
+                 + [spec] * (4 if dgc else 3),
+        out_specs=[spec] * (3 if dgc else 2) + [
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),        # per-block amax
+            pl.BlockSpec((1, bins), lambda i: (0, 0)),     # accumulated hist
+        ],
+        out_shape=[vec_out] * (3 if dgc else 2) + [
+            jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, bins), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*inputs)
+    if dgc:
+        a, score, mom_out, amax, hist = outs
+        mom_out = mom_out.reshape(-1)
+    else:
+        a, score, amax, hist = outs
+        mom_out = None
+    return (a.reshape(-1), score.reshape(-1), mom_out,
+            amax.reshape(-1), hist[0])
+
+
+def threshold_from_hist(hist: jnp.ndarray, target) -> jnp.ndarray:
+    """Lower edge of the largest bin b whose tail count >= target.
+
+    Guarantees count(|score| >= tau) >= target (0 when target exceeds the
+    histogram mass, which routes the caller to the exact fallback).
+    """
+    from repro.core.select import hist_tail_bin
+    b = hist_tail_bin(hist, target)
+    return jnp.where(b >= 0, bin_lower_edge(jnp.maximum(b, 0)), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Sweep 2
+# ---------------------------------------------------------------------------
+
+def _sweep2_kernel(tau_ref, score_ref, *refs, maxpb: int,
+                   want_mask: bool):
+    if want_mask:
+        mask_ref, vals_ref, idx_ref, cnt_ref = refs
+    else:
+        vals_ref, idx_ref, cnt_ref = refs
+    i = pl.program_id(0)
+    score = score_ref[...].astype(jnp.float32)                 # (1, BLOCK)
+    keys = jnp.abs(score)
+    tau = tau_ref[0, 0]
+    flags = keys >= tau
+    if want_mask:
+        mask_ref[...] = flags.astype(jnp.uint8)
+    cnt = jnp.sum(flags.astype(jnp.int32))
+    cnt_ref[0, 0] = cnt
+    # compact candidates into this block's static MAXPB slot region;
+    # overflow beyond maxpb is dropped and flagged via cnt > maxpb
+    pos = jnp.cumsum(flags[0].astype(jnp.int32)) - 1           # (BLOCK,)
+    pos = jnp.where(flags[0], pos, maxpb)                      # drop lanes
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (BLOCK,), 0)
+    gidx = jax.lax.convert_element_type(i, jnp.uint32) * BLOCK + lane
+    vals_ref[...] = jnp.full((1, maxpb), -jnp.inf, jnp.float32).at[
+        0, pos].set(keys[0], mode="drop")
+    idx_ref[...] = jnp.full((1, maxpb), INVALID_IDX, jnp.uint32).at[
+        0, pos].set(gidx, mode="drop")
+
+
+def sweep2_pallas(score, tau, *, maxpb: int, interpret: bool = True,
+                  want_mask: bool = True):
+    """score: (J,) fp32, J % BLOCK == 0. Returns
+    (mask_u8 (J,) or None, cand_vals (rows*maxpb,), cand_idx
+    (rows*maxpb,), block_counts (rows,)). Candidate slots hold |score|
+    (key order) and global indices; invalid slots are (-inf,
+    INVALID_IDX). want_mask=False skips the dense threshold-mask write
+    (callers that rebuild the exact mask as an O(k) scatter)."""
+    j = score.shape[0]
+    assert j % BLOCK == 0, j
+    rows = j // BLOCK
+    rs = lambda x: x.astype(jnp.float32).reshape(rows, BLOCK)
+    spec = pl.BlockSpec((1, BLOCK), lambda i: (i, 0))
+    mask_specs = [spec] if want_mask else []
+    mask_shapes = ([jax.ShapeDtypeStruct((rows, BLOCK), jnp.uint8)]
+                   if want_mask else [])
+    outs = pl.pallas_call(
+        functools.partial(_sweep2_kernel, maxpb=maxpb, want_mask=want_mask),
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), spec],
+        out_specs=mask_specs + [
+            pl.BlockSpec((1, maxpb), lambda i: (i, 0)),
+            pl.BlockSpec((1, maxpb), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=mask_shapes + [
+            jax.ShapeDtypeStruct((rows, maxpb), jnp.float32),
+            jax.ShapeDtypeStruct((rows, maxpb), jnp.uint32),
+            jax.ShapeDtypeStruct((rows, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(tau, jnp.float32).reshape(1, 1), rs(score))
+    if want_mask:
+        mask, vals, idx, cnt = outs
+        mask = mask.reshape(-1)
+    else:
+        (vals, idx, cnt), mask = outs, None
+    return mask, vals.reshape(-1), idx.reshape(-1), cnt.reshape(-1)

@@ -1,0 +1,202 @@
+"""Jit-friendly entry points for the two-sweep fused compression pipeline.
+
+``fused_compress_arrays`` runs the whole compression step for one worker:
+
+    sweep 1:  a, score           (dense inputs read exactly once)
+    sweep 2:  candidate slots    (per-row/per-block top candidates)
+    O(cand):  exact-k trim, REGTOP-k posterior corrections, exactness
+              checks, fixed-k (values, indices), uint8 mask, optional
+              dense ghat
+
+The execution strategy is auto-selected from the JAX backend (the
+"interpret or not" decision the old kernels hardcoded): native Pallas
+kernels on TPU, fusion-friendly XLA lowering elsewhere, and
+``pallas_interpret`` for validating the kernel bodies in tests.
+
+Exactness: the compacted candidate set provably covers the true top-k
+unless the per-row/per-block witnesses say otherwise (or a boundary tie
+is ambiguous under REGTOP-k support corrections); those rare cases take
+a ``lax.cond`` fallback to a full ``lax.top_k`` with identical
+semantics. Fast path and fallback both reproduce the reference
+selector's tie-break support exactly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.numerics import safe_denom
+from repro.kernels.common import auto_interpret
+from repro.kernels.compress import kernel as pk
+from repro.kernels.compress import xla as px
+
+
+def default_strategy() -> str:
+    return "xla" if auto_interpret() else "pallas"
+
+
+def sweep_plan(pipeline: str, comm_mode: str = "sparse") -> dict:
+    """Analytic O(J) HBM-traversal plan per compress step (DESIGN.md §2.2).
+
+    A "pass" is a full J-sized streaming read or write. O(k) scatters and
+    gathers (mask/ghat/packing fix-ups) are not passes.
+    """
+    if pipeline == "reference":
+        # score chain reads (g, err, a_prev, g_agg_prev, s_prev) + writes
+        # (a, score) + step-0 where pass + two full |score| sorts + mask
+        # scatter + ghat/err pass: ~8 traversals, 2 O(J log k) sorts.
+        return {"o_j_passes": 8, "full_sorts": 2}
+    passes = 3 if comm_mode == "sparse" else 4   # +1: dense ghat write
+    return {"o_j_passes": passes, "full_sorts": 0}
+
+
+def _posterior_keys(a, idx_prev, a_prev_sel, g_prev_sel, step, *,
+                    omega, mu):
+    """|score| of the support entries (Algorithm 1 line 5, O(k))."""
+    from repro.core import bigvec
+    a_sel = bigvec.gather(a, idx_prev)
+    safe = safe_denom(omega * a_sel)
+    delta_sel = (g_prev_sel - omega * a_prev_sel) / safe
+    skey = jnp.abs(a_sel * jnp.tanh(jnp.abs(1.0 + delta_sel) / mu))
+    return jnp.where(step == 0, -jnp.inf, skey)
+
+
+def _sweep1_xla(kind, g, a_prev, s_prev8, c, *, momentum, mom):
+    s = s_prev8.astype(jnp.float32)
+    err = a_prev.astype(jnp.float32) * (1.0 - s)     # EF invariant
+    g = g.astype(jnp.float32)
+    mom_out = mom
+    if kind == "dgc":
+        mom_out = momentum * mom.astype(jnp.float32) + g
+        a = err + mom_out
+    else:
+        a = err + g
+    return a, a * c, mom_out
+
+
+def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
+                          omega=1.0, mu: float = 0.1, Q: float = 0.0,
+                          momentum: float = 0.9, mom=None,
+                          idx_prev=None, a_prev_sel=None, g_prev_sel=None,
+                          want_ghat: bool = True,
+                          strategy: Optional[str] = None) -> dict:
+    """One fused compression step. kind in {"topk", "dgc", "regtopk"}.
+
+    Inputs: g (J,) raw gradient; a_prev (J,) previous error-compensated
+    gradient; s_prev8 (J,) uint8 previous selection mask; step () int32.
+    REGTOP-k additionally takes the O(k) posterior (idx_prev uint32,
+    a_prev_sel, g_prev_sel). DGC takes the momentum buffer ``mom``.
+
+    Returns {"a", "mask8", "values", "indices", "ghat" (None unless
+    want_ghat), "mom" (dgc only)}. values/indices are the fixed-k packed
+    pairs ordered by |score| descending; the selected support is
+    bit-identical to the reference exact selector's.
+    """
+    from repro.core import bigvec
+    strategy = strategy or default_strategy()
+    j = g.shape[0]
+    k = int(min(k, j))
+    regtopk = kind == "regtopk"
+    if regtopk:
+        c = jnp.where(step == 0, jnp.float32(1.0),
+                      jnp.tanh(jnp.abs(1.0 + jnp.float32(Q)) / mu))
+    else:
+        c = jnp.float32(1.0)
+
+    if strategy in ("pallas", "pallas_interpret"):
+        interpret = strategy == "pallas_interpret" or auto_interpret()
+        j_pad = -(-j // pk.BLOCK) * pk.BLOCK
+        pad = lambda x: jnp.pad(x.astype(jnp.float32), (0, j_pad - j))
+        a_p, score_p, mom_p, _amax, hist = pk.sweep1_pallas(
+            pad(g), pad(a_prev), pad(s_prev8.astype(jnp.float32)), c,
+            mode=("dgc" if kind == "dgc" else "plain"), momentum=momentum,
+            mom=None if mom is None else pad(mom), interpret=interpret)
+        # padding contributed (j_pad - j) zero keys to bin 0
+        hist = hist.at[0].add(-(j_pad - j))
+        # margin k: REGTOP-k support corrections may drop <=k entries
+        # below tau without breaking top-k coverage of the candidates
+        target = k + jnp.where(jnp.logical_and(regtopk, step > 0), k, 0)
+        tau = pk.threshold_from_hist(hist, target)
+        maxpb = int(min(pk.BLOCK, max(32, -(-8 * k * pk.BLOCK // j))))
+        # want_mask=False: the exact mask is rebuilt below as an O(k)
+        # scatter, so the dense threshold-mask write would be wasted
+        _mask_t, cand_k, cand_i, cnts = pk.sweep2_pallas(
+            score_p, tau, maxpb=maxpb, interpret=interpret,
+            want_mask=False)
+        cand_k = jnp.where(cand_i < j, cand_k, -jnp.inf)
+        producer_ok = jnp.max(cnts) <= maxpb
+        a = a_p[:j]
+        mom_out = mom_p[:j] if kind == "dgc" else None
+    else:
+        a, score, mom_out = _sweep1_xla(kind, g, a_prev, s_prev8, c,
+                                        momentum=momentum, mom=mom)
+        j_pad = px.pad_len(j)
+        keys = jnp.abs(score)
+        if j_pad != j:
+            keys = jnp.concatenate(
+                [keys, jnp.full((j_pad - j,), -jnp.inf, jnp.float32)])
+        cand_k, cand_i, row_min, full_cover = px.candidates_xla(keys, k)
+        producer_ok = None                   # needs tau; checked below
+        if kind != "dgc":
+            mom_out = None
+
+    # --- O(candidates) exact-k trim -------------------------------------
+    if regtopk:
+        skey = _posterior_keys(a, idx_prev, a_prev_sel, g_prev_sel, step,
+                               omega=omega, mu=mu)
+        # candidates that are support members carry an uncorrected key:
+        # disable them (the corrected copy is appended below)
+        ci_safe = jnp.minimum(cand_i, jnp.uint32(j - 1))
+        hit = (bigvec.gather(s_prev8, ci_safe) > 0) & (step > 0)
+        cand_k = jnp.where(hit, -jnp.inf, cand_k)
+        allk = jnp.concatenate([cand_k, skey])
+        alli = jnp.concatenate([cand_i, idx_prev.astype(jnp.uint32)])
+    else:
+        allk, alli = cand_k, cand_i
+
+    tv, tsel = jax.lax.top_k(allk, k)
+    idx_fast = alli[tsel]
+    tau_k = tv[-1]
+    valid = tau_k > -jnp.inf
+    if producer_ok is None:                  # xla strategy witness
+        producer_ok = full_cover | (jnp.max(row_min) < tau_k)
+    ok = producer_ok & valid
+    if regtopk:
+        # Boundary ties among compacted candidates resolve exactly like the
+        # reference (candidate position order == global index order). The
+        # one exception: a tie involving a corrected SUPPORT key (appended
+        # last, out of index order) with more ties than slots — fallback.
+        n_gt = jnp.sum((allk > tau_k).astype(jnp.int32))
+        n_eq = jnp.sum((allk == tau_k).astype(jnp.int32))
+        support_tie = jnp.any(skey == tau_k)
+        ok = ok & ((n_eq == (k - n_gt)) | ~support_tie)
+
+    def _fast(_):
+        return idx_fast
+
+    def _fallback(_):
+        # adversarial-input escape hatch: recompute (a, keys) from the
+        # *function parameters* rather than capturing the intermediate
+        # `a` — XLA CPU copies non-parameter conditional operands, which
+        # would tax the fast path with an O(J) copy
+        a2, score2, _ = _sweep1_xla(kind, g, a_prev, s_prev8, c,
+                                    momentum=momentum, mom=mom)
+        keys_d = jnp.abs(score2)
+        if regtopk:
+            base = bigvec.gather(keys_d, idx_prev)
+            fix = jnp.where(step > 0, skey, base)
+            keys_d = bigvec.scatter_set(keys_d, idx_prev, fix)
+        from repro.core import select
+        return select.topk_indices(keys_d, k)
+
+    idx_k = jax.lax.cond(ok, _fast, _fallback, operand=None)
+    values = bigvec.gather(a, idx_k)
+    mask8 = bigvec.mask_from_indices(j, idx_k, jnp.uint8)
+    ghat = None
+    if want_ghat:
+        ghat = bigvec.scatter_set(jnp.zeros((j,), jnp.float32), idx_k, values)
+    return {"a": a, "mask8": mask8, "values": values,
+            "indices": idx_k.astype(jnp.uint32), "ghat": ghat,
+            "mom": mom_out}

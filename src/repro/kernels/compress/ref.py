@@ -1,0 +1,51 @@
+"""Pure-jnp dense oracle for the fused compression pipeline.
+
+Mirrors ``core.sparsify.compress`` (pipeline="reference",
+selector="exact") on the *fused* state layout, so kernel/ops tests can
+check parity without round-tripping through the dense state dict:
+
+    a     = a_prev * (1 - s_prev) + g            (EF invariant)
+    score = a * tanh(|1 + Delta| / mu),  Delta from the O(k) posterior
+    top-k by |score| with lax.top_k tie-break (value desc, index asc)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.numerics import safe_denom
+
+
+def dense_scores_ref(g, a_prev, s_prev, step, *, kind: str, omega: float = 1.0,
+                     mu: float = 0.1, Q: float = 0.0, momentum: float = 0.9,
+                     mom=None, idx_prev=None, a_prev_sel=None,
+                     g_prev_sel=None):
+    """(a, score, mom_out) for the fused state layout, dense math."""
+    s = s_prev.astype(jnp.float32)
+    err = a_prev.astype(jnp.float32) * (1.0 - s)
+    g = g.astype(jnp.float32)
+    mom_out = mom
+    if kind == "dgc":
+        mom_out = momentum * mom.astype(jnp.float32) + g
+        a = err + mom_out
+    else:
+        a = err + g
+    if kind != "regtopk":
+        return a, a, mom_out
+    k = idx_prev.shape[0]
+    j = a.shape[0]
+    # densify the O(k) posterior (oracle only; the pipeline never does)
+    a_prev_d = jnp.zeros((j,), jnp.float32).at[idx_prev.astype(jnp.int32)].set(
+        a_prev_sel.astype(jnp.float32))
+    g_agg_d = jnp.zeros((j,), jnp.float32).at[idx_prev.astype(jnp.int32)].set(
+        g_prev_sel.astype(jnp.float32))
+    safe = safe_denom(omega * a)
+    delta = s * ((g_agg_d - omega * a_prev_d) / safe) + Q * (1.0 - s)
+    score = a * jnp.tanh(jnp.abs(1.0 + delta) / mu)
+    score = jnp.where(step == 0, a, score)
+    return a, score, mom_out
+
+
+def exact_topk_ref(score, k: int):
+    """(values_of_|score|, indices) with lax.top_k tie-break."""
+    return jax.lax.top_k(jnp.abs(score.astype(jnp.float32)), k)

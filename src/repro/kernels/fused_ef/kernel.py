@@ -1,5 +1,9 @@
 """Pallas TPU kernels: fused REGTOP-k error-feedback passes.
 
+Superseded as the production fused path by repro.kernels.compress (the
+two-sweep pipeline behind SparsifierConfig.pipeline="fused"); kept as
+standalone, individually-testable building blocks.
+
 Two elementwise fused passes over the flat gradient (DESIGN.md §2.2):
 
 1. ``scores``: a = err + g; Delta = s_prev*(g_agg - w*a_prev)/(w*a) +
@@ -54,8 +58,13 @@ def _rows(j: int) -> int:
 
 
 def scores_pallas(g, err, a_prev, g_agg, s_prev, *, omega: float, mu: float,
-                  q: float, interpret: bool = True):
-    """All inputs (J,) fp32, J % BLOCK == 0. Returns (a, score)."""
+                  q: float, interpret=None):
+    """All inputs (J,) fp32, J % BLOCK == 0. Returns (a, score).
+
+    interpret=None auto-selects from the JAX backend."""
+    if interpret is None:
+        from repro.kernels.common import auto_interpret
+        interpret = auto_interpret()
     rows = _rows(g.shape[0])
     rs = lambda x: x.reshape(rows, BLOCK)
     spec = pl.BlockSpec((1, BLOCK), lambda i: (i, 0))
@@ -70,7 +79,10 @@ def scores_pallas(g, err, a_prev, g_agg, s_prev, *, omega: float, mu: float,
     return a.reshape(-1), score.reshape(-1)
 
 
-def apply_pallas(a, mask, *, interpret: bool = True):
+def apply_pallas(a, mask, *, interpret=None):
+    if interpret is None:
+        from repro.kernels.common import auto_interpret
+        interpret = auto_interpret()
     rows = _rows(a.shape[0])
     rs = lambda x: x.reshape(rows, BLOCK)
     spec = pl.BlockSpec((1, BLOCK), lambda i: (i, 0))

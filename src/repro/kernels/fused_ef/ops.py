@@ -7,11 +7,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import auto_interpret as _interpret
 from repro.kernels.fused_ef.kernel import BLOCK, apply_pallas, scores_pallas
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad(x, j_pad):

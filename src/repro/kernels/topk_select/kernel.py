@@ -7,8 +7,14 @@ so the kernel accumulates into the same output block across grid steps
 (out index_map -> (0, 0)).
 
 Block layout: x reshaped to (J/BLOCK, BLOCK) rows, BLOCK = 8 * 128 * 4
-(fp32 VMEM tile-aligned); per grid step the kernel histograms one row via a
-compare-and-sum against the bin index vector.
+(fp32 VMEM tile-aligned); per grid step the kernel bins one row with an
+in-register bincount (scatter-add into the accumulated histogram block)
+under interpret mode, keeping the O(BLOCK x BINS) one-hot compare-and-sum
+only for native-TPU lowering until the bincount is TPU-validated
+(ROADMAP open item). The kernels/compress two-sweep pipeline subsumes
+the separate amax pass via bit-pattern binning for the full compression
+step; this kernel remains the standalone linear-histogram selector used
+by core.select's "histogram_kernel" method.
 """
 from __future__ import annotations
 
@@ -22,7 +28,8 @@ BINS = 2048
 BLOCK = 8 * 128 * 4   # 4096 elements per grid step
 
 
-def _hist_kernel(amax_ref, x_ref, hist_ref, *, bins: int):
+def _hist_kernel(amax_ref, x_ref, hist_ref, *, bins: int,
+                 use_bincount: bool):
     step = pl.program_id(0)
 
     @pl.when(step == 0)
@@ -33,23 +40,36 @@ def _hist_kernel(amax_ref, x_ref, hist_ref, *, bins: int):
     x = x_ref[...]                                   # (1, BLOCK)
     scaled = jnp.abs(x.astype(jnp.float32)) / amax
     bidx = jnp.clip((scaled * bins).astype(jnp.int32), 0, bins - 1)  # (1, B)
-    # one-hot count: (BLOCK, bins) compare, summed over the block
-    onehot = (bidx.reshape(-1, 1) ==
-              jax.lax.broadcasted_iota(jnp.int32, (1, bins), 1))
-    hist_ref[...] += jnp.sum(onehot.astype(jnp.int32), axis=0,
-                             keepdims=True)
+    if use_bincount:
+        # in-register bincount (replaces the O(BLOCK x BINS) one-hot
+        # compare); dynamic scatter-add — validated under interpret only
+        hist_ref[...] += jnp.zeros((1, bins), jnp.int32).at[
+            0, bidx[0]].add(1)
+    else:
+        # native-TPU lowering keeps the one-hot compare-and-sum until the
+        # bincount is TPU-validated (ROADMAP open item)
+        onehot = (bidx.reshape(-1, 1) ==
+                  jax.lax.broadcasted_iota(jnp.int32, (1, bins), 1))
+        hist_ref[...] += jnp.sum(onehot.astype(jnp.int32), axis=0,
+                                 keepdims=True)
 
 
 def histogram_pallas(x: jnp.ndarray, amax: jnp.ndarray, bins: int = BINS,
-                     interpret: bool = True) -> jnp.ndarray:
-    """x: (J,) with J % BLOCK == 0 (caller pads). Returns (bins,) int32."""
+                     interpret=None) -> jnp.ndarray:
+    """x: (J,) with J % BLOCK == 0 (caller pads). Returns (bins,) int32.
+
+    interpret=None auto-selects from the JAX backend (native on TPU,
+    interpreted elsewhere)."""
+    if interpret is None:
+        from repro.kernels.common import auto_interpret
+        interpret = auto_interpret()
     j = x.shape[0]
     assert j % BLOCK == 0, j
     rows = j // BLOCK
     xr = x.reshape(rows, BLOCK)
     amax2 = jnp.maximum(amax, 1e-30).reshape(1, 1).astype(jnp.float32)
     out = pl.pallas_call(
-        functools.partial(_hist_kernel, bins=bins),
+        functools.partial(_hist_kernel, bins=bins, use_bincount=interpret),
         grid=(rows,),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i: (0, 0)),          # amax (SMEM-ish)

@@ -4,12 +4,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import auto_interpret as _interpret
 from repro.kernels.topk_select.kernel import BINS, BLOCK, histogram_pallas
 from repro.kernels.topk_select.ref import threshold_from_hist
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def histogram_threshold_op(x: jnp.ndarray, k: int, bins: int = BINS):

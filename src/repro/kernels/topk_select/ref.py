@@ -18,10 +18,9 @@ def histogram_ref(x: jnp.ndarray, amax: jnp.ndarray, bins: int = BINS):
 def threshold_from_hist(hist: jnp.ndarray, amax: jnp.ndarray, k: int,
                         dtype=jnp.float32):
     """Smallest bin boundary tau with count(|x| >= tau) >= k."""
+    from repro.core.select import hist_tail_bin
     bins = hist.shape[0]
-    tail = jnp.cumsum(hist[::-1])[::-1]
-    ok = tail >= k
-    b = jnp.max(jnp.where(ok, jnp.arange(bins), -1))
+    b = hist_tail_bin(hist, k)
     return jnp.where(b >= 0, b.astype(jnp.float32) / bins * amax, 0.0).astype(dtype)
 
 

@@ -211,6 +211,8 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
         t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):          # jaxlib < 0.5 returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     from repro.roofline.hlo_parser import analyze_hlo

@@ -24,6 +24,11 @@ def parse_args(argv=None):
     ap.add_argument("--mu", type=float, default=0.5)
     ap.add_argument("--comm", default="simulate",
                     choices=["simulate", "sparse", "dense"])
+    ap.add_argument("--pipeline", default="reference",
+                    choices=["reference", "fused"],
+                    help="compression execution pipeline (DESIGN.md §2.2): "
+                         "dense reference math, or the two-sweep fused "
+                         "kernels/compress path")
     ap.add_argument("--optimizer", default="adam")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--data", type=int, default=1)
@@ -32,6 +37,11 @@ def parse_args(argv=None):
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--fixed-batch", action="store_true",
+                    help="reuse step 0's batch every step (deterministic "
+                         "overfit mode for convergence smoke tests; the "
+                         "synthetic stream is uniform-random tokens, which "
+                         "carry no learnable signal across fresh batches)")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     return ap.parse_args(argv)
@@ -59,7 +69,8 @@ def main(argv=None):
         model=cfg, shape=SHAPES["train_4k"],
         sparsifier=SparsifierConfig(kind=args.sparsifier,
                                     sparsity=args.sparsity, mu=args.mu,
-                                    comm_mode=args.comm),
+                                    comm_mode=args.comm,
+                                    pipeline=args.pipeline),
         optimizer=OptimizerConfig(kind=args.optimizer, lr=args.lr),
         seed=args.seed, steps=args.steps,
         checkpoint_dir=args.checkpoint_dir,
@@ -80,7 +91,8 @@ def main(argv=None):
         import time
         t0 = time.time()
         for t in range(args.steps):
-            batch = lm_batch(mcfg, args.batch, args.seq, args.seed, t)
+            batch = lm_batch(mcfg, args.batch, args.seq, args.seed,
+                             0 if args.fixed_batch else t)
             params, opt_state, ef_state, metrics = jstep(
                 params, opt_state, ef_state, batch, key)
             if t % args.log_every == 0 or t == args.steps - 1:

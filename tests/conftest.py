@@ -5,3 +5,30 @@ import sys
 # device. Multi-device tests spawn subprocesses that set
 # --xla_force_host_platform_device_count themselves (see test_distributed.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis is an optional test dependency (declared in pyproject.toml /
+# requirements.txt). When absent, property tests SKIP instead of erroring
+# the whole module at collection.
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest as _pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return lambda fn: _pytest.mark.skip(
+            reason="hypothesis not installed (pip install -e .[test])")(fn)
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

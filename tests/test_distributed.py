@@ -39,7 +39,9 @@ def make_run(arch, sp_kind="regtopk", comm="simulate", opt="adam", sparsity=0.05
                                     comm_mode=comm, selector="exact"),
         optimizer=OptimizerConfig(kind=opt, lr=1e-3))
 
-def train(run, mesh_shape, steps=3, key_seed=0):
+def train(run, mesh_shape, steps=3, key_seed=0, fixed_batch=False):
+    # fixed_batch: uniform-random token streams carry no cross-batch signal;
+    # convergence assertions must overfit one batch to be meaningful
     mesh = jax.make_mesh(mesh_shape, ("data", "model"))
     pal = build_parallel(mesh)
     key = jax.random.PRNGKey(key_seed)
@@ -49,7 +51,7 @@ def train(run, mesh_shape, steps=3, key_seed=0):
         jstep = jax.jit(step)
         losses = []
         for t in range(steps):
-            batch = lm_batch(run.model, 8, 64, 0, t)
+            batch = lm_batch(run.model, 8, 64, 0, 0 if fixed_batch else t)
             params, opt_state, ef_state, m = jstep(params, opt_state, ef_state, batch, key)
             losses.append(float(m["loss"]))
     return losses, m
@@ -116,7 +118,7 @@ print("OK", d, du)
 def test_regtopk_trains_distributed():
     out = run_py(COMMON + """
 run = make_run("stablelm-3b", sp_kind="regtopk", comm="sparse", sparsity=0.02)
-losses, m = train(run, (4, 2), steps=10)
+losses, m = train(run, (4, 2), steps=10, fixed_batch=True)
 assert losses[-1] < losses[0], losses
 assert 0 < float(m["agg_nonzero"]) < 0.3
 print("OK", losses[0], losses[-1])
