@@ -1,0 +1,92 @@
+"""CI bench-regression gate for the compression hot path.
+
+  PYTHONPATH=src python -m benchmarks.check_compress BASELINE.json FRESH.json
+
+Compares a freshly produced BENCH_compress.json (``benchmarks.run --json
+--only compress``) against the committed baseline and FAILS (exit 1) if:
+
+- any fused-pipeline row regressed its deterministic audit metrics —
+  ``sweeps_per_step`` (O(J)-traversal J-equivalents) or ``read_units``
+  above the baseline row of the same name;
+- at the largest benchmarked J, the fused path's us/call is not faster
+  than the reference path (wall-clock is noisy on shared CI runners, so
+  only this one robust ordering is gated, not absolute timings).
+
+Rows present in only one file are reported but never fail the gate
+(adding a new benchmark row must not need a two-step merge dance).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# deterministic integer-ish metrics get an epsilon for float formatting
+# noise only; a real regression moves them by >= 1/num_buckets
+EPS = 1e-6
+
+
+def _rows_by_name(payload: dict) -> dict:
+    return {r["name"]: r for r in payload.get("rows", []) if "name" in r}
+
+
+def check(baseline: dict, fresh: dict) -> list:
+    """Returns a list of failure strings (empty = gate passes)."""
+    failures = []
+    base = _rows_by_name(baseline)
+    new = _rows_by_name(fresh)
+
+    for name, row in sorted(new.items()):
+        if row.get("pipeline", "").startswith("fused"):
+            ref_row = base.get(name)
+            if ref_row is None:
+                print(f"[check_compress] new row (not gated): {name}")
+                continue
+            for metric in ("sweeps_per_step", "read_units"):
+                got, want = row.get(metric), ref_row.get(metric)
+                if got is None or want is None:
+                    continue
+                if got > want + EPS:
+                    failures.append(
+                        f"{name}: {metric} regressed {want} -> {got}")
+
+    # fused must beat reference at the largest J (the production regime
+    # the two-sweep pipeline exists for)
+    js = [r["j"] for r in new.values()
+          if r.get("pipeline") == "fused" and "j" in r]
+    if not js:
+        failures.append("no fused rows found in fresh results")
+        return failures
+    j_max = max(js)
+    by_pipe = {r.get("pipeline"): r for r in new.values()
+               if r.get("j") == j_max and "us_per_call" in r}
+    ref, fus = by_pipe.get("reference"), by_pipe.get("fused")
+    if ref is None or fus is None:
+        failures.append(f"J={j_max}: missing reference/fused timing rows")
+    elif not fus["us_per_call"] < ref["us_per_call"]:
+        failures.append(
+            f"J={j_max}: fused ({fus['us_per_call']} us) not faster than "
+            f"reference ({ref['us_per_call']} us)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_compress.json")
+    ap.add_argument("fresh", help="freshly benchmarked BENCH_compress.json")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    failures = check(baseline, fresh)
+    for f in failures:
+        print(f"[check_compress] FAIL: {f}")
+    if not failures:
+        print("[check_compress] OK: no fused-path regressions "
+              f"({len(_rows_by_name(fresh))} rows checked)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

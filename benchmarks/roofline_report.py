@@ -57,8 +57,7 @@ def dryrun_table(recs):
 
 
 def fits_table():
-    from repro.configs.base import (OptimizerConfig, RunConfig,
-                                    SparsifierConfig)
+    from repro.configs.base import RunConfig, SparsifierConfig
     from repro.roofline.memory_model import per_device_memory
     rows = ["| arch | EF layout | params | opt | EF | act | total/dev | fits 16GB? |",
             "|---|---|---|---|---|---|---|---|"]

@@ -12,12 +12,10 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 WRITE_JSON = False
 
@@ -120,9 +118,11 @@ def bench_kernels(quick):
 
 def bench_compress(quick):
     """Reference vs fused two-sweep compress on the production
-    (comm_mode="sparse") REGTOP-k path. us/call = min over repeats
+    (comm_mode="sparse") REGTOP-k path, plus the bucketed variant
+    (num_buckets=8, DESIGN.md §2.4). us/call = min over repeats
     (microbenchmark convention); sweeps/step from the traced-shape audit
-    (DESIGN.md §2.2). --json -> BENCH_compress.json."""
+    (DESIGN.md §2.2). --json -> BENCH_compress.json (the committed copy
+    is the baseline benchmarks.check_compress gates CI against)."""
     import dataclasses
     from repro.configs.base import SparsifierConfig
     from repro.core import sparsify
@@ -135,9 +135,11 @@ def bench_compress(quick):
         cfg_ref = SparsifierConfig(kind="regtopk", sparsity=0.001, mu=0.5,
                                    selector="exact", comm_mode="sparse")
         cfg_fus = dataclasses.replace(cfg_ref, pipeline="fused")
+        cfg_b8 = dataclasses.replace(cfg_fus, num_buckets=8)
         g = jax.random.normal(jax.random.PRNGKey(0), (j,), jnp.float32)
         us = {}
-        for label, cfg in (("reference", cfg_ref), ("fused", cfg_fus)):
+        for label, cfg in (("reference", cfg_ref), ("fused", cfg_fus),
+                           ("fused_b8", cfg_b8)):
             state = sparsify.init_state(cfg, j)
 
             def f(state, g):
@@ -160,6 +162,7 @@ def bench_compress(quick):
                 "name": f"compress_regtopk_{label}_J{j}",
                 "j": j,
                 "pipeline": label,
+                "num_buckets": cfg.num_buckets,
                 "us_per_call": round(best * 1e6, 1),
                 "sweeps_per_step": aud["traversals"],
                 "read_units": round(aud["read_units"], 2),

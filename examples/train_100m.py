@@ -23,7 +23,7 @@ from repro.configs.base import (OptimizerConfig, RunConfig, SHAPES,
 from repro.data import lm_batch
 from repro.launch.mesh import make_mesh
 from repro.train.step import (build_parallel, build_train_step,
-                              init_train_state, resolve_model_cfg)
+                              init_train_state)
 
 
 def model_100m():

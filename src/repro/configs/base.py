@@ -8,8 +8,7 @@ configs lowered in the dry-run.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Callable, Optional
 
 
@@ -24,7 +23,8 @@ class MoEConfig:
     top_k: int = 0
     d_expert: int = 0             # per-expert FFN hidden dim
     capacity_factor: float = 1.25
-    moe_every: int = 1            # MoE FFN on layers where (idx % moe_every == moe_offset)
+    moe_every: int = 1            # MoE FFN on layers where
+                                  # (idx % moe_every == moe_offset)
     moe_offset: int = 0
     router_z_loss: float = 1e-3
     load_balance_loss: float = 1e-2
@@ -168,6 +168,14 @@ class SparsifierConfig:
     #   sweeps accumulate in fp32); unsupported configs fall back to the
     #   reference path.
     pipeline: str = "reference"   # reference | fused
+    # bucketed compression (DESIGN.md §2.4): partition the flat gradient
+    # into num_buckets contiguous buckets; the fused sweeps run per bucket
+    # with an O(num_buckets x BINS) histogram-merge global threshold, and
+    # comm_mode="sparse" all-gathers the packed pairs in num_buckets
+    # chunks so bucket i's collective overlaps bucket i+1's local
+    # scatter-add compaction. Selection semantics are bucketing-invariant
+    # (bit-identical to num_buckets=1); 1 disables bucketing.
+    num_buckets: int = 1
 
 
 @dataclass(frozen=True)
@@ -198,7 +206,8 @@ class MeshConfig:
 
     @property
     def shape(self):
-        return (self.pods, self.data, self.model) if self.pods > 1 else (self.data, self.model)
+        return ((self.pods, self.data, self.model) if self.pods > 1
+                else (self.data, self.model))
 
     @property
     def n_devices(self) -> int:
@@ -306,7 +315,8 @@ def reduced_config(cfg: ModelConfig) -> ModelConfig:
         n_dense_prefix=cfg.n_dense_prefix,
         moe=moe,
         ssm=ssm,
-        n_frontend_tokens=min(cfg.n_frontend_tokens, 16) if cfg.n_frontend_tokens else 0,
+        n_frontend_tokens=(min(cfg.n_frontend_tokens, 16)
+                           if cfg.n_frontend_tokens else 0),
         window=64,
         dtype="float32",
         max_seq_len=4096,

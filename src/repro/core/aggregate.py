@@ -42,23 +42,43 @@ def simulate_allreduce(ghat: jnp.ndarray, axes: AxisNames) -> jnp.ndarray:
 
 
 def sparse_allgather_combine(values: jnp.ndarray, indices: jnp.ndarray,
-                             j: int, axes: AxisNames) -> jnp.ndarray:
+                             j: int, axes: AxisNames,
+                             num_buckets: int = 1) -> jnp.ndarray:
     """All-gather (k,) sparse contributions over `axes`; dense-combine locally.
 
     Every worker ends up with g_agg = (1/N) sum_n scatter(values_n, idx_n),
     identical on all data ranks (required: REGTOP-k's posterior distortion
     assumes the same g^t is observed everywhere).
+
+    ``num_buckets > 1`` (DESIGN.md §2.4) splits the packed pairs into
+    that many fixed-size chunks and issues ONE collective per chunk:
+    chunk b's local scatter-add depends only on chunk b's gather, so
+    XLA's latency-hiding scheduler overlaps chunk b+1's all-gather with
+    chunk b's compaction instead of serializing one monolithic gather
+    ahead of one monolithic scatter. The combined g_agg is the same sum
+    (chunking only reorders additions at duplicate indices).
     """
     if isinstance(axes, str):
         axes = (axes,)
-    for a in axes:
-        values = jax.lax.all_gather(values, a)     # stacks leading axis
-        indices = jax.lax.all_gather(indices, a)
-    values = values.reshape(-1)
-    indices = indices.reshape(-1)
     n = _axis_size(axes)
     from repro.core import bigvec
-    dense = bigvec.scatter_add(jnp.zeros((j,), values.dtype), indices, values)
+    k = values.shape[0]
+    if k <= num_buckets:
+        num_buckets = 1          # degenerate: one pair per chunk gains nothing
+    chunk = -(-k // num_buckets)
+    pad = chunk * num_buckets - k
+    if pad:
+        # inert tail: scatter-add of 0.0 at index 0
+        values = jnp.concatenate([values, jnp.zeros((pad,), values.dtype)])
+        indices = jnp.concatenate([indices, jnp.zeros((pad,), indices.dtype)])
+    dense = jnp.zeros((j,), values.dtype)
+    for b in range(num_buckets):
+        vb = values[b * chunk:(b + 1) * chunk]
+        ib = indices[b * chunk:(b + 1) * chunk]
+        for a in axes:
+            vb = jax.lax.all_gather(vb, a)     # stacks leading axis
+            ib = jax.lax.all_gather(ib, a)
+        dense = bigvec.scatter_add(dense, ib.reshape(-1), vb.reshape(-1))
     return dense / n
 
 
@@ -72,6 +92,9 @@ def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     cfg.pipeline; with pipeline="fused" + comm_mode="sparse" the dense
     ghat is never materialized and the packed (values, indices) feed the
     all-gather directly — zero extra O(J) sweeps for the sparse path.
+    cfg.num_buckets > 1 additionally chunks that all-gather into
+    per-bucket collectives interleaved with the local scatter-add
+    combine (DESIGN.md §2.4 overlap schedule).
     """
     if cfg.kind == "none":
         g_agg = dense_allreduce(g.astype(jnp.dtype(cfg.ef_dtype)), axes)
@@ -91,7 +114,8 @@ def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     out = sparsify.compress(cfg, state, g, key=key, omega=omega)
     if cfg.comm_mode == "sparse" and out.values is not None:
         g_agg = sparse_allgather_combine(out.values, out.indices,
-                                         g.shape[0], axes)
+                                         g.shape[0], axes,
+                                         num_buckets=cfg.num_buckets)
     else:
         g_agg = simulate_allreduce(sparsify.dense_ghat(out, g.shape[0]), axes)
     new_state = sparsify.observe_aggregate(cfg, out.state, g_agg)
@@ -106,7 +130,6 @@ def _sketch_sync(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     from repro.core import sketch as _sketch
     j = g.shape[0]
     k = sparsify.resolve_k(cfg, j)
-    n = _axis_size(axes)
     a = state["err"] + g.astype(jnp.dtype(cfg.ef_dtype))
     width = _sketch.resolve_width(k, cfg.sketch_width)
     sk = _sketch.encode(a, cfg.sketch_rows, width)

@@ -7,7 +7,6 @@ int32 arrays (row < 32, col < 2^27), which XLA handles natively.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 _I32_MAX = 2 ** 31 - 1

@@ -33,14 +33,38 @@ class TreeFlattener:
 
     def flatten(self, tree) -> jnp.ndarray:
         leaves = jax.tree_util.tree_leaves(tree)
+        if not leaves:
+            return jnp.zeros((0,), self.dtype)
         return jnp.concatenate(
-            [jnp.ravel(l).astype(self.dtype) for l in leaves]) if leaves else jnp.zeros((0,), self.dtype)
+            [jnp.ravel(l).astype(self.dtype) for l in leaves])
 
     def unflatten(self, vec: jnp.ndarray):
         leaves = []
-        for off, size, shape, dt in zip(self.offsets, self.sizes, self.shapes, self.dtypes):
-            leaves.append(jax.lax.dynamic_slice_in_dim(vec, off, size).reshape(shape).astype(dt))
+        for off, size, shape, dt in zip(self.offsets, self.sizes,
+                                        self.shapes, self.dtypes):
+            leaves.append(jax.lax.dynamic_slice_in_dim(
+                vec, off, size).reshape(shape).astype(dt))
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+def bucket_bounds(j: int, num_buckets: int) -> list:
+    """Contiguous near-equal partition of [0, j) into buckets.
+
+    Returns [(offset, size), ...] with sizes differing by at most one and
+    sum(sizes) == j. The bucketed compression pipeline (DESIGN.md §2.4)
+    sweeps each bucket independently and merges their bit-pattern
+    histograms into one global threshold, so the partition must be
+    deterministic and order-preserving (global index = offset + local).
+    num_buckets is clamped to [1, j] (a bucket is never empty).
+    """
+    b = max(1, min(int(num_buckets), max(j, 1)))
+    base, rem = divmod(j, b)
+    bounds, off = [], 0
+    for i in range(b):
+        size = base + (1 if i < rem else 0)
+        bounds.append((off, size))
+        off += size
+    return bounds
 
 
 def tree_size(tree) -> int:

@@ -12,8 +12,6 @@ Two selectors:
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -75,7 +73,8 @@ def hist_tail_bin(hist: jnp.ndarray, target) -> jnp.ndarray:
     return jnp.max(jnp.where(ok, jnp.arange(bins), -1))
 
 
-def histogram_threshold(score: jnp.ndarray, k: int, bins: int = HIST_BINS) -> jnp.ndarray:
+def histogram_threshold(score: jnp.ndarray, k: int,
+                        bins: int = HIST_BINS) -> jnp.ndarray:
     """k-th largest |score| estimated via a linear magnitude histogram.
 
     Returns tau such that count(|score| >= tau) >= k, with tau at a bin

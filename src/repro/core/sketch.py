@@ -23,8 +23,6 @@ O(J) hash tables are stored.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

@@ -161,7 +161,8 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     if cfg.kind == "globaltopk":
         # Genie sparsifier: mask computed by the CALLER from the aggregated
         # accumulated gradient (core/aggregate.py:global_topk_roundtrip).
-        raise RuntimeError("globaltopk is aggregate-level; use aggregate.global_topk_roundtrip")
+        raise RuntimeError("globaltopk is aggregate-level; use "
+                           "aggregate.global_topk_roundtrip")
 
     if cfg.kind == "topk":
         a = state["err"] + g
@@ -280,7 +281,9 @@ def _compress_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     Exact top-k semantics (reference selector="exact" parity). In
     comm_mode="sparse" no dense ghat is materialized — the packed
     (values, indices) drive the sparse all-gather and CompressOut.ghat
-    is None.
+    is None. cfg.num_buckets > 1 runs the sweeps per contiguous bucket
+    with a histogram-merge global threshold (DESIGN.md §2.4); selection,
+    packed order, and post-step state stay bit-identical to num_buckets=1.
     """
     from repro.core import bigvec
     from repro.kernels.compress import ops as cops
@@ -294,7 +297,8 @@ def _compress_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     out = cops.fused_compress_arrays(
         cfg.kind, g, state["a_prev"], state["s_prev"], state["step"],
         k=k, omega=omega, mu=cfg.mu, Q=cfg.Q, momentum=cfg.momentum,
-        want_ghat=cfg.comm_mode != "sparse", **kwargs)
+        want_ghat=cfg.comm_mode != "sparse",
+        num_buckets=cfg.num_buckets, **kwargs)
     dt = jnp.dtype(cfg.ef_dtype)
     new = {"a_prev": out["a"].astype(dt), "s_prev": out["mask8"],
            "step": state["step"] + 1}

@@ -9,18 +9,30 @@ asserted by hand.
 Model (intentionally simple, deterministic, and version-stable):
 
 - *Elementwise* equations (adds, multiplies, selects, converts, pads,
-  concats, broadcasts, ...) over big operands fuse into connected
+  concats, broadcasts, ...) over sizable operands fuse into connected
   groups; one group = one streaming traversal, regardless of how many
-  big arrays it reads or writes (``traversals``), with the bytes it
+  sizable arrays it reads or writes (``traversals``), with the bytes it
   touches accounted separately (``read_units`` — J-fp32-equivalents of
-  distinct big group inputs).
+  distinct sizable group inputs).
 - *Barrier* equations — sort/top_k, reductions, cumsums, scans,
-  pallas_call — each count as one traversal and read their big operands.
+  pallas_call — each count as one traversal and read their sizable
+  operands.
 - Scatter equations with small (O(k)) updates and gather equations with
   small outputs are O(k) random accesses, not streaming passes.
 - ``cond`` contributes the *minimum* over its branches: the fused
   pipeline's exact-top-k fallback branch exists for adversarial inputs
   only, and the audit measures the steady-state path.
+
+Traversals are **J-equivalents** (DESIGN.md §2.3): each group/barrier is
+weighted by its largest operand's size relative to the threshold ``j``,
+so the bucketed pipeline's num_buckets sweeps of J/num_buckets elements
+correctly total ~1 traversal instead of either vanishing below a "big"
+cutoff or counting num_buckets times. Gathers are weighted by their
+OUTPUT size (random access, not a stream over the operand). Arrays
+smaller than max(1024, j/16) stay free (O(k) packing fix-ups, per-row
+candidate slots, O(candidates) trim arrays); the audit therefore
+resolves bucketings up to ~16 buckets — far finer than the seed's
+0.9*J cutoff, which saw nothing smaller than the whole vector.
 """
 from __future__ import annotations
 
@@ -82,19 +94,22 @@ class _UnionFind:
 def audit_jaxpr(jaxpr, j: int, unit_bytes: int = 4) -> dict:
     """Count traversals/read-units of a ClosedJaxpr for threshold size j.
 
-    Returns {"traversals": int, "read_units": float} where read_units is
-    big-input bytes / (j * unit_bytes) — J-fp32-equivalents of streamed
-    reads.
+    Returns {"traversals": float, "read_units": float}: traversals are
+    J-equivalent streaming passes (a pass over J/B elements weighs 1/B);
+    read_units is sizable-input bytes / (j * unit_bytes) —
+    J-fp32-equivalents of streamed reads.
     """
-    big = lambda v: _size(v) >= int(0.9 * j)
+    floor = max(1024, j // 16)
+    sizable = lambda v: _size(v) >= floor
+    frac = lambda v: _size(v) / float(j)
     uf = _UnionFind()
     group_of_var = {}
-    barrier_count = 0
-    read_bytes = 0
+    barrier_weight = 0.0
+    read_bytes = 0.0
     produced = set()
 
     def handle(eqns):
-        nonlocal barrier_count, read_bytes
+        nonlocal barrier_weight, read_bytes
         for eqn in eqns:
             prim = eqn.primitive.name
             if prim in ("pjit", "closed_call", "custom_jvp_call",
@@ -113,28 +128,40 @@ def audit_jaxpr(jaxpr, j: int, unit_bytes: int = 4) -> dict:
                     results.append(audit_jaxpr(br, j, unit_bytes))
                 best = min(results, key=lambda r: (r["traversals"],
                                                    r["read_units"]))
-                barrier_count += best["traversals"]
+                barrier_weight += best["traversals"]
                 read_bytes += best["read_units"] * j * unit_bytes
                 continue
             big_in = [v for v in eqn.invars
-                      if hasattr(v, "aval") and big(v)]
-            big_out = [v for v in eqn.outvars if big(v)]
+                      if hasattr(v, "aval") and sizable(v)]
+            big_out = [v for v in eqn.outvars if sizable(v)]
             if not big_in and not big_out:
                 continue
+            weight = max(frac(v) for v in big_in + big_out)
             if prim in _FREE:
-                # view-ish: propagate group membership through
+                # view-ish: propagate group membership through; a view of
+                # a produced array is itself produced (its bytes were
+                # already written in-stream — counting the view as an
+                # external group input would double-bill bucket slices)
                 for vo in big_out:
                     for vi in big_in:
                         if vi in group_of_var:
                             group_of_var[vo] = group_of_var[vi]
+                        if vi in produced:
+                            produced.add(vo)
                 continue
-            if prim == "gather" and not big_out:
-                continue                       # O(k) random reads
+            if prim == "gather":
+                if not big_out:
+                    continue                   # O(k) random reads
+                # random access costs its output volume, not a stream
+                # over the (possibly J-sized) operand
+                barrier_weight += max(frac(v) for v in big_out)
+                read_bytes += sum(_bytes(v) for v in big_out)
+                continue
             if prim == "scatter" or prim.startswith("scatter-"):
                 upd = eqn.invars[-1] if eqn.invars else None
-                if upd is not None and not big(upd):
+                if upd is not None and not sizable(upd):
                     continue                   # O(k) random writes
-                barrier_count += 1
+                barrier_weight += weight
                 read_bytes += sum(_bytes(v) for v in big_in)
                 continue
             if prim in _ELEMENTWISE:
@@ -148,24 +175,27 @@ def audit_jaxpr(jaxpr, j: int, unit_bytes: int = 4) -> dict:
                     produced.add(v)
                 continue
             # everything else (sorts, reductions, pallas, unknown prims
-            # touching big data) is a barrier traversal
-            barrier_count += 1
+            # touching sizable data) is a barrier traversal weighted by
+            # its largest operand
+            barrier_weight += weight
             read_bytes += sum(_bytes(v) for v in big_in)
 
     handle(jaxpr.jaxpr.eqns)
 
-    # group accounting: each fused elementwise group = 1 traversal that
-    # reads its distinct big external inputs
+    # group accounting: each fused elementwise group = 1 J-equivalent
+    # traversal weighted by its largest array, reading its distinct
+    # sizable external inputs
     groups = defaultdict(set)
     for v, key in group_of_var.items():
         groups[uf.find(key)].add(v)
-    n_groups = len(groups)
+    group_weight = 0.0
     for root, vars_ in groups.items():
+        group_weight += max(frac(v) for v in vars_)
         for v in vars_:
-            if v not in produced:              # external big input
+            if v not in produced:              # external sizable input
                 read_bytes += _bytes(v)
-    return {"traversals": barrier_count + n_groups,
-            "read_units": read_bytes / float(j * unit_bytes)}
+    return {"traversals": round(barrier_weight + group_weight, 3),
+            "read_units": round(read_bytes / float(j * unit_bytes), 3)}
 
 
 def audit_fn(fn, *args, j: int, **kwargs) -> dict:

@@ -153,6 +153,27 @@ def threshold_from_hist(hist: jnp.ndarray, target) -> jnp.ndarray:
     return jnp.where(b >= 0, bin_lower_edge(jnp.maximum(b, 0)), 0.0)
 
 
+def merge_bucket_hists(hists) -> jnp.ndarray:
+    """O(num_buckets x BINS) global-k histogram merge (DESIGN.md §2.4).
+
+    Bit-pattern bins are position-independent (bin of an element depends
+    only on its value), so the sum of per-bucket histograms IS the
+    histogram of the whole vector: the threshold picked from the merged
+    histogram is identical to the flat single-sweep threshold for any
+    bucketing, which is what makes the union of per-bucket >=tau
+    selections cover the exact global top-k.
+    """
+    merged = hists[0]
+    for h in hists[1:]:
+        merged = merged + h
+    return merged
+
+
+def threshold_from_bucket_hists(hists, target) -> jnp.ndarray:
+    """Global threshold tau from per-bucket histograms (merge + tail scan)."""
+    return threshold_from_hist(merge_bucket_hists(hists), target)
+
+
 # ---------------------------------------------------------------------------
 # Sweep 2
 # ---------------------------------------------------------------------------

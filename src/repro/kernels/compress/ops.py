@@ -8,6 +8,19 @@
               checks, fixed-k (values, indices), uint8 mask, optional
               dense ghat
 
+With ``num_buckets > 1`` (DESIGN.md §2.4) the flat gradient is
+partitioned into contiguous buckets (core.flatten.bucket_bounds); both
+sweeps run per bucket and the per-bucket bit-pattern histograms are
+merged (O(num_buckets x BINS)) into ONE global threshold, so the union
+of per-bucket candidate selections still covers the exact global top-k.
+The O(cand) trim stays global — selected support and packed order are
+bit-identical to the flat (num_buckets=1) path. NB: because the trim
+(and its lax.cond fallback) joins all buckets, the packed pairs exist
+only after every bucket's sweeps finish; the overlap the bucketing buys
+is on the COMMUNICATION side (core.aggregate chunks the packed pairs so
+gather b+1 runs concurrently with scatter-add b), not compression
+hidden behind collectives.
+
 The execution strategy is auto-selected from the JAX backend (the
 "interpret or not" decision the old kernels hardcoded): native Pallas
 kernels on TPU, fusion-friendly XLA lowering elsewhere, and
@@ -27,6 +40,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.flatten import bucket_bounds
 from repro.core.numerics import safe_denom
 from repro.kernels.common import auto_interpret
 from repro.kernels.compress import kernel as pk
@@ -41,7 +55,10 @@ def sweep_plan(pipeline: str, comm_mode: str = "sparse") -> dict:
     """Analytic O(J) HBM-traversal plan per compress step (DESIGN.md §2.2).
 
     A "pass" is a full J-sized streaming read or write. O(k) scatters and
-    gathers (mask/ghat/packing fix-ups) are not passes.
+    gathers (mask/ghat/packing fix-ups) are not passes. Bucketing does
+    not change the plan: num_buckets partial sweeps of J/num_buckets
+    elements are one J-equivalent traversal (the audit weights them
+    fractionally, DESIGN.md §2.3).
     """
     if pipeline == "reference":
         # score chain reads (g, err, a_prev, g_agg_prev, s_prev) + writes
@@ -76,28 +93,125 @@ def _sweep1_xla(kind, g, a_prev, s_prev8, c, *, momentum, mom):
     return a, a * c, mom_out
 
 
+def _candidates_pallas(kind, g, a_prev, s_prev8, c, step, *, k: int,
+                       regtopk: bool, momentum: float, mom, interpret: bool,
+                       bounds):
+    """Per-bucket Pallas sweeps + histogram-merge global threshold.
+
+    Sweep 1 runs once per bucket and emits that bucket's 2048-bin
+    bit-pattern histogram; the merged histogram picks a single global
+    tau (count(|score| >= tau) >= k + margin over the WHOLE vector, so
+    per-bucket >=tau compaction unions to a global-top-k cover). Sweep 2
+    then compacts each bucket independently against that shared tau.
+    """
+    j = g.shape[0]
+    dgc = kind == "dgc"
+    a_parts, score_parts, mom_parts, hists = [], [], [], []
+    for off, size in bounds:
+        j_pad = -(-size // pk.BLOCK) * pk.BLOCK
+        pad = lambda x: jnp.pad(
+            x[off:off + size].astype(jnp.float32), (0, j_pad - size))
+        a_p, score_p, mom_p, _amax, hist = pk.sweep1_pallas(
+            pad(g), pad(a_prev), pad(s_prev8), c,
+            mode=("dgc" if dgc else "plain"), momentum=momentum,
+            mom=None if mom is None else pad(mom), interpret=interpret)
+        # padding contributed (j_pad - size) zero keys to bin 0
+        hists.append(hist.at[0].add(-(j_pad - size)))
+        a_parts.append(a_p[:size])
+        score_parts.append(score_p)
+        if dgc:
+            mom_parts.append(mom_p[:size])
+    # margin k: REGTOP-k support corrections may drop <=k entries below
+    # tau without breaking top-k coverage of the candidates
+    target = k + jnp.where(jnp.logical_and(regtopk, step > 0), k, 0)
+    tau = pk.threshold_from_bucket_hists(hists, target)
+    # per-block slot capacity from the GLOBAL selection density (a bucket
+    # block's expected candidate share does not depend on the bucketing)
+    maxpb = int(min(pk.BLOCK, max(32, -(-8 * k * pk.BLOCK // j))))
+    ck_parts, ci_parts, oks = [], [], []
+    for (off, size), score_p in zip(bounds, score_parts):
+        _mask_t, ck, ci, cnts = pk.sweep2_pallas(
+            score_p, tau, maxpb=maxpb, interpret=interpret, want_mask=False)
+        # bucket-local padding slots must not alias the next bucket's
+        # index range: kill them BEFORE the global-offset shift
+        ck = jnp.where(ci < size, ck, -jnp.inf)
+        ci_parts.append(ci + jnp.uint32(off))
+        ck_parts.append(ck)
+        oks.append(jnp.max(cnts) <= maxpb)
+    producer_ok = oks[0]
+    for ok_b in oks[1:]:
+        producer_ok = jnp.logical_and(producer_ok, ok_b)
+    a = a_parts[0] if len(bounds) == 1 else jnp.concatenate(a_parts)
+    mom_out = None
+    if dgc:
+        mom_out = (mom_parts[0] if len(bounds) == 1
+                   else jnp.concatenate(mom_parts))
+    cand_k = ck_parts[0] if len(bounds) == 1 else jnp.concatenate(ck_parts)
+    cand_i = ci_parts[0] if len(bounds) == 1 else jnp.concatenate(ci_parts)
+    return a, mom_out, cand_k, cand_i, producer_ok
+
+
+def _candidates_xla(kind, g, a_prev, s_prev8, c, *, k: int, momentum: float,
+                    mom, bounds):
+    """Per-bucket XLA candidate compaction.
+
+    Sweep 1 is one fused elementwise pass over the whole vector (XLA
+    fuses across bucket slices anyway); sweep 2's per-row top-W
+    compaction runs per bucket so each bucket's candidate chain is
+    independent. Returns per-bucket (full_cover, row_min) witnesses —
+    the exactness check needs the global tau_k, known only after the
+    trim. Candidate order stays global-index-ascending across buckets,
+    preserving the flat path's tie-break semantics bit-for-bit.
+    """
+    j = g.shape[0]
+    a, score, mom_out = _sweep1_xla(kind, g, a_prev, s_prev8, c,
+                                    momentum=momentum, mom=mom)
+    if kind != "dgc":
+        mom_out = None
+    keys = jnp.abs(score)
+    ck_parts, ci_parts, witnesses = [], [], []
+    for off, size in bounds:
+        kb = px.pad_keys(keys[off:off + size])
+        # density over the GLOBAL j: a bucket's rows are provisioned
+        # exactly like the flat path's (witness + fallback cover
+        # concentration), so bucketing adds no candidate-slot cost
+        cv, ci, row_min, full_cover = px.candidates_xla(
+            kb, k, density_len=(j if len(bounds) > 1 else 0))
+        ck_parts.append(cv)
+        ci_parts.append(ci + jnp.uint32(off))
+        witnesses.append((full_cover, row_min))
+    cand_k = ck_parts[0] if len(bounds) == 1 else jnp.concatenate(ck_parts)
+    cand_i = ci_parts[0] if len(bounds) == 1 else jnp.concatenate(ci_parts)
+    return a, mom_out, cand_k, cand_i, witnesses
+
+
 def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
                           omega=1.0, mu: float = 0.1, Q: float = 0.0,
                           momentum: float = 0.9, mom=None,
                           idx_prev=None, a_prev_sel=None, g_prev_sel=None,
                           want_ghat: bool = True,
-                          strategy: Optional[str] = None) -> dict:
+                          strategy: Optional[str] = None,
+                          num_buckets: int = 1) -> dict:
     """One fused compression step. kind in {"topk", "dgc", "regtopk"}.
 
     Inputs: g (J,) raw gradient; a_prev (J,) previous error-compensated
     gradient; s_prev8 (J,) uint8 previous selection mask; step () int32.
     REGTOP-k additionally takes the O(k) posterior (idx_prev uint32,
     a_prev_sel, g_prev_sel). DGC takes the momentum buffer ``mom``.
+    ``num_buckets`` partitions the sweeps into contiguous buckets
+    (DESIGN.md §2.4); selection semantics are bucketing-invariant.
 
     Returns {"a", "mask8", "values", "indices", "ghat" (None unless
     want_ghat), "mom" (dgc only)}. values/indices are the fixed-k packed
     pairs ordered by |score| descending; the selected support is
-    bit-identical to the reference exact selector's.
+    bit-identical to the reference exact selector's (and to the flat
+    num_buckets=1 path) for every num_buckets.
     """
     from repro.core import bigvec
     strategy = strategy or default_strategy()
     j = g.shape[0]
     k = int(min(k, j))
+    bounds = bucket_bounds(j, num_buckets)
     regtopk = kind == "regtopk"
     if regtopk:
         c = jnp.where(step == 0, jnp.float32(1.0),
@@ -107,40 +221,15 @@ def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
 
     if strategy in ("pallas", "pallas_interpret"):
         interpret = strategy == "pallas_interpret" or auto_interpret()
-        j_pad = -(-j // pk.BLOCK) * pk.BLOCK
-        pad = lambda x: jnp.pad(x.astype(jnp.float32), (0, j_pad - j))
-        a_p, score_p, mom_p, _amax, hist = pk.sweep1_pallas(
-            pad(g), pad(a_prev), pad(s_prev8.astype(jnp.float32)), c,
-            mode=("dgc" if kind == "dgc" else "plain"), momentum=momentum,
-            mom=None if mom is None else pad(mom), interpret=interpret)
-        # padding contributed (j_pad - j) zero keys to bin 0
-        hist = hist.at[0].add(-(j_pad - j))
-        # margin k: REGTOP-k support corrections may drop <=k entries
-        # below tau without breaking top-k coverage of the candidates
-        target = k + jnp.where(jnp.logical_and(regtopk, step > 0), k, 0)
-        tau = pk.threshold_from_hist(hist, target)
-        maxpb = int(min(pk.BLOCK, max(32, -(-8 * k * pk.BLOCK // j))))
-        # want_mask=False: the exact mask is rebuilt below as an O(k)
-        # scatter, so the dense threshold-mask write would be wasted
-        _mask_t, cand_k, cand_i, cnts = pk.sweep2_pallas(
-            score_p, tau, maxpb=maxpb, interpret=interpret,
-            want_mask=False)
-        cand_k = jnp.where(cand_i < j, cand_k, -jnp.inf)
-        producer_ok = jnp.max(cnts) <= maxpb
-        a = a_p[:j]
-        mom_out = mom_p[:j] if kind == "dgc" else None
+        a, mom_out, cand_k, cand_i, producer_ok = _candidates_pallas(
+            kind, g, a_prev, s_prev8, c, step, k=k, regtopk=regtopk,
+            momentum=momentum, mom=mom, interpret=interpret, bounds=bounds)
+        witnesses = None
     else:
-        a, score, mom_out = _sweep1_xla(kind, g, a_prev, s_prev8, c,
-                                        momentum=momentum, mom=mom)
-        j_pad = px.pad_len(j)
-        keys = jnp.abs(score)
-        if j_pad != j:
-            keys = jnp.concatenate(
-                [keys, jnp.full((j_pad - j,), -jnp.inf, jnp.float32)])
-        cand_k, cand_i, row_min, full_cover = px.candidates_xla(keys, k)
+        a, mom_out, cand_k, cand_i, witnesses = _candidates_xla(
+            kind, g, a_prev, s_prev8, c, k=k, momentum=momentum, mom=mom,
+            bounds=bounds)
         producer_ok = None                   # needs tau; checked below
-        if kind != "dgc":
-            mom_out = None
 
     # --- O(candidates) exact-k trim -------------------------------------
     if regtopk:
@@ -161,7 +250,12 @@ def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
     tau_k = tv[-1]
     valid = tau_k > -jnp.inf
     if producer_ok is None:                  # xla strategy witness
-        producer_ok = full_cover | (jnp.max(row_min) < tau_k)
+        # a bucket can hide a missed top-k entry only if one of its rows
+        # saturated its W candidate slots at or above the global tau_k
+        producer_ok = valid
+        for full_cover, row_min in witnesses:
+            ok_b = full_cover | (jnp.max(row_min) < tau_k)
+            producer_ok = jnp.logical_and(producer_ok, ok_b)
     ok = producer_ok & valid
     if regtopk:
         # Boundary ties among compacted candidates resolve exactly like the

@@ -32,7 +32,6 @@ def dense_scores_ref(g, a_prev, s_prev, step, *, kind: str, omega: float = 1.0,
         a = err + g
     if kind != "regtopk":
         return a, a, mom_out
-    k = idx_prev.shape[0]
     j = a.shape[0]
     # densify the O(k) posterior (oracle only; the pipeline never does)
     a_prev_d = jnp.zeros((j,), jnp.float32).at[idx_prev.astype(jnp.int32)].set(
@@ -49,3 +48,17 @@ def dense_scores_ref(g, a_prev, s_prev, step, *, kind: str, omega: float = 1.0,
 def exact_topk_ref(score, k: int):
     """(values_of_|score|, indices) with lax.top_k tie-break."""
     return jax.lax.top_k(jnp.abs(score.astype(jnp.float32)), k)
+
+
+def bucket_hists_ref(keys, bounds, bins: int = 2048):
+    """Per-bucket bit-pattern histograms, dense oracle (DESIGN.md §2.4).
+
+    The merge invariant the bucketed pipeline rests on: bit_bin is a
+    pure function of the value, so summing these per-bucket histograms
+    reproduces the flat histogram of ``keys`` exactly, for any
+    contiguous partition ``bounds``.
+    """
+    from repro.kernels.compress.kernel import bit_bin
+    keys = jnp.abs(keys.astype(jnp.float32))
+    return [jnp.zeros((bins,), jnp.int32).at[bit_bin(keys[o:o + s])].add(1)
+            for o, s in bounds]

@@ -24,17 +24,27 @@ import jax.numpy as jnp
 CHUNK = 8192
 
 
-def row_shape(j_pad: int, k: int) -> tuple:
-    """(rows, chunk, W) for the candidate sweep over a padded length."""
+def row_shape(j_pad: int, k: int, density_len: int = 0) -> tuple:
+    """(rows, chunk, W) for the candidate sweep over a padded length.
+
+    ``density_len`` (default: j_pad) is the length the selection density
+    k/density_len is measured over. The bucketed pipeline passes the
+    GLOBAL length here: a bucket's rows are provisioned exactly like the
+    flat path's rows (4x the global-density share), so bucketing costs
+    no extra candidate slots — row-level concentration beyond W is
+    caught by the row_min witness and falls back, identically to flat.
+    """
     chunk = min(CHUNK, j_pad)
     rows = j_pad // chunk
-    if rows <= 1:
-        # single row: take k (+ slack so the overflow check can pass)
+    dl = density_len or j_pad
+    if rows <= 1 and dl == j_pad:
+        # single row over the whole vector: take k (+ slack so the
+        # overflow check can pass)
         w = min(chunk, k + 8)
     else:
-        mean = k * chunk / j_pad
+        mean = k * chunk / dl
         w = int(max(16, min(chunk, 8 * round(mean / 2))))   # ~4x mean, mult of 8
-        w = max(w, 16)
+        w = min(chunk, max(w, 16))      # tiny buckets: chunk itself can be < 16
     return rows, chunk, w
 
 
@@ -43,7 +53,23 @@ def pad_len(j: int) -> int:
     return -(-j // chunk) * chunk
 
 
-def candidates_xla(keys: jnp.ndarray, k: int):
+def pad_keys(keys: jnp.ndarray) -> jnp.ndarray:
+    """Pad a key vector to its row-aligned length with -inf sentinels.
+
+    -inf keys can never out-rank a real |score| (>= 0), so padded slots
+    are inert in the per-row top-W compaction; the bucketed pipeline pads
+    each bucket independently (the padding of bucket b must not alias
+    bucket b+1's index range with a selectable key).
+    """
+    j = keys.shape[0]
+    j_pad = pad_len(j)
+    if j_pad == j:
+        return keys
+    return jnp.concatenate(
+        [keys, jnp.full((j_pad - j,), -jnp.inf, jnp.float32)])
+
+
+def candidates_xla(keys: jnp.ndarray, k: int, density_len: int = 0):
     """Per-row top-W compaction of a padded key vector.
 
     keys: (j_pad,) non-negative scores (padding must be -inf or smaller
@@ -52,9 +78,10 @@ def candidates_xla(keys: jnp.ndarray, k: int):
     W-th largest key — the exactness witness: if max(row_min) < tau (the
     selected k-th key), no row can hide a missed top-k entry.
     ``full_cover`` is True when W == chunk (every entry is a candidate).
+    ``density_len``: see row_shape (bucketed callers pass the global J).
     """
     j_pad = keys.shape[0]
-    rows, chunk, w = row_shape(j_pad, k)
+    rows, chunk, w = row_shape(j_pad, k, density_len)
     cv, ci = jax.lax.top_k(keys.reshape(rows, chunk), w)
     gi = (jnp.arange(rows, dtype=jnp.uint32)[:, None] * jnp.uint32(chunk)
           + ci.astype(jnp.uint32))

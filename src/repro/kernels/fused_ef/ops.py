@@ -4,7 +4,6 @@ the kernel body under interpret=True; on TPU it compiles natively).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import auto_interpret as _interpret

@@ -1,7 +1,6 @@
 """Jit-friendly wrapper for the histogram threshold-select kernel."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import auto_interpret as _interpret

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import (
-    SHAPES, MeshConfig, OptimizerConfig, RunConfig, SparsifierConfig,
+    SHAPES, OptimizerConfig, RunConfig, SparsifierConfig,
     get_config, list_archs,
 )
 from repro.launch.mesh import make_production_mesh, make_mesh
@@ -110,7 +110,8 @@ def collective_bytes(hlo_text: str) -> dict:
     out = {c: 0 for c in COLLECTIVES}
     # lines like: %x = bf16[2,16,128]{...} all-gather(...)
     pat = re.compile(
-        r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\b(" + "|".join(COLLECTIVES) + r")\b")
+        r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\b("
+        + "|".join(COLLECTIVES) + r")\b")
     for m in pat.finditer(hlo_text):
         dt, dims, op = m.groups()
         if dt not in dt_bytes:
@@ -135,7 +136,6 @@ def build_step(run: RunConfig, mesh, kind: str):
         tmpl, pspecs, ospecs, especs = train_state_specs(run, mesh, pal)
         params_abs = _globalize_tree(tmpl, pspecs, mesh)
         from repro.core import sparsify
-        from repro.core.flatten import TreeFlattener
         from repro.optim import init_opt_state, opt_shard_len
         flat_total = sum(int(l.size) for l in jax.tree_util.tree_leaves(tmpl))
         dp = 1
@@ -177,6 +177,7 @@ def build_step(run: RunConfig, mesh, kind: str):
 def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
                sparsity=0.001, comm="sparse", verbose=True,
                variant="", state_format="dense", ef_dtype="float32",
+               pipeline="reference", num_buckets=1,
                **cfg_overrides) -> dict:
     shape = SHAPES[shape_name]
     cfg = get_config(arch)
@@ -197,7 +198,8 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
         sparsifier=SparsifierConfig(kind=sparsifier, sparsity=sparsity,
                                     comm_mode=comm, selector="exact",
                                     mu=0.5, state_format=state_format,
-                                    ef_dtype=ef_dtype),
+                                    ef_dtype=ef_dtype, pipeline=pipeline,
+                                    num_buckets=num_buckets),
         optimizer=OptimizerConfig(kind="adam", lr=1e-4),
         attn_override=attn_override,
     )
@@ -221,8 +223,10 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
     n_active = count_active_params(cfg)
     rec = {
         "arch": arch, "shape": shape_name, "variant": variant,
-        "mesh": dict(zip(mesh.axis_names, [int(mesh.shape[a]) for a in mesh.axis_names])),
+        "mesh": dict(zip(mesh.axis_names,
+                         [int(mesh.shape[a]) for a in mesh.axis_names])),
         "kind": kind, "attn_override": attn_override,
+        "num_buckets": num_buckets,
         "params": int(n_params), "active_params": int(n_active),
         "flops": float(cost.get("flops", -1)),
         "bytes_accessed": float(cost.get("bytes accessed", -1)),
@@ -267,6 +271,12 @@ def main():
     ap.add_argument("--sparsifier", default="regtopk")
     ap.add_argument("--sparsity", type=float, default=0.001)
     ap.add_argument("--comm", default="sparse")
+    ap.add_argument("--pipeline", default="reference",
+                    choices=["reference", "fused"])
+    ap.add_argument("--num-buckets", type=int, default=1,
+                    help="bucketed compression + chunked sparse collectives "
+                         "(DESIGN.md §2.4); the record carries num_buckets "
+                         "so the roofline reports collective_exposed_s")
     ap.add_argument("--out", default="")
     ap.add_argument("--variant", default="", help="perf-variant tag for the record")
     ap.add_argument("--state-format", default="dense")
@@ -304,7 +314,8 @@ def main():
                     a, s, mesh, sparsifier=args.sparsifier,
                     sparsity=args.sparsity, comm=args.comm,
                     variant=args.variant, state_format=args.state_format,
-                    ef_dtype=args.ef_dtype, **overrides))
+                    ef_dtype=args.ef_dtype, pipeline=args.pipeline,
+                    num_buckets=args.num_buckets, **overrides))
             except Exception as e:  # noqa: BLE001 — report every combo
                 import traceback
                 traceback.print_exc()

@@ -29,6 +29,13 @@ def parse_args(argv=None):
                     help="compression execution pipeline (DESIGN.md §2.2): "
                          "dense reference math, or the two-sweep fused "
                          "kernels/compress path")
+    ap.add_argument("--num-buckets", type=int, default=1,
+                    help="bucketed compression (DESIGN.md §2.4): partition "
+                         "the flat gradient into this many contiguous "
+                         "buckets; the fused sweeps and the sparse "
+                         "all-gather run per bucket so collectives overlap "
+                         "compaction. Selection is bucketing-invariant; "
+                         "1 disables bucketing")
     ap.add_argument("--optimizer", default="adam")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--data", type=int, default=1)
@@ -53,7 +60,6 @@ def main(argv=None):
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
     import jax
-    import jax.numpy as jnp
     from repro.configs.base import (OptimizerConfig, RunConfig, SHAPES,
                                     SparsifierConfig, get_config,
                                     reduced_config)
@@ -70,7 +76,8 @@ def main(argv=None):
         sparsifier=SparsifierConfig(kind=args.sparsifier,
                                     sparsity=args.sparsity, mu=args.mu,
                                     comm_mode=args.comm,
-                                    pipeline=args.pipeline),
+                                    pipeline=args.pipeline,
+                                    num_buckets=args.num_buckets),
         optimizer=OptimizerConfig(kind=args.optimizer, lr=args.lr),
         seed=args.seed, steps=args.steps,
         checkpoint_dir=args.checkpoint_dir,

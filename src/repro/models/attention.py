@@ -604,13 +604,17 @@ def attn_prefill(p, x, cfg, pal: Parallel, *, max_seq=None):
     else:
         q, k, v = _proj_qkv(p, x, cfg, pos)
         o = _sdpa_chunked(q, k, v, pos, pos, scale, True, window)
-        cache = init_cache(cfg, pal, b, min(max_seq, cfg.window) if window else max_seq, x.dtype)
+        cache = init_cache(cfg, pal, b,
+                           min(max_seq, cfg.window) if window else max_seq,
+                           x.dtype)
         cw = cache["k"].shape[1]
         if window and s > cw:
             # keep the last cw positions at slots (position % cw)
             sel = jnp.arange(s - cw, s)
-            cache["k"] = cache["k"].at[:, sel % cw].set(k[:, sel].astype(cache["k"].dtype))
-            cache["v"] = cache["v"].at[:, sel % cw].set(v[:, sel].astype(cache["v"].dtype))
+            cache["k"] = cache["k"].at[:, sel % cw].set(
+                k[:, sel].astype(cache["k"].dtype))
+            cache["v"] = cache["v"].at[:, sel % cw].set(
+                v[:, sel].astype(cache["v"].dtype))
         else:
             cache["k"] = _prefix_write(cache["k"], k)
             cache["v"] = _prefix_write(cache["v"], v)

@@ -151,13 +151,13 @@ def init_mamba_cache(cfg, pal: Parallel, batch: int, dtype):
 
 def mamba_decode(p, x, cache, cfg, pal: Parallel):
     """x (B, 1, d) -> (y (B, 1, d), cache). O(1) per token."""
-    bsz = x.shape[0]
     _, dil, dt_rank = _dims(cfg, pal)
     ds = cfg.ssm.d_state
     u = x[:, 0] @ p["in_x"].astype(x.dtype)
     z = x[:, 0] @ p["in_z"].astype(x.dtype)
     win = jnp.concatenate([cache["conv"], u[:, None]], 1)    # (B, dc, dil)
-    conv = jnp.sum(win * p["conv_w"].astype(win.dtype), 1) + p["conv_b"].astype(win.dtype)
+    conv = (jnp.sum(win * p["conv_w"].astype(win.dtype), 1)
+            + p["conv_b"].astype(win.dtype))
     u = jax.nn.silu(conv)
     dbc = psum_model((u @ p["x_proj"].astype(u.dtype)).astype(jnp.float32), pal)
     dt_low, bmat, cmat = (dbc[..., :dt_rank], dbc[..., dt_rank:dt_rank + ds],

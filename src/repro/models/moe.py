@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.models.layers import dense_init
 from repro.models.parallel import (
-    Parallel, pad_to, psum_model, shard_slice,
+    Parallel, pad_to, shard_slice,
 )
 
 
@@ -61,9 +61,6 @@ def moe_fwd(p, x, cfg, pal: Parallel):
     xt = x.reshape(b * t, d)
     n_tok = b * t
     e_pad = _padded_experts(cfg, pal)
-    el = p["gate"].shape[0]
-    tp = max(pal.tp, 1)
-
     logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
     if e_pad > m.n_experts:
         pad_mask = jnp.arange(e_pad) >= m.n_experts

@@ -16,7 +16,7 @@ TP conventions (DESIGN.md §2.1):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Optional
 
 import jax

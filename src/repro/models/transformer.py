@@ -12,8 +12,6 @@ pal.seq_parallel (Megatron-SP); every mixer gathers/scatters internally.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -26,7 +24,7 @@ from repro.models.layers import (
     norm_fwd, sharded_xent,
 )
 from repro.models.parallel import (
-    Parallel, all_gather_model, axis_index, psum_model, shard_slice,
+    Parallel, all_gather_model, axis_index, shard_slice,
 )
 
 LOSS_CHUNK = 512
@@ -495,7 +493,6 @@ def _sinusoidal_at(pos, d, dtype):
 def _layer_prefill(p, x, cfg, pal: Parallel, mixer, ffn, max_seq, dtype,
                    cross_kv=None):
     """Full-prompt forward returning (x, layer_cache)."""
-    b = x.shape[0]
     if mixer == "attn":
         h = norm_fwd(p["norm1"], x, cfg.norm)
         y, lc = attn.attn_prefill(p["attn"], h, cfg, pal, max_seq=max_seq)

@@ -93,7 +93,8 @@ def mlstm_fwd(p, x, cfg, pal: Parallel, state=None, return_state=False):
                                 v.astype(jnp.float32), ig, fg, state)
     hs = (hs * p["ln_h"]).astype(x.dtype) * og            # (B,S,h,hdv_l)
     out = jnp.einsum("bshv,hvd->bsd", hs, p["down"].astype(hs.dtype))
-    out = psum_scatter_model(out, pal, axis=1) if pal.seq_parallel else psum_model(out, pal)
+    out = (psum_scatter_model(out, pal, axis=1) if pal.seq_parallel
+           else psum_model(out, pal))
     if return_state:
         return out, {"c": c, "n": n, "m": m}
     return out
@@ -113,7 +114,8 @@ def mlstm_decode(p, x, cache, cfg, pal: Parallel):
     u = xi @ p["up"].astype(xi.dtype)
     og = jax.nn.sigmoid(jnp.einsum("bd,dhv->bhv", xi, p["up_gate"].astype(xi.dtype)))
     q = (u @ p["wq"].astype(u.dtype)).reshape(b, h, hd).astype(jnp.float32)
-    k = ((u @ p["wk"].astype(u.dtype)).reshape(b, h, hd) * hd ** -0.5).astype(jnp.float32)
+    k = ((u @ p["wk"].astype(u.dtype)).reshape(b, h, hd)
+         * hd ** -0.5).astype(jnp.float32)
     v = jnp.einsum("bu,uhv->bhv", u, p["wv"].astype(u.dtype)).astype(jnp.float32)
     gf = (u @ p["wif"].astype(u.dtype)).astype(jnp.float32)
     ig, fg = gf[..., :h], jax.nn.log_sigmoid(gf[..., h:])
@@ -121,7 +123,8 @@ def mlstm_decode(p, x, cache, cfg, pal: Parallel):
     m_new = jnp.maximum(fg + m, ig)
     i_ = jnp.exp(ig - m_new)
     f_ = jnp.exp(fg + m - m_new)
-    c = f_[..., None, None] * c + i_[..., None, None] * (v[..., :, None] * k[..., None, :])
+    c = (f_[..., None, None] * c
+         + i_[..., None, None] * (v[..., :, None] * k[..., None, :]))
     n = f_[..., None] * n + i_[..., None] * k
     num = jnp.einsum("bhvk,bhk->bhv", c, q)
     den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
@@ -193,7 +196,8 @@ def slstm_fwd(p, x, cfg, pal: Parallel, state=None, return_state=False):
     hs = hs.transpose(1, 0, 2)
     hs = (hs * p["ln_h"]).astype(x.dtype)
     out = hs @ p["down"].astype(hs.dtype)
-    out = psum_scatter_model(out, pal, axis=1) if pal.seq_parallel else psum_model(out, pal)
+    out = (psum_scatter_model(out, pal, axis=1) if pal.seq_parallel
+           else psum_model(out, pal))
     if return_state:
         return out, {"c": c, "n": n, "m": m}
     return out
@@ -206,7 +210,6 @@ def init_slstm_cache(cfg, pal: Parallel, batch: int):
 
 
 def slstm_decode(p, x, cache, cfg, pal: Parallel):
-    b = x.shape[0]
     xi = norm_fwd(p["norm"], x[:, 0], cfg.norm)
     ig = (xi @ p["wi"].astype(xi.dtype)).astype(jnp.float32)
     fg = (xi @ p["wf"].astype(xi.dtype)).astype(jnp.float32)

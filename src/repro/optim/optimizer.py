@@ -10,7 +10,6 @@ States are fp32 regardless of the model dtype (master copy included).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import OptimizerConfig

@@ -39,8 +39,35 @@ def model_flops(kind: str, active_params: int, global_batch: int,
     return 2.0 * active_params * global_batch
 
 
+def pipelined_overlap_s(t_coll: float, t_local: float,
+                        num_buckets: int = 1) -> float:
+    """Exposed wall time of a collective pipelined against local work.
+
+    The bucketed sparse-comm schedule (DESIGN.md §2.4) splits one
+    monolithic all-gather + scatter-add into num_buckets independent
+    chunk chains, so chunk b's collective overlaps chunk b+1's local
+    compaction. With B perfectly balanced chunks the exposed time is the
+    classic pipeline bound
+
+        max(t_coll, t_local) + min(t_coll, t_local) / B
+
+    (the longer side streams continuously; one chunk of the shorter side
+    sticks out at the pipeline head). B = 1 degenerates to the fully
+    serialized t_coll + t_local.
+    """
+    b = max(1, int(num_buckets))
+    return max(t_coll, t_local) + min(t_coll, t_local) / b
+
+
 def roofline_terms(rec: dict, hw: Hardware = HW_V5E) -> dict:
-    """rec: one dryrun.py record. Returns the three terms + diagnosis."""
+    """rec: one dryrun.py record. Returns the three terms + diagnosis.
+
+    When the record carries ``num_buckets`` (> 1), the collective model
+    additionally reports ``collective_exposed_s`` — the per-bucket
+    overlap term: the sparse all-gather wire time pipelined against the
+    local scatter-add/compaction share of the memory term instead of
+    serialized after it.
+    """
     mesh = rec["mesh"]
     chips = 1
     for v in mesh.values():
@@ -65,10 +92,27 @@ def roofline_terms(rec: dict, hw: Hardware = HW_V5E) -> dict:
         "model_flops": mf,
         "hlo_flops_total": hlo_total_flops,
         "useful_ratio": mf / hlo_total_flops if hlo_total_flops > 0 else 0.0,
-        "step_time_lb_s": max(terms.values()),
+        "step_time_lb_s": max(t_compute, t_memory, t_coll),
         "mfu_upper_bound": (mf / chips / hw.peak_flops_bf16) /
-                           max(max(terms.values()), 1e-12),
+                           max(t_compute, t_memory, t_coll, 1e-12),
     })
+    num_buckets = int(rec.get("num_buckets", 1))
+    if num_buckets > 1:
+        # diagnostic (not part of the three-term lower bound): only the
+        # sparse gradient all-gather is chunked, so prefer the record's
+        # own breakdown (``sparse_gather_wire_bytes``) when present;
+        # falling back to the whole-step wire bytes makes this an UPPER
+        # BOUND on the overlappable share (ZeRO-1 param gathers and TP
+        # psums in ``wire`` are not chunked by the schedule)
+        gw = rec.get("sparse_gather_wire_bytes", wire)
+        t_gather = gw / hw.ici_bw
+        # the local work a chunk's collective hides behind is the
+        # scatter-add combine of the previously gathered pairs —
+        # bounded by their HBM landing traffic (written exactly once)
+        t_combine = min(t_memory, gw / hw.hbm_bw)
+        terms["collective_exposed_s"] = (t_coll - t_gather) + \
+            pipelined_overlap_s(t_gather, t_combine, num_buckets)
+        terms["num_buckets"] = num_buckets
     return terms
 
 

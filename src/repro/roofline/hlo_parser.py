@@ -22,7 +22,6 @@ Numbers are per-device (the SPMD module is per-device).
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 

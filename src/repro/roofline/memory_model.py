@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.configs.base import RunConfig, SHAPES
+from repro.configs.base import RunConfig
 from repro.core.sparsify import resolve_k
 from repro.models.params import count_params_analytic
 

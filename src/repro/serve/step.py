@@ -27,7 +27,6 @@ from repro.models import decode_step as model_decode
 from repro.models import init_decode_cache, prefill as model_prefill
 from repro.models.parallel import Parallel
 from repro.models.specs import param_specs
-from repro.models.transformer import layer_pattern
 from repro.train.step import resolve_model_cfg
 
 
@@ -85,11 +84,15 @@ def decode_cache_specs(run: RunConfig, mesh, pal: Parallel):
         if name in ("k", "v", "ckv", "krope"):
             head_sharded = (name in ("k", "v") and "cross" not in keys
                             and cfg.attn_kind != "mla" and pal.tp_on)
-            dims = [batch_spec, seq_spec] + [None] * (leaf.ndim - 2 - (1 if stacked else 0))
+            dims = ([batch_spec, seq_spec]
+                    + [None] * (leaf.ndim - 2 - (1 if stacked else 0)))
             if head_sharded:
-                dims[-2 if leaf.ndim - (1 if stacked else 0) >= 4 else -1] = "model"
-            if "cross" in keys:   # cross K/V: (nsb, B, S_enc, kv, hd), seq NOT ctx-sharded
-                dims = [batch_spec, None] + [None] * (leaf.ndim - 2 - (1 if stacked else 0))
+                nd = leaf.ndim - (1 if stacked else 0)
+                dims[-2 if nd >= 4 else -1] = "model"
+            if "cross" in keys:
+                # cross K/V: (nsb, B, S_enc, kv, hd), seq NOT ctx-sharded
+                dims = ([batch_spec, None]
+                        + [None] * (leaf.ndim - 2 - (1 if stacked else 0)))
                 if cfg.attn_kind != "mla" and pal.tp_on:
                     dims[-2] = "model"
             return P(*([None] if stacked else []), *dims)

@@ -6,7 +6,12 @@ Composition per step (DESIGN.md §2.1):
 2. psum over model for gradients of REPLICATED leaves (Megatron-SP rule);
 3. flatten to the per-rank J_local fp32 vector;
 4. THE PAPER: sparsified gradient sync over the data axes
-   (core.aggregate.sync_gradient — TOP-k / REGTOP-k / baselines);
+   (core.aggregate.sync_gradient — TOP-k / REGTOP-k / baselines). With
+   sparsifier.num_buckets > 1 this stage uses the bucketed schedule of
+   DESIGN.md §2.4: the fused sweeps run per bucket (histogram-merge
+   global threshold), and the sparse all-gather is issued in
+   num_buckets chunks so each chunk's collective overlaps the previous
+   chunk's local scatter-add combine;
 5. ZeRO-1 optimizer: each data rank updates its 1/DP slice of the fp32
    master + moments, params all-gathered back over data.
 
@@ -170,7 +175,8 @@ def build_train_step(run: RunConfig, mesh, pal: Parallel):
 
     def exp(t):
         return jax.tree_util.tree_map(
-            lambda l: l.reshape((1, 1) + l.shape) if getattr(l, "ndim", 0) >= 1 else l, t)
+            lambda l: (l.reshape((1, 1) + l.shape)
+                       if getattr(l, "ndim", 0) >= 1 else l), t)
 
     def step_fn(params, opt_state, ef_state, batch, key):
         opt_state = sq(opt_state)

@@ -1,0 +1,325 @@
+"""Bucketed compression (DESIGN.md §2.4) vs the flat num_buckets=1 path.
+
+The contract under test: bucketing is an execution-schedule choice, not
+a semantics choice — for every num_buckets, the packed (values,
+indices), the mask, and the post-step EF/posterior state must be
+BIT-identical to the flat path (which is itself bit-identical to the
+reference exact selector, tests/test_compress_pipeline.py)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SparsifierConfig
+from repro.core import sparsify
+from repro.core.flatten import bucket_bounds
+from repro.kernels.compress import kernel as ck
+from repro.kernels.compress import ops as cops
+from repro.kernels.compress import ref as cref
+
+BUCKETS = [1, 3, 8]
+
+
+def _cfg(kind, nb, **kw):
+    kw.setdefault("selector", "exact")
+    kw.setdefault("pipeline", "fused")
+    return SparsifierConfig(kind=kind, num_buckets=nb, **kw)
+
+
+def _assert_state_equal(s1, s2, ctx):
+    assert set(s1) == set(s2), ctx
+    for name in s1:
+        np.testing.assert_array_equal(np.asarray(s1[name]),
+                                      np.asarray(s2[name]),
+                                      err_msg=f"{ctx}: state[{name}]")
+
+
+def _roundtrip_vs_flat(kind, nb, j, steps=4, seed=0, omega=0.25, gfn=None):
+    """Run flat and bucketed side by side; everything must be bitwise equal."""
+    cfg1 = _cfg(kind, 1, sparsity=0.02, mu=0.5)
+    cfgb = dataclasses.replace(cfg1, num_buckets=nb)
+    s1 = sparsify.init_state(cfg1, j)
+    sb = sparsify.init_state(cfgb, j)
+    key = jax.random.PRNGKey(seed)
+    for t in range(steps):
+        if gfn is None:
+            g = jax.random.normal(jax.random.fold_in(key, t), (j,))
+        else:
+            g = gfn(j, t)
+        o1 = sparsify.compress(cfg1, s1, g, omega=omega)
+        ob = sparsify.compress(cfgb, sb, g, omega=omega)
+        ctx = f"kind={kind} nb={nb} t={t}"
+        np.testing.assert_array_equal(np.asarray(o1.indices),
+                                      np.asarray(ob.indices), err_msg=ctx)
+        np.testing.assert_array_equal(np.asarray(o1.values),
+                                      np.asarray(ob.values), err_msg=ctx)
+        np.testing.assert_array_equal(np.asarray(o1.mask),
+                                      np.asarray(ob.mask), err_msg=ctx)
+        agg = omega * sparsify.dense_ghat(o1, j)
+        s1 = sparsify.observe_aggregate(cfg1, o1.state, agg)
+        sb = sparsify.observe_aggregate(cfgb, ob.state, agg)
+        _assert_state_equal(s1, sb, ctx)
+    return s1
+
+
+class TestBucketBounds:
+    def test_partition_is_contiguous_and_exhaustive(self):
+        for j, nb in ((12345, 3), (8, 8), (100, 7), (1, 1), (5, 9)):
+            bounds = bucket_bounds(j, nb)
+            assert bounds[0][0] == 0
+            assert sum(s for _, s in bounds) == j
+            for (o1, s1), (o2, _s2) in zip(bounds, bounds[1:]):
+                assert o1 + s1 == o2
+            sizes = [s for _, s in bounds]
+            assert max(sizes) - min(sizes) <= 1
+            assert min(sizes) >= 1          # clamped: no empty buckets
+        assert len(bucket_bounds(5, 9)) == 5
+        assert bucket_bounds(10, 1) == [(0, 10)]
+
+
+class TestParityMatrix:
+    """num_buckets in {1, 3, 8} x all three fused kinds: packed pairs and
+    post-step EF/posterior state bit-identical to the flat path."""
+
+    @pytest.mark.parametrize("kind", ["topk", "dgc", "regtopk"])
+    @pytest.mark.parametrize("nb", BUCKETS)
+    def test_bitwise_parity_vs_flat(self, kind, nb):
+        final = _roundtrip_vs_flat(kind, nb, j=12_345)
+        assert int(final["step"]) == 4
+
+    @pytest.mark.parametrize("nb", [3, 8])
+    def test_sparse_comm_packed_parity(self, nb):
+        cfg1 = _cfg("regtopk", 1, sparsity=0.01, mu=0.5, comm_mode="sparse")
+        cfgb = dataclasses.replace(cfg1, num_buckets=nb)
+        j = 8_192
+        g = jax.random.normal(jax.random.PRNGKey(3), (j,))
+        o1 = sparsify.compress(cfg1, sparsify.init_state(cfg1, j), g)
+        ob = sparsify.compress(cfgb, sparsify.init_state(cfgb, j), g)
+        assert o1.ghat is None and ob.ghat is None
+        np.testing.assert_array_equal(np.asarray(o1.indices),
+                                      np.asarray(ob.indices))
+        np.testing.assert_array_equal(np.asarray(o1.values),
+                                      np.asarray(ob.values))
+
+
+class TestCrossBucketTies:
+    """Adversarial tie cases whose resolution spans bucket boundaries:
+    selection must stay the reference tie-break (value desc, index asc),
+    independent of where the bucket cuts fall."""
+
+    @pytest.mark.parametrize("kind", ["topk", "regtopk"])
+    @pytest.mark.parametrize("nb", [3, 8])
+    def test_all_equal_selects_lowest_indices_across_buckets(self, kind, nb):
+        # every entry ties; top-150 of 300 spans bucket 0 and half of
+        # bucket 1 (nb=3) — the union must be indices [0, 150)
+        j, k = 300, 150
+        cfg1 = _cfg(kind, 1, k=k, mu=0.5)
+        cfgb = dataclasses.replace(cfg1, num_buckets=nb)
+        g = jnp.ones((j,))
+        o1 = sparsify.compress(cfg1, sparsify.init_state(cfg1, j), g)
+        ob = sparsify.compress(cfgb, sparsify.init_state(cfgb, j), g)
+        np.testing.assert_array_equal(np.asarray(o1.indices),
+                                      np.asarray(ob.indices))
+        assert set(np.asarray(ob.indices).tolist()) == set(range(k))
+
+    @pytest.mark.parametrize("nb", [3, 8])
+    def test_boundary_tie_straddling_buckets(self, nb):
+        # k-th magnitude duplicated on BOTH sides of every bucket cut;
+        # multi-step so REGTOP-k support corrections hit the tie too
+        def gfn(j, t):
+            g = jnp.where(jnp.arange(j) % 7 == 0, 2.0, 1.0)
+            bounds = bucket_bounds(j, nb)
+            for off, _ in bounds[1:]:
+                g = g.at[off - 1].set(2.0).at[off].set(2.0)
+            return g * (1.0 + 0.1 * t)
+        _roundtrip_vs_flat("regtopk", nb, j=6_000, steps=3, gfn=gfn)
+
+    @pytest.mark.parametrize("nb", [3, 8])
+    def test_degenerate_all_zero(self, nb):
+        _roundtrip_vs_flat("topk", nb, j=2_000, steps=2,
+                           gfn=lambda j, t: jnp.zeros((j,)))
+
+
+class TestPallasBucketed:
+    """Histogram-merge path (strategy="pallas_interpret")."""
+
+    @pytest.mark.parametrize("kind", ["topk", "regtopk"])
+    @pytest.mark.parametrize("nb", [3, 8])
+    def test_bitwise_parity_vs_flat(self, kind, nb):
+        j, k = 2 * ck.BLOCK, 37
+        key = jax.random.PRNGKey(5)
+        kw = {}
+        if kind == "regtopk":
+            kw = dict(idx_prev=jnp.zeros((k,), jnp.uint32),
+                      a_prev_sel=jnp.zeros((k,)), g_prev_sel=jnp.zeros((k,)))
+        a_prev = {1: jnp.zeros((j,)), nb: jnp.zeros((j,))}
+        s8 = {1: jnp.zeros((j,), jnp.uint8), nb: jnp.zeros((j,), jnp.uint8)}
+        step = jnp.zeros((), jnp.int32)
+        kws = {1: dict(kw), nb: dict(kw)}
+        for t in range(3):
+            g = jax.random.normal(jax.random.fold_in(key, t), (j,))
+            outs = {}
+            for b in (1, nb):
+                outs[b] = cops.fused_compress_arrays(
+                    kind, g, a_prev[b], s8[b], step, k=k, omega=0.25,
+                    mu=0.5, Q=0.0, want_ghat=True,
+                    strategy="pallas_interpret", num_buckets=b, **kws[b])
+            for f in ("a", "mask8", "values", "indices", "ghat"):
+                np.testing.assert_array_equal(
+                    np.asarray(outs[1][f]), np.asarray(outs[nb][f]),
+                    err_msg=f"kind={kind} nb={nb} t={t} field={f}")
+            for b in (1, nb):
+                a_prev[b], s8[b] = outs[b]["a"], outs[b]["mask8"]
+                if kind == "regtopk":
+                    agg = 0.25 * outs[b]["ghat"]
+                    kws[b] = dict(
+                        idx_prev=outs[b]["indices"],
+                        a_prev_sel=outs[b]["values"],
+                        g_prev_sel=agg[outs[b]["indices"].astype(jnp.int32)])
+            step = step + 1
+
+    def test_histogram_merge_equals_flat_histogram(self):
+        """Per-bucket bit-pattern histograms sum to the flat histogram
+        (the invariant the global-k merge rests on), and the merged
+        threshold equals the flat threshold."""
+        j = 4 * ck.BLOCK
+        score = jax.random.normal(jax.random.PRNGKey(7), (j,))
+        keys = jnp.abs(score)
+        flat_hist = jnp.zeros((ck.BINS,), jnp.int32).at[ck.bit_bin(keys)].add(1)
+        for nb in (2, 3, 8):
+            bounds = bucket_bounds(j, nb)
+            hists = cref.bucket_hists_ref(score, bounds, ck.BINS)
+            np.testing.assert_array_equal(
+                np.asarray(ck.merge_bucket_hists(hists)),
+                np.asarray(flat_hist))
+            for target in (1, 64, j // 2):
+                assert float(ck.threshold_from_bucket_hists(hists, target)) \
+                    == float(ck.threshold_from_hist(flat_hist, target))
+
+    def test_sweep1_per_bucket_hists_merge(self):
+        """Kernel-emitted per-bucket histograms (pad-corrected) merge to
+        the dense-oracle flat histogram."""
+        j = 3 * ck.BLOCK + 123          # forces per-bucket padding
+        g = jax.random.normal(jax.random.PRNGKey(9), (j,))
+        bounds = bucket_bounds(j, 3)
+        hists = []
+        for off, size in bounds:
+            j_pad = -(-size // ck.BLOCK) * ck.BLOCK
+            pad = lambda x: jnp.pad(x[off:off + size], (0, j_pad - size))
+            _a, _s, _m, _amax, hist = ck.sweep1_pallas(
+                pad(g), pad(jnp.zeros((j,))), pad(jnp.zeros((j,))), 1.0,
+                mode="plain", interpret=True)
+            hists.append(hist.at[0].add(-(j_pad - size)))
+        merged = np.asarray(ck.merge_bucket_hists(hists))
+        bins = np.asarray(ck.bit_bin(jnp.abs(g)))
+        np.testing.assert_array_equal(
+            merged, np.bincount(bins, minlength=ck.BINS))
+        assert int(merged.sum()) == j
+
+
+class TestBucketedSweepCount:
+    """The bucketed path must stay within the fused pipeline's O(J)
+    traversal budget: num_buckets partial sweeps are ONE J-equivalent,
+    not num_buckets traversals (audit weights by size, DESIGN.md §2.3)."""
+
+    @staticmethod
+    def _audit(nb, comm_mode="sparse", j=1 << 21):
+        from repro.kernels.compress.audit import audit_fn
+        cfg = SparsifierConfig(kind="regtopk", k=j // 1000, mu=0.5,
+                               selector="exact", comm_mode=comm_mode,
+                               pipeline="fused", num_buckets=nb)
+        state = sparsify.init_state(cfg, j)
+        g = jax.random.normal(jax.random.PRNGKey(0), (j,))
+
+        def f(state, g):
+            o = sparsify.compress(cfg, state, g, omega=0.25)
+            outs = [o.mask, o.state, o.values, o.indices]
+            if o.ghat is not None:
+                outs.append(o.ghat)
+            return tuple(jax.tree_util.tree_leaves(outs))
+
+        return audit_fn(f, state, g, j=j)
+
+    @pytest.mark.parametrize("nb", [1, 3, 8])
+    def test_bucketed_sparse_within_budget(self, nb):
+        res = self._audit(nb)
+        assert res["traversals"] <= 3.01, (nb, res)
+        assert res["read_units"] <= 5.0, (nb, res)
+
+    def test_bucketing_does_not_inflate_traversals(self):
+        flat, b8 = self._audit(1), self._audit(8)
+        assert abs(b8["traversals"] - flat["traversals"]) <= 0.01, (flat, b8)
+
+
+class TestBucketedSyncGradient:
+    """Chunked per-bucket sparse collectives == monolithic all-gather."""
+
+    @pytest.mark.parametrize("nb", [1, 4])
+    def test_sync_parity_across_buckets(self, nb):
+        from jax.sharding import PartitionSpec as P
+        from repro.core import aggregate as agg
+        j = 4_096
+        cfg = _cfg("regtopk", nb, sparsity=0.01, mu=0.5, comm_mode="sparse")
+        mesh = jax.make_mesh((1,), ("data",))
+        g = jax.random.normal(jax.random.PRNGKey(0), (j,))
+
+        def run(cfg):
+            st = sparsify.init_state(cfg, j)
+
+            def f(g, st):
+                return agg.sync_gradient(cfg, st, g, ("data",))[0]
+
+            with mesh:
+                fn = jax.jit(jax.shard_map(
+                    f, mesh=mesh,
+                    in_specs=(P("data"), jax.tree_util.tree_map(
+                        lambda _: P(), st)),
+                    out_specs=P("data"), check_vma=False))
+                return np.asarray(fn(g, st))
+
+        flat = run(dataclasses.replace(cfg, num_buckets=1))
+        np.testing.assert_allclose(run(cfg), flat, rtol=1e-6, atol=1e-7)
+
+    def test_chunked_combine_handles_k_not_divisible(self):
+        """k=10 pairs over 4 chunks (padded tail must be inert)."""
+        from jax.sharding import PartitionSpec as P
+        from repro.core import aggregate as agg
+        j, k = 1_000, 10
+        vals = jnp.arange(1, k + 1, dtype=jnp.float32)
+        idx = (jnp.arange(k, dtype=jnp.uint32) * 97) % j
+        mesh = jax.make_mesh((1,), ("data",))
+        with mesh:
+            def f(v, i):
+                return agg.sparse_allgather_combine(v, i, j, ("data",),
+                                                    num_buckets=4)
+            out = jax.jit(jax.shard_map(
+                f, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+                check_vma=False))(vals, idx)
+        expect = np.zeros((j,), np.float32)
+        expect[np.asarray(idx)] = np.asarray(vals)
+        np.testing.assert_array_equal(np.asarray(out), expect)
+
+
+class TestEdgeCases:
+    def test_more_buckets_than_elements(self):
+        cfg1 = _cfg("topk", 1, k=3)
+        cfgb = dataclasses.replace(cfg1, num_buckets=64)
+        j = 7
+        g = jax.random.normal(jax.random.PRNGKey(1), (j,))
+        o1 = sparsify.compress(cfg1, sparsify.init_state(cfg1, j), g)
+        ob = sparsify.compress(cfgb, sparsify.init_state(cfgb, j), g)
+        np.testing.assert_array_equal(np.asarray(o1.indices),
+                                      np.asarray(ob.indices))
+
+    def test_k_equals_j(self):
+        _roundtrip_vs_flat("regtopk", 3, j=99, steps=2)
+        cfg1 = _cfg("topk", 1, k=64)
+        cfgb = dataclasses.replace(cfg1, num_buckets=3)
+        j = 64
+        g = jax.random.normal(jax.random.PRNGKey(2), (j,))
+        o1 = sparsify.compress(cfg1, sparsify.init_state(cfg1, j), g)
+        ob = sparsify.compress(cfgb, sparsify.init_state(cfgb, j), g)
+        np.testing.assert_array_equal(np.asarray(o1.mask),
+                                      np.asarray(ob.mask))

@@ -1,6 +1,4 @@
 """Checkpoint save/restore round-trips."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np

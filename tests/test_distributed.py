@@ -33,7 +33,8 @@ from repro.data import lm_batch
 def make_run(arch, sp_kind="regtopk", comm="simulate", opt="adam", sparsity=0.05):
     cfg = reduced_config(get_config(arch))
     if cfg.moe is not None:
-        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=16.0))
     return RunConfig(model=cfg, shape=SHAPES["train_4k"],
         sparsifier=SparsifierConfig(kind=sp_kind, sparsity=sparsity, mu=0.5,
                                     comm_mode=comm, selector="exact"),
@@ -52,7 +53,8 @@ def train(run, mesh_shape, steps=3, key_seed=0, fixed_batch=False):
         losses = []
         for t in range(steps):
             batch = lm_batch(run.model, 8, 64, 0, 0 if fixed_batch else t)
-            params, opt_state, ef_state, m = jstep(params, opt_state, ef_state, batch, key)
+            params, opt_state, ef_state, m = jstep(
+                params, opt_state, ef_state, batch, key)
             losses.append(float(m["loss"]))
     return losses, m
 """
@@ -107,10 +109,31 @@ assert d < 5e-3, d
 gref = jax.jit(jax.grad(lambda p: loss_fn(p, batch, run.model, Parallel())[0]))(host)
 import jax.flatten_util as fu
 v_ref = fu.ravel_pytree(jax.tree_util.tree_map(lambda p, g: p - 0.01*g, host, gref))[0]
-v_new = fu.ravel_pytree(jax.tree_util.tree_map(lambda x: jnp.asarray(np.array(x)), p2))[0]
+v_new = fu.ravel_pytree(jax.tree_util.tree_map(
+    lambda x: jnp.asarray(np.array(x)), p2))[0]
 du = float(jnp.max(jnp.abs(v_ref - v_new)))
 assert du < 5e-4, du
 print("OK", d, du)
+""")
+    assert "OK" in out
+
+
+def test_bucketed_sparse_comm_matches_flat():
+    """num_buckets > 1 chunked all-gather + scatter-add == the monolithic
+    sparse path AND the simulate path, with REAL axis size > 1 (rank
+    stacking, replicated padded tails)."""
+    out = run_py(COMMON + """
+run_sim = make_run("stablelm-3b", comm="simulate")
+run_b1 = make_run("stablelm-3b", comm="sparse")
+run_b4 = dataclasses.replace(run_b1, sparsifier=dataclasses.replace(
+    run_b1.sparsifier, pipeline="fused", num_buckets=4))
+l_sim, _ = train(run_sim, (4, 2), steps=4)
+l_b1, _ = train(run_b1, (4, 2), steps=4)
+l_b4, m = train(run_b4, (4, 2), steps=4)
+assert np.allclose(l_b1, l_b4, rtol=1e-4), (l_b1, l_b4)
+assert np.allclose(l_sim, l_b4, rtol=1e-4), (l_sim, l_b4)
+assert 0 < float(m["agg_nonzero"]) < 0.5
+print("OK", l_b1, l_b4)
 """)
     assert "OK" in out
 
@@ -151,10 +174,12 @@ with mesh:
         pf = init_params(run.model, pal, kf)
         return jax.tree_util.tree_map(lambda u, f, r: u if r else f, pu, pf,
                                       replicated_mask(pu))
-    params = jax.jit(jax.shard_map(init_fn, mesh=mesh, in_specs=(P(),),
-                                   out_specs=pspecs, check_vma=False))(jax.random.PRNGKey(0))
+    params = jax.jit(jax.shard_map(
+        init_fn, mesh=mesh, in_specs=(P(),), out_specs=pspecs,
+        check_vma=False))(jax.random.PRNGKey(0))
     pre, _ = build_prefill(run, mesh, pal)
-    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 63), 0, run.model.vocab_size)}
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (8, 63), 0, run.model.vocab_size)}
     logits, cache = jax.jit(pre)(params, batch)
     dec, _ = build_decode_step(run, mesh, pal)
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
@@ -180,7 +205,8 @@ def test_decode_context_parallel_cache():
     match the single-device decode."""
     out = run_py(COMMON + """
 from repro.serve.step import build_decode_step, serve_parallel, decode_cache_specs
-from repro.models import init_params, prefill as mprefill, decode_step as mdecode, Parallel
+from repro.models import (init_params, prefill as mprefill,
+                          decode_step as mdecode, Parallel)
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.models.specs import param_specs
 
@@ -193,7 +219,8 @@ assert pal.cache_seq_axis == "data"
 # single-device reference prefill builds the cache; shard it onto the mesh
 pal1 = Parallel()
 params1 = init_params(run.model, pal1, jax.random.PRNGKey(0))
-batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 48), 0, run.model.vocab_size)}
+batch = {"tokens": jax.random.randint(
+    jax.random.PRNGKey(1), (1, 48), 0, run.model.vocab_size)}
 lg1, c1 = mprefill(params1, batch, run.model, pal1, max_seq=64)
 tok = jnp.argmax(lg1, -1)[:, None].astype(jnp.int32)
 lg_ref, _ = mdecode(params1, c1, tok, run.model, pal1)
@@ -207,7 +234,8 @@ with mesh:
         lambda s: NamedSharding(mesh, s), cspecs))
     params_sharded = jax.device_put(params1, NamedSharding(mesh, P()))
     lg2, _ = jax.jit(dec)(params_sharded, cache_sharded, tok)
-err = float(jnp.max(jnp.abs(np.array(lg2) - np.array(lg_ref)))) / (float(jnp.max(jnp.abs(lg_ref))) + 1e-6)
+err = (float(jnp.max(jnp.abs(np.array(lg2) - np.array(lg_ref))))
+       / (float(jnp.max(jnp.abs(lg_ref))) + 1e-6))
 assert err < 5e-3, err
 print("OK", err)
 """)

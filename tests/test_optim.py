@@ -1,5 +1,4 @@
 """Optimizer unit tests (flat-vector, ZeRO slice semantics)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -2,7 +2,6 @@
 module; term computation."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.roofline.analysis import HW_V5E, model_flops, roofline_terms
 from repro.roofline.hlo_parser import analyze_hlo
@@ -49,8 +48,6 @@ def test_parser_loop_multiplier_and_collectives():
 def test_parser_on_real_compiled_module():
     """Compile a scanned 2x matmul and check the trip-count multiplication
     against the analytic dot count."""
-    w = jnp.zeros((64, 64))
-
     def f(x, ws):
         def body(c, w_):
             return c @ w_, None
@@ -87,3 +84,32 @@ def test_model_flops_kinds():
     assert model_flops("train", 1e9, 8, 128) == 6e9 * 8 * 128
     assert model_flops("prefill", 1e9, 8, 128) == 2e9 * 8 * 128
     assert model_flops("decode", 1e9, 8, 128) == 2e9 * 8
+
+
+def test_bucketed_collective_overlap_term():
+    from repro.roofline.analysis import pipelined_overlap_s
+    # B=1 serializes; large B converges to max(t_coll, t_local)
+    assert pipelined_overlap_s(4.0, 1.0, 1) == 5.0
+    assert pipelined_overlap_s(4.0, 1.0, 4) == 4.25
+    assert abs(pipelined_overlap_s(4.0, 1.0, 1000) - 4.0) < 0.01
+    assert pipelined_overlap_s(1.0, 4.0, 4) == pipelined_overlap_s(4.0, 1.0, 4)
+    rec = {
+        "mesh": {"data": 16, "model": 16},
+        "kind": "train", "shape": "train_4k",
+        "active_params": 3_000_000_000,
+        "flops": 1e14, "bytes_accessed": 1e12,
+        "collective_bytes": {"total": 1e11},
+        "hlo_flops": 1e14, "hlo_bytes": 8e11,
+        "hlo_collective_wire_bytes": 2e11,
+    }
+    flat = roofline_terms(rec, HW_V5E)
+    assert "collective_exposed_s" not in flat
+    t = roofline_terms(dict(rec, num_buckets=8), HW_V5E)
+    # exposed time: strictly more than the pure wire term (one combine
+    # chunk sticks out), strictly less than full serialization
+    assert t["collective_s"] < t["collective_exposed_s"]
+    assert t["collective_exposed_s"] < \
+        t["collective_s"] + 2e11 / HW_V5E.hbm_bw
+    assert t["num_buckets"] == 8
+    # the three-term lower bound is unchanged by the diagnostic
+    assert t["step_time_lb_s"] == flat["step_time_lb_s"]

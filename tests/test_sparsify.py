@@ -148,6 +148,5 @@ def test_comm_volume_model():
     cfg = _cfg("topk", sparsity=0.001, comm_mode="sparse")
     j, n = 10_000_000, 16
     v = comm_bytes_per_step(cfg, j, n)
-    dense = comm_bytes_per_step(_cfg("none"), j, n)
     assert v["ratio"] < 0.05          # >20x reduction at S=0.1%
     assert v["bytes"] == n * v["k"] * 8

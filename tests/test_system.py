@@ -6,8 +6,6 @@ import re
 import subprocess
 import sys
 
-import pytest
-
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 SRC = os.path.join(ROOT, "src")
 
