@@ -8,9 +8,14 @@ Compares a freshly produced BENCH_compress.json (``benchmarks.run --json
 - any fused-pipeline row regressed its deterministic audit metrics —
   ``sweeps_per_step`` (O(J)-traversal J-equivalents) or ``read_units``
   above the baseline row of the same name;
-- at the largest benchmarked J, the fused path's us/call is not faster
-  than the reference path (wall-clock is noisy on shared CI runners, so
-  only this one robust ordering is gated, not absolute timings).
+- in any benchmark group (``group`` field: the exact-selector REGTOP-k
+  path, the histogram-selector path, ...) at the largest J where the
+  group has BOTH a reference and a fused row, no fused variant's
+  us/call is faster than the reference row (wall-clock is noisy on
+  shared CI runners, so only these robust orderings are gated, not
+  absolute timings; NEW groups missing either side are reported, never
+  failed — but a group the baseline gated must keep a comparable pair,
+  so a dropped/renamed reference row cannot silently disarm the gate).
 
 Rows present in only one file are reported but never fail the gate
 (adding a new benchmark row must not need a two-step merge dance).
@@ -50,23 +55,59 @@ def check(baseline: dict, fresh: dict) -> list:
                     failures.append(
                         f"{name}: {metric} regressed {want} -> {got}")
 
-    # fused must beat reference at the largest J (the production regime
-    # the two-sweep pipeline exists for)
-    js = [r["j"] for r in new.values()
-          if r.get("pipeline") == "fused" and "j" in r]
-    if not js:
+    # per group: some fused variant must beat the reference at the
+    # largest J where BOTH exist (the production regime the two-sweep
+    # pipeline exists for). Rows without a group field (pre-§2.5
+    # baselines) gate as one implicit group. A NEW group missing either
+    # side is reported but never fails — same no-merge-dance rule as
+    # new rows above (a reference-only baseline row must not break CI)
+    # — but a group the BASELINE gated must not silently lose its
+    # comparison (e.g. a pipeline-label typo dropping the reference
+    # row would otherwise disarm the gate).
+    def _by_group(payload):
+        out = {}
+        for r in _rows_by_name(payload).values():
+            if "us_per_call" not in r or "j" not in r:
+                continue
+            out.setdefault(r.get("group", "default"), []).append(r)
+        return out
+
+    def _comparable_js(rows):
+        fused_js = {r["j"] for r in rows
+                    if str(r.get("pipeline", "")).startswith("fused")}
+        ref_js = {r["j"] for r in rows if r.get("pipeline") == "reference"}
+        return fused_js, fused_js & ref_js
+
+    base_gated = {g for g, rows in _by_group(baseline).items()
+                  if _comparable_js(rows)[1]}
+    groups = _by_group(fresh)
+    any_fused = False
+    for gname, rows in sorted(groups.items()):
+        fused_js, both = _comparable_js(rows)
+        if not both:
+            if gname in base_gated:
+                failures.append(
+                    f"group {gname}: baseline had a comparable "
+                    "reference/fused pair but the fresh results do not "
+                    "(row dropped or pipeline label changed?)")
+            else:
+                print(f"[check_compress] group {gname}: no comparable "
+                      "reference/fused pair (not gated)")
+            any_fused = any_fused or bool(fused_js)
+            continue
+        any_fused = True
+        j_max = max(both)
+        at_max = [r for r in rows if r["j"] == j_max]
+        ref = next(r for r in at_max if r.get("pipeline") == "reference")
+        fused = [r for r in at_max
+                 if str(r.get("pipeline", "")).startswith("fused")]
+        best = min(fused, key=lambda r: r["us_per_call"])
+        if not best["us_per_call"] < ref["us_per_call"]:
+            failures.append(
+                f"group {gname} J={j_max}: fused ({best['us_per_call']} us)"
+                f" not faster than reference ({ref['us_per_call']} us)")
+    if not any_fused:
         failures.append("no fused rows found in fresh results")
-        return failures
-    j_max = max(js)
-    by_pipe = {r.get("pipeline"): r for r in new.values()
-               if r.get("j") == j_max and "us_per_call" in r}
-    ref, fus = by_pipe.get("reference"), by_pipe.get("fused")
-    if ref is None or fus is None:
-        failures.append(f"J={j_max}: missing reference/fused timing rows")
-    elif not fus["us_per_call"] < ref["us_per_call"]:
-        failures.append(
-            f"J={j_max}: fused ({fus['us_per_call']} us) not faster than "
-            f"reference ({ref['us_per_call']} us)")
     return failures
 
 

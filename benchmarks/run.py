@@ -118,15 +118,23 @@ def bench_kernels(quick):
 
 def bench_compress(quick):
     """Reference vs fused two-sweep compress on the production
-    (comm_mode="sparse") REGTOP-k path, plus the bucketed variant
-    (num_buckets=8, DESIGN.md §2.4). us/call = min over repeats
-    (microbenchmark convention); sweeps/step from the traced-shape audit
-    (DESIGN.md §2.2). --json -> BENCH_compress.json (the committed copy
-    is the baseline benchmarks.check_compress gates CI against)."""
+    (comm_mode="sparse") paths (DESIGN.md §2.2/§2.5):
+
+    - group "regtopk_exact": the REGTOP-k exact-selector path, plus the
+      bucketed (num_buckets=8) and auto-bucketed (num_buckets=0) fused
+      variants (§2.4);
+    - group "topk_hist": the histogram-selector path — fused since the
+      capability-dispatch PR (reference-pipeline histogram packs no
+      pairs and degrades sparse comm, so its row times the simulate
+      path).
+
+    us/call = min over repeats (microbenchmark convention); sweeps/step
+    from the traced-shape audit. --json -> BENCH_compress.json (the
+    committed copy is the baseline benchmarks.check_compress gates CI
+    against: audit metrics per row + fused-beats-reference per group at
+    the largest J)."""
     import dataclasses
     from repro.configs.base import SparsifierConfig
-    from repro.core import sparsify
-    from repro.kernels.compress.audit import audit_fn
 
     sizes = [1 << 20] if quick else [1 << 20, 1 << 24]
     repeats = 3 if quick else 5
@@ -135,44 +143,37 @@ def bench_compress(quick):
         cfg_ref = SparsifierConfig(kind="regtopk", sparsity=0.001, mu=0.5,
                                    selector="exact", comm_mode="sparse")
         cfg_fus = dataclasses.replace(cfg_ref, pipeline="fused")
-        cfg_b8 = dataclasses.replace(cfg_fus, num_buckets=8)
+        cfg_hr = SparsifierConfig(kind="topk", sparsity=0.001,
+                                  selector="histogram", comm_mode="sparse")
+        groups = (
+            ("regtopk_exact", "regtopk", (
+                ("reference", cfg_ref),
+                ("fused", cfg_fus),
+                ("fused_b8", dataclasses.replace(cfg_fus, num_buckets=8)),
+                ("fused_auto", dataclasses.replace(cfg_fus, num_buckets=0)),
+            )),
+            ("topk_hist", "topk_hist", (
+                ("reference", cfg_hr),
+                ("fused", dataclasses.replace(cfg_hr, pipeline="fused")),
+            )),
+        )
         g = jax.random.normal(jax.random.PRNGKey(0), (j,), jnp.float32)
-        us = {}
-        for label, cfg in (("reference", cfg_ref), ("fused", cfg_fus),
-                           ("fused_b8", cfg_b8)):
-            state = sparsify.init_state(cfg, j)
-
-            def f(state, g):
-                o = sparsify.compress(cfg, state, g, omega=1 / 16)
-                outs = [o.mask, o.state, o.values, o.indices]
-                if o.ghat is not None:
-                    outs.append(o.ghat)
-                return tuple(jax.tree_util.tree_leaves(outs))
-
-            fn = jax.jit(f)
-            jax.block_until_ready(fn(state, g))       # compile + warm
-            best = float("inf")
-            for _ in range(repeats):
-                t0 = time.perf_counter()
-                jax.block_until_ready(fn(state, g))
-                best = min(best, time.perf_counter() - t0)
-            aud = audit_fn(f, state, g, j=j)
-            us[label] = best * 1e6
-            rows.append({
-                "name": f"compress_regtopk_{label}_J{j}",
-                "j": j,
-                "pipeline": label,
-                "num_buckets": cfg.num_buckets,
-                "us_per_call": round(best * 1e6, 1),
-                "sweeps_per_step": aud["traversals"],
-                "read_units": round(aud["read_units"], 2),
-            })
-            _row(f"compress_regtopk_{label}_J{j}", best * 1e6,
-                 f"sweeps={aud['traversals']}")
-        speedup = us["reference"] / us["fused"]
-        rows.append({"name": f"compress_speedup_J{j}", "j": j,
-                     "speedup": round(speedup, 2)})
-        _row(f"compress_speedup_J{j}", 0.0, f"{speedup:.2f}x")
+        for group, stem, variants in groups:
+            us = {}
+            for label, cfg in variants:
+                row = _bench_compress_one(cfg, g, j, repeats)
+                us[label] = row["us_per_call"]
+                row.update({"name": f"compress_{stem}_{label}_J{j}",
+                            "group": group, "pipeline": label,
+                            "selector": cfg.selector})
+                rows.append(row)
+                _row(row["name"], row["us_per_call"],
+                     f"sweeps={row['sweeps_per_step']}")
+            speedup = us["reference"] / us["fused"]
+            tag = "" if group == "regtopk_exact" else f"_{group}"
+            rows.append({"name": f"compress_speedup{tag}_J{j}", "j": j,
+                         "group": group, "speedup": round(speedup, 2)})
+            _row(f"compress_speedup{tag}_J{j}", 0.0, f"{speedup:.2f}x")
     if WRITE_JSON:
         payload = {"bench": "compress", "backend": jax.default_backend(),
                    "sparsity": 0.001, "comm_mode": "sparse",
@@ -180,6 +181,41 @@ def bench_compress(quick):
         with open("BENCH_compress.json", "w") as fh:
             json.dump(payload, fh, indent=2)
             fh.write("\n")
+
+
+# worker count the compress benchmark models (omega = 1/N_WORKERS and the
+# num_buckets=0 auto-resolution must agree on it)
+N_WORKERS = 16
+
+
+def _bench_compress_one(cfg, g, j, repeats) -> dict:
+    from repro.core import sparsify
+    from repro.kernels.compress.audit import audit_fn
+    state = sparsify.init_state(cfg, j)
+
+    def f(state, g):
+        o = sparsify.compress(cfg, state, g, omega=1 / N_WORKERS)
+        outs = [o.mask, o.state, o.values, o.indices]
+        if o.ghat is not None:
+            outs.append(o.ghat)
+        return tuple(jax.tree_util.tree_leaves(outs))
+
+    fn = jax.jit(f)
+    jax.block_until_ready(fn(state, g))       # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(state, g))
+        best = min(best, time.perf_counter() - t0)
+    aud = audit_fn(f, state, g, j=j)
+    row = {"j": j, "num_buckets": cfg.num_buckets,
+           "us_per_call": round(best * 1e6, 1),
+           "sweeps_per_step": aud["traversals"],
+           "read_units": round(aud["read_units"], 2)}
+    if cfg.num_buckets == 0:
+        row["num_buckets_resolved"] = sparsify.resolve_num_buckets(
+            cfg, j, N_WORKERS)
+    return row
 
 
 def bench_train_step(quick):

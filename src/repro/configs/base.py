@@ -144,7 +144,9 @@ class SparsifierConfig:
     per_layer: bool = False       # RESERVED (layer-wise k) — not implemented;
                                   # the paper and all experiments use flat-J
     comm_mode: str = "simulate"   # simulate | sparse | dense
-    selector: str = "exact"       # exact | histogram (Pallas path)
+    selector: str = "exact"       # exact | histogram (threshold selection,
+                                  # count in [k, k*(1+slack)]; fused via the
+                                  # sweep-1 bit-pattern histogram)
     ef_dtype: str = "float32"     # error-feedback accumulator dtype
     # sketchtopk (beyond-paper): CountSketch-coordinated global TOP-k
     sketch_rows: int = 3
@@ -154,19 +156,25 @@ class SparsifierConfig:
     # (a_prev, g_agg_prev needed ONLY where s_prev=1 — Algorithm 1 line 5),
     # cutting state memory from 4J fp32 to J + O(k). Bit-identical updates.
     state_format: str = "dense"   # dense | sparse
-    # compression execution pipeline (DESIGN.md §2.2):
-    # - "reference": dense paper-literal math + lax.top_k selection. The
-    #   parity oracle; O(J log k) selection and ~8 O(J) HBM passes per step.
+    # compression execution pipeline (DESIGN.md §2.2, capability table
+    # §2.5 / kernels.compress.dispatch):
+    # - "reference": dense paper-literal math + cfg.selector selection.
+    #   The parity oracle; O(J log k) selection and ~8 O(J) HBM passes
+    #   per step.
     # - "fused": two-sweep pipeline (kernels/compress). Sweep 1 reads the
     #   dense inputs exactly once and emits (a, score); sweep 2 compacts
-    #   fixed-k (values, indices) without a full-array sort. Error-feedback
-    #   state is implicit (err = a_prev * (1 - s_prev)), the selection mask
-    #   is stored as uint8, and the posterior state is O(k). Exact-top-k
-    #   semantics, bit-identical support vs "reference" with selector="exact".
-    #   Supported for kind in {topk, dgc, regtopk} with selector="exact" and
-    #   ef_dtype="float32" (histogram selectors over-select by design and the
-    #   sweeps accumulate in fp32); unsupported configs fall back to the
-    #   reference path.
+    #   fixed-size (values, indices) without a full-array sort.
+    #   Error-feedback state is implicit (err = a_prev * (1 - s_prev)),
+    #   the selection mask is stored as uint8, and the posterior state is
+    #   O(k). Serves kind in {topk, dgc, regtopk, randk, thresholdk},
+    #   selector in {exact, histogram}, ef_dtype in {float32, bfloat16}:
+    #   selector="exact" is bit-identical to "reference"; "histogram"
+    #   keeps the threshold contract (count in [k, k*(1+slack)], tau at
+    #   a bit-pattern bin edge); bf16 EF stores the J-sized state in
+    #   bf16 with fp32 in-register sweep math (bf16-rounding tolerance
+    #   vs the fp32 reference). Configs outside the table use the
+    #   reference path — the decision and its reason are queryable via
+    #   kernels.compress.dispatch.dispatch(cfg), never silent.
     pipeline: str = "reference"   # reference | fused
     # bucketed compression (DESIGN.md §2.4): partition the flat gradient
     # into num_buckets contiguous buckets; the fused sweeps run per bucket
@@ -174,7 +182,11 @@ class SparsifierConfig:
     # comm_mode="sparse" all-gathers the packed pairs in num_buckets
     # chunks so bucket i's collective overlaps bucket i+1's local
     # scatter-add compaction. Selection semantics are bucketing-invariant
-    # (bit-identical to num_buckets=1); 1 disables bucketing.
+    # (bit-identical to num_buckets=1); 1 disables bucketing; 0 auto-tunes
+    # the count from the sparse-collective payload vs the interconnect
+    # latency floor (roofline.analysis.auto_num_buckets — resolved where
+    # the data-parallel worker count is known, deterministically, so 0 is
+    # bit-identical to passing the resolved value manually).
     num_buckets: int = 1
 
 

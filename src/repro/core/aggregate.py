@@ -13,6 +13,8 @@ Three communication modes (DESIGN.md §2.1), all used inside ``shard_map``:
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from typing import Sequence, Union
 
 import jax
@@ -20,8 +22,36 @@ import jax.numpy as jnp
 
 from repro.configs.base import SparsifierConfig
 from repro.core import sparsify
+from repro.kernels.compress.dispatch import (  # noqa: F401  (re-export)
+    dispatch as compress_dispatch,
+    effective_comm_mode,
+)
 
 AxisNames = Union[str, Sequence[str]]
+
+# (kind, selector, pipeline) combos already warned about — the sparse ->
+# simulate degrade is surfaced once per config per process, at trace time
+_DEGRADE_WARNED: set = set()
+
+
+def _warn_sparse_degrade(cfg: SparsifierConfig) -> None:
+    keyc = (cfg.kind, cfg.selector, cfg.pipeline)
+    if keyc in _DEGRADE_WARNED:
+        return
+    _DEGRADE_WARNED.add(keyc)
+    d = compress_dispatch(cfg)
+    # only advise switching pipelines when that actually helps: the
+    # fused-pipeline variant of this config must dispatch fused
+    fused_var = dataclasses.replace(cfg, pipeline="fused")
+    hint = (" pipeline='fused' serves this config sparsely."
+            if compress_dispatch(fused_var).path == "fused" else "")
+    warnings.warn(
+        f"comm_mode='sparse' with kind={cfg.kind!r} selector={cfg.selector!r}"
+        f" pipeline={cfg.pipeline!r} packs no fixed-size (values, indices)"
+        f" pairs ({d.reason or 'no packed output'}); degrading to a dense"
+        " simulate all-reduce (effective_comm_mode(cfg) == 'simulate')."
+        + hint,
+        RuntimeWarning, stacklevel=3)
 
 
 def _axis_size(axes: AxisNames) -> jnp.ndarray:
@@ -63,6 +93,7 @@ def sparse_allgather_combine(values: jnp.ndarray, indices: jnp.ndarray,
     n = _axis_size(axes)
     from repro.core import bigvec
     k = values.shape[0]
+    num_buckets = max(1, int(num_buckets))   # 0 (auto) is resolved upstream
     if k <= num_buckets:
         num_buckets = 1          # degenerate: one pair per chunk gains nothing
     chunk = -(-k // num_buckets)
@@ -100,6 +131,12 @@ def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         g_agg = dense_allreduce(g.astype(jnp.dtype(cfg.ef_dtype)), axes)
         return g_agg, {"step": state["step"] + 1}
     n = _axis_size(axes)
+    if cfg.num_buckets == 0:
+        # auto-tune (DESIGN.md §2.4): resolved here, where the real
+        # data-parallel axis size is known, so the compress sweeps and
+        # the chunked collective share one concrete bucket count
+        cfg = dataclasses.replace(cfg, num_buckets=sparsify.resolve_num_buckets(
+            cfg, g.shape[0], n))
     omega = 1.0 / n
     if cfg.kind == "globaltopk":
         # genie baseline: TOP-k on the true aggregated accumulated gradient
@@ -117,6 +154,11 @@ def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
                                          g.shape[0], axes,
                                          num_buckets=cfg.num_buckets)
     else:
+        if cfg.comm_mode == "sparse":
+            # explicit, not silent: this config emits no packed pairs, so
+            # the sparse path cannot run — warn once (trace time) and
+            # surface the realized mode via effective_comm_mode(cfg)
+            _warn_sparse_degrade(cfg)
         g_agg = simulate_allreduce(sparsify.dense_ghat(out, g.shape[0]), axes)
     new_state = sparsify.observe_aggregate(cfg, out.state, g_agg)
     return g_agg, new_state
@@ -139,8 +181,10 @@ def _sketch_sync(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     ghat = mask * a
     if cfg.comm_mode == "sparse":
         idx = _select.topk_indices(gmag, k)
-        vals = a[idx]
-        g_agg = sparse_allgather_combine(vals, idx, j, axes)
+        from repro.core import bigvec
+        vals = bigvec.gather(a, idx)   # uint32-safe for J > 2^31
+        g_agg = sparse_allgather_combine(vals, idx, j, axes,
+                                         num_buckets=cfg.num_buckets)
         # combine scatters duplicate indices once per worker; mask-multiply
         # keeps only the shared-mask support (defensive; supports coincide)
         g_agg = g_agg * mask
@@ -151,11 +195,19 @@ def _sketch_sync(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
 
 
 def comm_bytes_per_step(cfg: SparsifierConfig, j: int, n_workers: int) -> dict:
-    """Analytic communication volume per worker per step (benchmarks)."""
+    """Analytic communication volume per worker per step (benchmarks).
+
+    Uses the EFFECTIVE comm mode (DESIGN.md §2.5): configs whose
+    compress step packs no pairs move dense bytes even when
+    comm_mode="sparse" was requested, and the fused histogram selector
+    moves its fixed hist_capacity packed length, not k.
+    """
     k = sparsify.resolve_k(cfg, j)
     dense_ar = 2 * j * 4 * (n_workers - 1) / n_workers     # ring all-reduce fp32
-    if cfg.kind == "none" or cfg.comm_mode in ("dense", "simulate"):
-        return {"bytes": dense_ar, "k": k, "ratio": 1.0}
+    eff = effective_comm_mode(cfg)
+    if cfg.kind == "none" or eff in ("dense", "simulate"):
+        return {"bytes": dense_ar, "k": k, "ratio": 1.0,
+                "effective_comm_mode": eff}
     if cfg.kind == "sketchtopk":
         from repro.core import sketch as _sketch
         width = _sketch.resolve_width(k, cfg.sketch_width)
@@ -163,6 +215,9 @@ def comm_bytes_per_step(cfg: SparsifierConfig, j: int, n_workers: int) -> dict:
         vals = n_workers * k * 4                            # indices implied
         b = sk + vals
         return {"bytes": b, "k": k, "ratio": b / dense_ar,
-                "sketch_bytes": sk}
-    sparse = n_workers * k * (4 + 4)                        # allgather vals+idx
-    return {"bytes": sparse, "k": k, "ratio": sparse / dense_ar}
+                "sketch_bytes": sk, "effective_comm_mode": eff}
+    from repro.kernels.compress.dispatch import packed_len
+    kp = packed_len(cfg, j)                 # k, or hist_capacity (fused hist)
+    sparse = n_workers * kp * (4 + 4)       # allgather vals+idx
+    return {"bytes": sparse, "k": k, "packed_len": kp,
+            "ratio": sparse / dense_ar, "effective_comm_mode": eff}

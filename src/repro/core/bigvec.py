@@ -36,12 +36,17 @@ def gather(a: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     return a2[r, c]
 
 
-def scatter_set(a: jnp.ndarray, idx: jnp.ndarray, vals) -> jnp.ndarray:
+def scatter_set(a: jnp.ndarray, idx: jnp.ndarray, vals,
+                mode: str | None = None) -> jnp.ndarray:
+    """``mode="drop"`` discards out-of-range indices (callers use the
+    sentinel ``idx = len(a)`` for inert pad slots instead of aliasing a
+    real position — duplicate writes of different values at one index
+    are order-undefined in XLA scatter)."""
     if not _needs_big(a.shape[0]):
-        return a.at[idx.astype(jnp.int32)].set(vals)
+        return a.at[idx.astype(jnp.int32)].set(vals, mode=mode)
     a2, j = _pad2d(a, COLS)
     r, c = _rc(idx, COLS)
-    return a2.at[r, c].set(vals).reshape(-1)[:j]
+    return a2.at[r, c].set(vals, mode=mode).reshape(-1)[:j]
 
 
 def scatter_add(a: jnp.ndarray, idx: jnp.ndarray, vals) -> jnp.ndarray:

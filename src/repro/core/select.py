@@ -25,12 +25,18 @@ HIST_BINS = 2048
 _ROW_LIMIT = 1 << 27
 
 
-def _two_stage_topk(absx: jnp.ndarray, k: int):
-    j = absx.shape[0]
+def _two_stage_topk(keys: jnp.ndarray, k: int):
+    j = keys.shape[0]
     cols = _ROW_LIMIT
     rows = -(-j // cols)
     pad = rows * cols - j
-    xp = jnp.pad(absx, (0, pad), constant_values=-jnp.inf).reshape(rows, cols)
+    if jnp.issubdtype(keys.dtype, jnp.integer):
+        padv = jnp.iinfo(keys.dtype).min
+    else:
+        padv = -jnp.inf
+    # pad slots can tie with real minima but sit at the END of their row,
+    # and lax.top_k breaks ties by position — real entries always win
+    xp = jnp.pad(keys, (0, pad), constant_values=padv).reshape(rows, cols)
     # exactness requires k candidates per row (a row may hold all of top-k)
     kr = int(min(k, cols))
     vals, idx = jax.lax.top_k(xp, kr)                  # (rows, kr)
@@ -42,15 +48,34 @@ def _two_stage_topk(absx: jnp.ndarray, k: int):
     return gidx[sel]
 
 
+def topk_indices_by_key(keys: jnp.ndarray, k: int):
+    """Top-k indices of a raw key vector (no abs/cast; any ordered dtype),
+    uint32 and two-stage above the int32 row limit."""
+    j = keys.shape[0]
+    k = int(min(k, j))
+    if j > jnp.iinfo(jnp.int32).max:
+        return _two_stage_topk(keys, k)
+    _, idx = jax.lax.top_k(keys, k)
+    return idx.astype(jnp.uint32)
+
+
 def topk_indices(score: jnp.ndarray, k: int):
     """Top-k indices by |score| (uint32 when J needs it)."""
-    j = score.shape[0]
-    k = int(min(k, j))
-    absx = jnp.abs(score.astype(jnp.float32))
-    if j > jnp.iinfo(jnp.int32).max:
-        return _two_stage_topk(absx, k)
-    _, idx = jax.lax.top_k(absx, k)
-    return idx.astype(jnp.uint32)
+    return topk_indices_by_key(jnp.abs(score.astype(jnp.float32)), k)
+
+
+def randk_indices(key, j: int, k: int):
+    """Uniform random k-subset of [0, j) without replacement: the top-k
+    POSITIONS of j iid uint32 draws (any k-subset is equally likely by
+    exchangeability). One O(J log k) top_k over one generated stream —
+    no full random permutation (jax.random.choice(replace=False) sorts
+    the whole vector) — and uint32-safe for J > 2^31 via the two-stage
+    path, which choice's int32 argsort is not. Bit collisions (~2^-32)
+    resolve by index order: a bias far below the sampler's own quality.
+    Shared by the reference and fused randk paths so their index
+    streams are identical."""
+    bits = jax.random.bits(key, (j,), jnp.uint32)
+    return topk_indices_by_key(bits, int(min(k, j)))
 
 
 def topk_mask_exact(score: jnp.ndarray, k: int) -> jnp.ndarray:

@@ -25,14 +25,18 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-# fixed odd multipliers (Knuth multiplicative hashing), one pair per row
-_MULTS = jnp.array([2654435761, 2246822519, 3266489917, 668265263,
-                    374761393, 2654435789, 1597334677, 2869860233],
-                   dtype=jnp.uint32)
-_ADDS = jnp.array([374761393, 3266489917, 1181783497, 2549297995,
-                   4279918613, 1609587929, 2246822519, 2654435761],
-                  dtype=jnp.uint32)
+# fixed odd multipliers (Knuth multiplicative hashing), one pair per row.
+# Plain numpy: device constants at import time leak tracers when the
+# module is first imported inside a traced function (aggregate's
+# _sketch_sync imports lazily under shard_map).
+_MULTS = np.array([2654435761, 2246822519, 3266489917, 668265263,
+                   374761393, 2654435789, 1597334677, 2869860233],
+                  dtype=np.uint32)
+_ADDS = np.array([374761393, 3266489917, 1181783497, 2549297995,
+                  4279918613, 1609587929, 2246822519, 2654435761],
+                 dtype=np.uint32)
 
 
 def resolve_width(k: int, width: int = 0) -> int:

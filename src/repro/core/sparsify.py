@@ -24,17 +24,24 @@ Execution pipelines (cfg.pipeline, DESIGN.md §2.2):
 
 - "reference": the dense math above, selection via cfg.selector. Oracle.
 - "fused": two-sweep pipeline (repro.kernels.compress) for kind in
-  {topk, dgc, regtopk}. Error feedback is implicit — the state stores
-  (a_prev, s_prev) and reconstructs eps^{t+1} = a^t * (1 - s^t)
-  in-register — the mask is uint8, and REGTOP-k's posterior is O(k)
-  (idx_prev, a_prev_sel, g_prev_sel), since Algorithm 1 line 5 reads
-  a^{t-1} and g^{t-1} only at the support of s^{t-1}. Selected support
-  is bit-identical to "reference" with selector="exact"; in
-  comm_mode="sparse" no dense ghat is materialized (CompressOut.ghat is
-  None and the packed (values, indices) drive the all-gather).
+  {topk, dgc, regtopk, randk, thresholdk}. Error feedback is implicit —
+  the state stores (a_prev, s_prev) and reconstructs
+  eps^{t+1} = a^t * (1 - s^t) in-register — the mask is uint8, and
+  REGTOP-k's posterior is O(k) (idx_prev, a_prev_sel, g_prev_sel),
+  since Algorithm 1 line 5 reads a^{t-1} and g^{t-1} only at the
+  support of s^{t-1}. With selector="exact" the selected support is
+  bit-identical to "reference"; selector="histogram" keeps the
+  threshold-selection contract (count in [k, k*(1+HIST_SLACK)], tau at
+  a bit-pattern bin edge); ef_dtype="bfloat16" stores the J-sized EF
+  state in bf16 with fp32 in-register sweep math. In comm_mode="sparse"
+  no dense ghat is materialized (CompressOut.ghat is None and the
+  packed (values, indices) drive the all-gather). Which path serves a
+  config is an explicit table — repro.kernels.compress.dispatch
+  (DESIGN.md §2.5) — not an opaque boolean.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any, Optional
 
@@ -68,15 +75,49 @@ def resolve_k(cfg: SparsifierConfig, j: int) -> int:
 # ---------------------------------------------------------------------------
 
 def _fused_supported(cfg: SparsifierConfig) -> bool:
-    # The fused pipeline implements exact-top-k selection over fp32
-    # accumulators. Configs it cannot reproduce keep the reference path:
-    # - selector != "exact": histogram selectors over-select by design;
-    # - ef_dtype != float32: the reference accumulates in ef_dtype, so
-    #   e.g. bf16 error feedback would diverge from fp32 sweeps.
-    return (cfg.pipeline == "fused"
-            and cfg.kind in ("topk", "dgc", "regtopk")
-            and cfg.selector == "exact"
-            and jnp.dtype(cfg.ef_dtype) == jnp.float32)
+    """The capability/dispatch table lives in kernels.compress.dispatch
+    (DESIGN.md §2.5); this is the sparsify-side shorthand."""
+    from repro.kernels.compress.dispatch import dispatch
+    return dispatch(cfg).path == "fused"
+
+
+def resolve_num_buckets(cfg: SparsifierConfig, j: int,
+                        n_workers: int = 1) -> int:
+    """cfg.num_buckets, with 0 resolved to the auto-tuned value.
+
+    The auto-tune (ROADMAP item, DESIGN.md §2.4) derives the bucket
+    count from the sparse-collective payload this config moves —
+    n_workers * packed_len * 8 bytes — against the interconnect latency
+    floor, via the roofline pipelined-overlap model
+    (roofline.analysis.auto_num_buckets). Deterministic in (cfg, j,
+    n_workers), so a manual ``num_buckets=<resolved>`` flag reproduces
+    the auto choice bit-for-bit (bucketing never changes selection
+    semantics either way)."""
+    if cfg.num_buckets != 0:
+        return max(1, int(cfg.num_buckets))
+    from repro.kernels.compress.dispatch import packed_len
+    from repro.roofline.analysis import auto_num_buckets
+    return auto_num_buckets(packed_len(cfg, j), n_workers)
+
+
+def _workers_from_omega(omega) -> int:
+    """Equal-weight worker count implied by omega = 1/N (the only
+    information a bare compress() call has for the bucket auto-tune;
+    sync_gradient resolves from the real mesh axis size instead). A
+    TRACED omega is a hard error, not a silent N=1: auto_num_buckets
+    would mis-tune the payload by the real worker count — resolve the
+    bucket count upstream (resolve_num_buckets / sync_gradient) in
+    that case."""
+    if isinstance(omega, jax.core.Tracer):
+        raise TypeError(
+            "num_buckets=0 auto-tune inside compress() needs a concrete "
+            "omega (= 1/N) to infer the worker count; with a traced "
+            "omega, resolve the bucket count upstream via "
+            "sparsify.resolve_num_buckets or aggregate.sync_gradient.")
+    try:
+        return max(1, int(round(1.0 / float(omega))))
+    except (TypeError, ValueError, ZeroDivisionError):
+        return 1
 
 
 def init_state(cfg: SparsifierConfig, j: int) -> dict:
@@ -92,10 +133,14 @@ def init_state(cfg: SparsifierConfig, j: int) -> dict:
         if cfg.kind == "dgc":
             st["mom"] = z
         if cfg.kind == "regtopk":
-            k = resolve_k(cfg, j)
-            st["idx_prev"] = jnp.zeros((k,), jnp.uint32)
-            st["a_prev_sel"] = jnp.zeros((k,), dt)
-            st["g_prev_sel"] = jnp.zeros((k,), dt)
+            from repro.kernels.compress.dispatch import packed_len
+            kp = packed_len(cfg, j)   # k, or hist_capacity for histogram
+            st["idx_prev"] = jnp.zeros((kp,), jnp.uint32)
+            st["a_prev_sel"] = jnp.zeros((kp,), dt)
+            st["g_prev_sel"] = jnp.zeros((kp,), dt)
+            if cfg.selector == "histogram":
+                # live-slot count of the fixed-capacity posterior state
+                st["nsel"] = jnp.zeros((), jnp.int32)
         return st
     if cfg.kind in ("none", "globaltopk"):
         return {"step": jnp.zeros((), jnp.int32)}
@@ -143,16 +188,21 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     """Sparsify one worker's flat gradient. omega = this worker's weight w_n.
 
     cfg.pipeline selects the execution path: "reference" (dense math,
-    cfg.selector) or "fused" (two-sweep kernels/compress pipeline, exact
-    selection; kinds without a fused implementation use the reference path).
+    cfg.selector) or "fused" (two-sweep kernels/compress pipeline). The
+    dispatch decision is the explicit capability table in
+    repro.kernels.compress.dispatch (DESIGN.md §2.5); configs outside it
+    use the reference path, with the reason queryable via dispatch(cfg).
     """
     j = g.shape[0]
     k = resolve_k(cfg, j)
     dt = jnp.dtype(cfg.ef_dtype)
     g = g.astype(dt)
+    if cfg.num_buckets == 0:
+        cfg = dataclasses.replace(cfg, num_buckets=resolve_num_buckets(
+            cfg, j, _workers_from_omega(omega)))
 
     if _fused_supported(cfg):
-        return _compress_fused(cfg, state, g, k, omega)
+        return _compress_fused(cfg, state, g, k, omega, key)
 
     if cfg.kind == "none":
         ones = jnp.ones((j,), dt)
@@ -177,23 +227,32 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     if cfg.kind == "randk":
         a = state["err"] + g
         assert key is not None, "randk needs a PRNG key"
-        # uint32 indices + bigvec indexing (raw int32 advanced indexing
-        # overflows for J > 2^31). NB: the sampling itself
-        # (jax.random.choice) is still int32-bound upstream; full
-        # J > 2^31 randk needs a custom sampler.
+        # uint32 indices + bigvec indexing end to end: select.randk_indices
+        # samples the k-subset as top-k of random bits (J > 2^31 safe —
+        # no int32-bound jax.random.choice permutation sort)
         from repro.core import bigvec
-        idx = jax.random.choice(key, j, (k,), replace=False).astype(jnp.uint32)
+        idx = select.randk_indices(key, j, k)
         mask = bigvec.mask_from_indices(j, idx, dt)
         ghat = mask * a
         return CompressOut(ghat, mask, {"err": a - ghat, "step": state["step"] + 1},
                            bigvec.gather(a, idx), idx)
 
     if cfg.kind == "thresholdk":
-        # Strom'15: fixed threshold = k-th magnitude of the FIRST step, reused.
+        # Strom'15-style magnitude thresholding, ADAPTIVE per step: the
+        # threshold is re-derived from the current accumulator every step
+        # (the k-th magnitude for selector="exact", the histogram bin edge
+        # for selector="histogram") — not Strom's original fixed
+        # first-step threshold, which stalls under shifting gradient
+        # scales. Selection therefore coincides with topk; the kind
+        # exists as the threshold-family baseline.
         a = state["err"] + g
-        mask = _mask_from(a, k, cfg.selector)   # per-step threshold variant
+        mask = _mask_from(a, k, cfg.selector)
         ghat = mask * a
-        return CompressOut(ghat, mask, {"err": a - ghat, "step": state["step"] + 1})
+        new = {"err": a - ghat, "step": state["step"] + 1}
+        vals = idx = None
+        if cfg.selector == "exact":
+            vals, idx = _pack(a, a, k)
+        return CompressOut(ghat, mask, new, vals, idx)
 
     if cfg.kind == "dgc":
         # Deep Gradient Compression [Lin et al. '18]: momentum correction.
@@ -275,41 +334,57 @@ def _compress_regtopk_sparse(cfg: SparsifierConfig, state: dict,
 
 
 def _compress_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
-                    k: int, omega: float) -> CompressOut:
+                    k: int, omega: float, key=None) -> CompressOut:
     """Two-sweep fused pipeline (repro.kernels.compress, DESIGN.md §2.2).
 
-    Exact top-k semantics (reference selector="exact" parity). In
-    comm_mode="sparse" no dense ghat is materialized — the packed
-    (values, indices) drive the sparse all-gather and CompressOut.ghat
-    is None. cfg.num_buckets > 1 runs the sweeps per contiguous bucket
-    with a histogram-merge global threshold (DESIGN.md §2.4); selection,
-    packed order, and post-step state stay bit-identical to num_buckets=1.
+    selector="exact": reference-parity top-k semantics;
+    selector="histogram": threshold selection at the bit-pattern bin
+    edge with fixed-capacity packed pairs (inert pads, DESIGN.md §2.5).
+    ef_dtype="bfloat16" keeps the J-sized state in bf16 (sweep math is
+    fp32 in-register). In comm_mode="sparse" no dense ghat is
+    materialized — the packed (values, indices) drive the sparse
+    all-gather and CompressOut.ghat is None. cfg.num_buckets > 1 runs
+    the sweeps per contiguous bucket with a histogram-merge global
+    threshold (DESIGN.md §2.4); selection, packed order, and post-step
+    state stay bit-identical to num_buckets=1.
     """
     from repro.core import bigvec
     from repro.kernels.compress import ops as cops
+    hist = cfg.selector == "histogram" and cfg.kind != "randk"
     kwargs = {}
     if cfg.kind == "regtopk":
         kwargs = dict(idx_prev=state["idx_prev"],
                       a_prev_sel=state["a_prev_sel"].astype(jnp.float32),
                       g_prev_sel=state["g_prev_sel"].astype(jnp.float32))
+        if hist:
+            kwargs["nsel_prev"] = state["nsel"]
     if cfg.kind == "dgc":
         kwargs["mom"] = state["mom"]
     out = cops.fused_compress_arrays(
         cfg.kind, g, state["a_prev"], state["s_prev"], state["step"],
         k=k, omega=omega, mu=cfg.mu, Q=cfg.Q, momentum=cfg.momentum,
-        want_ghat=cfg.comm_mode != "sparse",
-        num_buckets=cfg.num_buckets, **kwargs)
+        want_ghat=cfg.comm_mode != "sparse", selector=cfg.selector,
+        key=key, num_buckets=cfg.num_buckets, **kwargs)
     dt = jnp.dtype(cfg.ef_dtype)
     new = {"a_prev": out["a"].astype(dt), "s_prev": out["mask8"],
            "step": state["step"] + 1}
     if cfg.kind == "dgc":
-        # momentum masking (mom * (1 - mask)) as an O(k) scatter
-        new["mom"] = bigvec.scatter_set(out["mom"].astype(dt),
-                                        out["indices"], 0.0)
+        if hist:
+            # variable-count selection: mask-multiply (fuses into the
+            # sweep-1 stream) instead of an O(k) scatter whose inert
+            # pad slots would alias index 0
+            new["mom"] = (out["mom"] *
+                          (1.0 - out["mask8"].astype(jnp.float32))).astype(dt)
+        else:
+            # momentum masking (mom * (1 - mask)) as an O(k) scatter
+            new["mom"] = bigvec.scatter_set(out["mom"].astype(dt),
+                                            out["indices"], 0.0)
     if cfg.kind == "regtopk":
         new["idx_prev"] = out["indices"]
         new["a_prev_sel"] = out["values"].astype(dt)
         new["g_prev_sel"] = jnp.zeros_like(state["g_prev_sel"])  # observe_aggregate
+        if hist:
+            new["nsel"] = out["count"]
     return CompressOut(out["ghat"], out["mask8"], new,
                        out["values"], out["indices"])
 
@@ -330,11 +405,15 @@ def observe_aggregate(cfg: SparsifierConfig, state: dict, g_agg: jnp.ndarray) ->
 
 def dense_ghat(out: CompressOut, j: int) -> jnp.ndarray:
     """Dense sparsified gradient from a CompressOut, reconstructing from the
-    packed (values, indices) when the fused sparse-comm path skipped it."""
+    packed (values, indices) when the fused sparse-comm path skipped it.
+    Scatter-ADD, not set: the histogram selector's fixed-capacity packing
+    pads its tail with inert (index 0, value 0.0) pairs, and a duplicate
+    scatter-set at index 0 would be order-undefined; live indices are
+    unique, so add == set for them."""
     if out.ghat is not None:
         return out.ghat
     from repro.core import bigvec
-    return bigvec.scatter_set(jnp.zeros((j,), out.values.dtype),
+    return bigvec.scatter_add(jnp.zeros((j,), out.values.dtype),
                               out.indices, out.values)
 
 
@@ -347,6 +426,10 @@ def make_round_fn(cfg: SparsifierConfig, n_workers: int):
 
     states_stacked: pytree with leading (N,) axis; grads: (N, J).
     Returns (g_agg (J,), new_states_stacked). Equal weights w_n = 1/N.
+    The returned function takes an optional trailing PRNG ``key``; each
+    worker i compresses with ``fold_in(key, i)`` (matching
+    ``sparsified_round``) — required for kind="randk", ignored by the
+    deterministic sparsifiers.
     """
     omega = 1.0 / n_workers
 
@@ -370,12 +453,20 @@ def make_round_fn(cfg: SparsifierConfig, n_workers: int):
 
         return jax.jit(round_sketch)
 
-    def one(state, g):
-        out = compress(cfg, state, g, omega=omega)
+    def one(state, g, k_i):
+        out = compress(cfg, state, g, key=k_i, omega=omega)
         return dense_ghat(out, g.shape[0]), out.state
 
-    def round_fn(states, grads):
-        ghats, new_states = jax.vmap(one)(states, grads)
+    def round_fn(states, grads, key=None):
+        if key is None:
+            ghats, new_states = jax.vmap(
+                lambda s, g: one(s, g, None))(states, grads)
+        else:
+            # per-worker folded key, matching sparsified_round's
+            # fold_in(key, i) stream
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+                jnp.arange(n_workers))
+            ghats, new_states = jax.vmap(one)(states, grads, keys)
         g_agg = jnp.sum(ghats, 0) * omega
         new_states = jax.vmap(
             lambda s: observe_aggregate(cfg, s, g_agg))(new_states)
@@ -392,8 +483,9 @@ def sparsified_round(cfg: SparsifierConfig, states: list, grads: list,
                      omegas: Optional[list] = None, key=None):
     """One aggregation round over N in-process workers (validation path).
 
-    Returns (g_agg, new_states). Used by the paper-experiment benchmarks and
-    tests; the production path is core/distributed.py under shard_map.
+    Returns (g_agg, new_states). Used by the paper-experiment benchmarks
+    and tests; the production path is core/aggregate.sync_gradient under
+    shard_map (train/step.py stage 4).
     """
     n = len(grads)
     omegas = omegas or [1.0 / n] * n

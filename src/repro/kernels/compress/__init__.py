@@ -32,6 +32,13 @@ ambiguity) and fall back to a full ``lax.top_k`` under ``lax.cond`` on
 the rare adversarial inputs where the compacted candidate set cannot be
 proven to cover the true top-k.
 """
+from repro.kernels.compress.dispatch import (  # noqa: F401
+    CompressDispatch,
+    dispatch,
+    effective_comm_mode,
+    hist_capacity,
+    packed_len,
+)
 from repro.kernels.compress.ops import (  # noqa: F401
     fused_compress_arrays,
     sweep_plan,

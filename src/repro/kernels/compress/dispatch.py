@@ -1,0 +1,140 @@
+"""Capability table + dispatch decisions for the compression pipelines.
+
+The seed gated the fused two-sweep pipeline behind one opaque boolean
+(``_fused_supported``), so every config outside {topk, dgc, regtopk} x
+selector="exact" x fp32 error feedback silently took the ~7-sweep
+reference path. This module replaces that gate with an explicit,
+queryable table (DESIGN.md §2.5):
+
+- :func:`dispatch` returns which execution path serves a config and —
+  when it is the reference path — the reason, so "why is this config
+  slow" is a lookup, not a debugging session.
+- :func:`packed_len` is the static length of the fixed-size packed
+  ``(values, indices)`` pairs a config's compress step emits (the unit
+  the sparse all-gather moves).
+- :func:`effective_comm_mode` is the communication mode a config
+  ACTUALLY realizes: ``comm_mode="sparse"`` degrades to a dense
+  simulate all-reduce when compress packs no pairs (reference-pipeline
+  histogram selectors), and ``core.aggregate`` warns about it once at
+  trace time instead of silently changing the comm volume.
+
+Fused selection contracts per selector:
+
+- ``exact``: selected support BIT-identical to the reference exact
+  selector (``lax.top_k`` tie-break, value desc / index asc).
+- ``histogram``: threshold selection at the bit-pattern bin lower edge
+  of the exact k-th |score| (``kernel.key_bin_edge`` — identical to the
+  sweep-1 2048-bin histogram threshold at target k). Over-selects by
+  design: count in [k, k*(1+HIST_SLACK)], capped at ``hist_capacity``
+  so the packed pairs stay fixed-size; pad slots are inert (0.0 at
+  index 0). NOT bit-identical to the reference histogram selector,
+  which buckets |score|/amax into LINEAR bins — both satisfy the same
+  count contract.
+
+``ef_dtype="bfloat16"`` stores the J-sized EF state (``a_prev``, and
+``mom`` for DGC) in bf16 with all sweep math in fp32 registers; it
+tracks the fp32 reference within bf16 rounding (DESIGN.md §2.5 states
+the tolerance contract the parity tests pin).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+# kinds the fused two-sweep pipeline implements. "randk" is selection-
+# score-free (one elementwise sweep + O(k) random gather) and ignores
+# the selector; "thresholdk" shares the plain-score path with "topk".
+FUSED_KINDS = ("topk", "dgc", "regtopk", "randk", "thresholdk")
+FUSED_SELECTORS = ("exact", "histogram")
+FUSED_EF_DTYPES = ("float32", "bfloat16")
+
+# fused histogram over-selection cap: count <= k * (1 + HIST_SLACK).
+# The reference histogram selector's over-selection is one bin's
+# population (unbounded on adversarial inputs); the fused path trims to
+# the hist_capacity largest >= tau so the packed pairs stay fixed-size.
+HIST_SLACK = 1.0
+
+
+@dataclass(frozen=True)
+class CompressDispatch:
+    """One config's execution-path decision (queryable, trace-free)."""
+    path: str          # "fused" | "reference"
+    reason: str        # "" when fused; why the reference path serves it
+    packs_pairs: bool  # compress emits fixed-size packed (values, indices)
+    exact_parity: bool  # selection bit-identical to reference selector="exact"
+
+
+def _fused_reason(cfg) -> str:
+    """Why cfg does NOT take the fused path ("" = it does)."""
+    if cfg.pipeline != "fused":
+        return f"pipeline={cfg.pipeline!r} requested"
+    if cfg.kind not in FUSED_KINDS:
+        return (f"kind={cfg.kind!r} has no per-worker compress step the "
+                "two-sweep pipeline can serve (aggregate-level or "
+                "sketch-coordinated selection)")
+    if cfg.kind != "randk" and cfg.selector not in FUSED_SELECTORS:
+        return (f"selector={cfg.selector!r} is served by kernels/topk_select "
+                "on the reference path")
+    if str(cfg.ef_dtype) not in FUSED_EF_DTYPES:
+        return (f"ef_dtype={cfg.ef_dtype!r} has no fused state layout "
+                "(fp32 and bf16 only)")
+    return ""
+
+
+def dispatch(cfg) -> CompressDispatch:
+    """Execution-path decision for a SparsifierConfig (DESIGN.md §2.5)."""
+    reason = _fused_reason(cfg)
+    if not reason:
+        exact = cfg.kind == "randk" or cfg.selector == "exact"
+        return CompressDispatch("fused", "", True, exact)
+    # reference path: packed pairs exist only for fixed-count selection —
+    # selector="exact", randk (selector-free), and regtopk's O(k) sparse
+    # state layout (whose packing is exact-k regardless of cfg.selector:
+    # _compress_regtopk_sparse selects via topk_indices unconditionally)
+    exact_count = (cfg.selector == "exact" or cfg.kind == "randk"
+                   or (cfg.kind == "regtopk"
+                       and cfg.state_format == "sparse"))
+    packs = exact_count and cfg.kind in ("topk", "dgc", "regtopk",
+                                         "thresholdk", "randk")
+    return CompressDispatch("reference", reason, packs, exact_count)
+
+
+def hist_capacity(k: int, j: int) -> int:
+    """Static packed capacity of the fused histogram selector:
+    min(j, k + ceil(k * HIST_SLACK)), never below k + 1 so the
+    over-selection contract count >= k is satisfiable with slack."""
+    k = int(min(k, j))
+    return int(min(j, k + max(1, int(math.ceil(k * HIST_SLACK)))))
+
+
+def packed_len(cfg, j: int) -> int:
+    """Length of the packed (values, indices) arrays compress emits for
+    this config — k for exact-count selection, hist_capacity(k, j) for
+    the fused histogram selector (tail slots inert-padded). This is the
+    per-worker unit the sparse all-gather moves."""
+    from repro.core.sparsify import resolve_k
+    k = resolve_k(cfg, j)
+    d = dispatch(cfg)
+    if d.path == "fused" and cfg.kind != "randk" and \
+            cfg.selector == "histogram":
+        return hist_capacity(k, j)
+    return k
+
+
+def effective_comm_mode(cfg) -> str:
+    """The communication mode cfg actually realizes in sync_gradient.
+
+    comm_mode="sparse" needs fixed-size packed pairs; configs whose
+    compress step packs none (reference-pipeline histogram selectors)
+    degrade to a dense simulate all-reduce — explicitly, with a
+    trace-time warning from core.aggregate. "none" and "globaltopk"
+    all-reduce densely regardless; "sketchtopk" has its own
+    sketch-coordinated sparse exchange.
+    """
+    if cfg.comm_mode != "sparse":
+        return cfg.comm_mode
+    if cfg.kind in ("none", "globaltopk"):
+        return "dense"
+    if cfg.kind == "sketchtopk":
+        return "sparse"
+    return "sparse" if dispatch(cfg).packs_pairs else "simulate"

@@ -57,6 +57,17 @@ def bin_lower_edge(b: jnp.ndarray) -> jnp.ndarray:
         (b.astype(jnp.uint32) << _BIN_SHIFT), jnp.float32)
 
 
+def key_bin_edge(x: jnp.ndarray) -> jnp.ndarray:
+    """Lower edge of x's bit-pattern bin. For x = the exact k-th largest
+    |score| this IS the histogram-selector threshold: the largest bin b
+    with tail count >= k is exactly bit_bin(x) (every key above x's bin
+    is > x, and there are < k of those), so
+    key_bin_edge(kth) == threshold_from_hist(hist, k) — which is what
+    lets the XLA strategy serve selector="histogram" without computing
+    a dense histogram, and keeps both strategies' tau identical."""
+    return bin_lower_edge(bit_bin(x))
+
+
 # ---------------------------------------------------------------------------
 # Sweep 1
 # ---------------------------------------------------------------------------

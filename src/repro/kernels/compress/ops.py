@@ -45,6 +45,7 @@ from repro.core.numerics import safe_denom
 from repro.kernels.common import auto_interpret
 from repro.kernels.compress import kernel as pk
 from repro.kernels.compress import xla as px
+from repro.kernels.compress.dispatch import hist_capacity
 
 
 def default_strategy() -> str:
@@ -70,14 +71,21 @@ def sweep_plan(pipeline: str, comm_mode: str = "sparse") -> dict:
 
 
 def _posterior_keys(a, idx_prev, a_prev_sel, g_prev_sel, step, *,
-                    omega, mu):
-    """|score| of the support entries (Algorithm 1 line 5, O(k))."""
+                    omega, mu, support_valid=None):
+    """|score| of the support entries (Algorithm 1 line 5, O(k)).
+
+    ``support_valid`` masks inert pad slots of the histogram selector's
+    fixed-capacity support state (slots >= nsel_prev point at index 0
+    and must not contribute a corrected key)."""
     from repro.core import bigvec
     a_sel = bigvec.gather(a, idx_prev)
     safe = safe_denom(omega * a_sel)
     delta_sel = (g_prev_sel - omega * a_prev_sel) / safe
     skey = jnp.abs(a_sel * jnp.tanh(jnp.abs(1.0 + delta_sel) / mu))
-    return jnp.where(step == 0, -jnp.inf, skey)
+    skey = jnp.where(step == 0, -jnp.inf, skey)
+    if support_valid is not None:
+        skey = jnp.where(support_valid, skey, -jnp.inf)
+    return skey
 
 
 def _sweep1_xla(kind, g, a_prev, s_prev8, c, *, momentum, mom):
@@ -185,32 +193,78 @@ def _candidates_xla(kind, g, a_prev, s_prev8, c, *, k: int, momentum: float,
     return a, mom_out, cand_k, cand_i, witnesses
 
 
+def _fused_randk(g, a_prev, s_prev8, *, k: int, key, want_ghat: bool) -> dict:
+    """Fused RANDOM-k: selection is score-free, so the whole step is ONE
+    elementwise sweep (implicit-EF ``a``) plus O(k) random gathers — no
+    sweep 2, no histogram, no trim. The elementwise form is optimal on
+    every backend (XLA fuses it; a Pallas grid would add nothing), so
+    all strategies share it. Index stream is identical to the reference
+    randk's (both call select.randk_indices on the same key)."""
+    from repro.core import bigvec
+    from repro.core.select import randk_indices
+    assert key is not None, "randk needs a PRNG key"
+    j = g.shape[0]
+    a, _, _ = _sweep1_xla("randk", g, a_prev, s_prev8, jnp.float32(1.0),
+                          momentum=0.0, mom=None)
+    idx = randk_indices(key, j, k)
+    values = bigvec.gather(a, idx)
+    mask8 = bigvec.mask_from_indices(j, idx, jnp.uint8)
+    ghat = None
+    if want_ghat:
+        ghat = bigvec.scatter_set(jnp.zeros((j,), jnp.float32), idx, values)
+    return {"a": a, "mask8": mask8, "values": values, "indices": idx,
+            "ghat": ghat, "mom": None, "count": jnp.asarray(k, jnp.int32),
+            "tau": None}
+
+
 def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
                           omega=1.0, mu: float = 0.1, Q: float = 0.0,
                           momentum: float = 0.9, mom=None,
                           idx_prev=None, a_prev_sel=None, g_prev_sel=None,
-                          want_ghat: bool = True,
+                          nsel_prev=None, want_ghat: bool = True,
                           strategy: Optional[str] = None,
-                          num_buckets: int = 1) -> dict:
-    """One fused compression step. kind in {"topk", "dgc", "regtopk"}.
+                          num_buckets: int = 1, selector: str = "exact",
+                          key=None) -> dict:
+    """One fused compression step. kind in {"topk", "dgc", "regtopk",
+    "randk", "thresholdk"} (thresholdk shares the plain-score path with
+    topk; randk needs ``key`` and ignores ``selector``).
 
     Inputs: g (J,) raw gradient; a_prev (J,) previous error-compensated
-    gradient; s_prev8 (J,) uint8 previous selection mask; step () int32.
-    REGTOP-k additionally takes the O(k) posterior (idx_prev uint32,
-    a_prev_sel, g_prev_sel). DGC takes the momentum buffer ``mom``.
-    ``num_buckets`` partitions the sweeps into contiguous buckets
-    (DESIGN.md §2.4); selection semantics are bucketing-invariant.
+    gradient (fp32 or bf16 — sweep math is always fp32 in-register);
+    s_prev8 (J,) uint8 previous selection mask; step () int32. REGTOP-k
+    additionally takes the O(k) posterior (idx_prev uint32, a_prev_sel,
+    g_prev_sel; with selector="histogram" these are hist_capacity-sized
+    and ``nsel_prev`` marks how many leading slots are live). DGC takes
+    the momentum buffer ``mom``. ``num_buckets`` partitions the sweeps
+    into contiguous buckets (DESIGN.md §2.4); selection semantics are
+    bucketing-invariant.
 
-    Returns {"a", "mask8", "values", "indices", "ghat" (None unless
-    want_ghat), "mom" (dgc only)}. values/indices are the fixed-k packed
-    pairs ordered by |score| descending; the selected support is
-    bit-identical to the reference exact selector's (and to the flat
-    num_buckets=1 path) for every num_buckets.
+    Returns {"a", "mask8", "values", "indices", "count", "tau", "ghat"
+    (None unless want_ghat), "mom" (dgc only)}.
+
+    - selector="exact": values/indices are the fixed-k packed pairs
+      ordered by |score| descending; selected support is bit-identical
+      to the reference exact selector's (and to the flat num_buckets=1
+      path) for every num_buckets. count == k, tau is None.
+    - selector="histogram": threshold selection at tau =
+      key_bin_edge(k-th |score|) — the sweep-1 bit-pattern histogram
+      threshold (DESIGN.md §2.5). values/indices are fixed
+      hist_capacity(k, j)-sized; ``count`` in [k, capacity] entries are
+      live, the tail is inert (value 0.0 at index 0). ``tau`` is the
+      realized threshold.
     """
     from repro.core import bigvec
     strategy = strategy or default_strategy()
     j = g.shape[0]
     k = int(min(k, j))
+    if kind == "randk":
+        return _fused_randk(g, a_prev, s_prev8, k=k, key=key,
+                            want_ghat=want_ghat)
+    hist = selector == "histogram"
+    # static packed capacity; also the candidate-provisioning budget —
+    # for exact selection kcap == k and everything below degenerates to
+    # the original exact-k trim
+    kcap = hist_capacity(k, j) if hist else k
     bounds = bucket_bounds(j, num_buckets)
     regtopk = kind == "regtopk"
     if regtopk:
@@ -222,19 +276,24 @@ def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
     if strategy in ("pallas", "pallas_interpret"):
         interpret = strategy == "pallas_interpret" or auto_interpret()
         a, mom_out, cand_k, cand_i, producer_ok = _candidates_pallas(
-            kind, g, a_prev, s_prev8, c, step, k=k, regtopk=regtopk,
+            kind, g, a_prev, s_prev8, c, step, k=kcap, regtopk=regtopk,
             momentum=momentum, mom=mom, interpret=interpret, bounds=bounds)
         witnesses = None
     else:
         a, mom_out, cand_k, cand_i, witnesses = _candidates_xla(
-            kind, g, a_prev, s_prev8, c, k=k, momentum=momentum, mom=mom,
+            kind, g, a_prev, s_prev8, c, k=kcap, momentum=momentum, mom=mom,
             bounds=bounds)
         producer_ok = None                   # needs tau; checked below
 
-    # --- O(candidates) exact-k trim -------------------------------------
+    # --- O(candidates) fixed-capacity trim ------------------------------
+    support_valid = None
     if regtopk:
+        if nsel_prev is not None:
+            support_valid = (jnp.arange(idx_prev.shape[0], dtype=jnp.int32)
+                             < nsel_prev)
         skey = _posterior_keys(a, idx_prev, a_prev_sel, g_prev_sel, step,
-                               omega=omega, mu=mu)
+                               omega=omega, mu=mu,
+                               support_valid=support_valid)
         # candidates that are support members carry an uncorrected key:
         # disable them (the corrected copy is appended below)
         ci_safe = jnp.minimum(cand_i, jnp.uint32(j - 1))
@@ -245,32 +304,37 @@ def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
     else:
         allk, alli = cand_k, cand_i
 
-    tv, tsel = jax.lax.top_k(allk, k)
+    tv, tsel = jax.lax.top_k(allk, kcap)
     idx_fast = alli[tsel]
-    tau_k = tv[-1]
-    valid = tau_k > -jnp.inf
+    kth = tv[k - 1]
+    valid = kth > -jnp.inf
+    # histogram tau: bit-pattern bin lower edge of the k-th key. The
+    # sweep-2 compaction threshold (merged-histogram tau at target
+    # kcap + margin) is <= this edge, so the candidates cover every
+    # entry >= tau (kernel.key_bin_edge docstring).
+    tau = pk.key_bin_edge(kth) if hist else kth
     if producer_ok is None:                  # xla strategy witness
-        # a bucket can hide a missed top-k entry only if one of its rows
-        # saturated its W candidate slots at or above the global tau_k
+        # a bucket can hide a missed entry only if one of its rows
+        # saturated its W candidate slots at or above the selection
+        # threshold (the global tau)
         producer_ok = valid
         for full_cover, row_min in witnesses:
-            ok_b = full_cover | (jnp.max(row_min) < tau_k)
+            ok_b = full_cover | (jnp.max(row_min) < tau)
             producer_ok = jnp.logical_and(producer_ok, ok_b)
     ok = producer_ok & valid
-    if regtopk:
+    if regtopk and not hist:
         # Boundary ties among compacted candidates resolve exactly like the
         # reference (candidate position order == global index order). The
         # one exception: a tie involving a corrected SUPPORT key (appended
         # last, out of index order) with more ties than slots — fallback.
-        n_gt = jnp.sum((allk > tau_k).astype(jnp.int32))
-        n_eq = jnp.sum((allk == tau_k).astype(jnp.int32))
-        support_tie = jnp.any(skey == tau_k)
+        # (Histogram selection has no exact-parity contract: every tie at
+        # tau is either wholly selected or cut at the fixed capacity.)
+        n_gt = jnp.sum((allk > kth).astype(jnp.int32))
+        n_eq = jnp.sum((allk == kth).astype(jnp.int32))
+        support_tie = jnp.any(skey == kth)
         ok = ok & ((n_eq == (k - n_gt)) | ~support_tie)
 
-    def _fast(_):
-        return idx_fast
-
-    def _fallback(_):
+    def _fallback_keys():
         # adversarial-input escape hatch: recompute (a, keys) from the
         # *function parameters* rather than capturing the intermediate
         # `a` — XLA CPU copies non-parameter conditional operands, which
@@ -280,17 +344,65 @@ def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
         keys_d = jnp.abs(score2)
         if regtopk:
             base = bigvec.gather(keys_d, idx_prev)
-            fix = jnp.where(step > 0, skey, base)
-            keys_d = bigvec.scatter_set(keys_d, idx_prev, fix)
-        from repro.core import select
-        return select.topk_indices(keys_d, k)
+            live = step > 0
+            if support_valid is not None:
+                live = live & support_valid
+                # inert pad slots alias index 0: write via the
+                # out-of-range sentinel + drop instead (a duplicate
+                # scatter of a DIFFERENT value at index 0 would be
+                # order-undefined)
+                idx_w = jnp.where(support_valid, idx_prev, jnp.uint32(j))
+            else:
+                idx_w = idx_prev
+            fix = jnp.where(live, skey, base)
+            keys_d = bigvec.scatter_set(keys_d, idx_w, fix, mode="drop")
+        return keys_d
 
-    idx_k = jax.lax.cond(ok, _fast, _fallback, operand=None)
-    values = bigvec.gather(a, idx_k)
-    mask8 = bigvec.mask_from_indices(j, idx_k, jnp.uint8)
-    ghat = None
-    if want_ghat:
-        ghat = bigvec.scatter_set(jnp.zeros((j,), jnp.float32), idx_k, values)
+    if hist:
+        def _fast(_):
+            return idx_fast, tv >= tau, tau
+
+        def _fallback(_):
+            keys_d = _fallback_keys()
+            from repro.core import select
+            idx_d = select.topk_indices(keys_d, kcap)
+            tvd = bigvec.gather(keys_d, idx_d)
+            tau_d = pk.key_bin_edge(tvd[k - 1])
+            return idx_d, tvd >= tau_d, tau_d
+
+        idx_k, valid_sel, tau = jax.lax.cond(ok, _fast, _fallback,
+                                             operand=None)
+        values = jnp.where(valid_sel,
+                           bigvec.gather(a, jnp.minimum(idx_k,
+                                                        jnp.uint32(j - 1))),
+                           0.0)
+        idx_k = jnp.where(valid_sel, idx_k, 0).astype(jnp.uint32)
+        count = jnp.sum(valid_sel.astype(jnp.int32))
+        # inert pads: scatter-ADD so a pad's (0, 0.0) never clobbers a
+        # live selection at index 0
+        mask8 = bigvec.scatter_add(jnp.zeros((j,), jnp.uint8), idx_k,
+                                   valid_sel.astype(jnp.uint8))
+        ghat = None
+        if want_ghat:
+            ghat = bigvec.scatter_add(jnp.zeros((j,), jnp.float32),
+                                      idx_k, values)
+    else:
+        def _fast(_):
+            return idx_fast
+
+        def _fallback(_):
+            from repro.core import select
+            return select.topk_indices(_fallback_keys(), k)
+
+        idx_k = jax.lax.cond(ok, _fast, _fallback, operand=None)
+        values = bigvec.gather(a, idx_k)
+        count = jnp.asarray(k, jnp.int32)
+        tau = None
+        mask8 = bigvec.mask_from_indices(j, idx_k, jnp.uint8)
+        ghat = None
+        if want_ghat:
+            ghat = bigvec.scatter_set(jnp.zeros((j,), jnp.float32),
+                                      idx_k, values)
     return {"a": a, "mask8": mask8, "values": values,
             "indices": idx_k.astype(jnp.uint32), "ghat": ghat,
-            "mom": mom_out}
+            "mom": mom_out, "count": count, "tau": tau}

@@ -50,6 +50,24 @@ def exact_topk_ref(score, k: int):
     return jax.lax.top_k(jnp.abs(score.astype(jnp.float32)), k)
 
 
+def hist_select_ref(score, k: int, kcap: int):
+    """Dense oracle for the fused histogram selector (DESIGN.md §2.5).
+
+    tau = key_bin_edge(k-th largest |score|) — identical to the sweep-1
+    bit-pattern histogram threshold at target k — and the selection is
+    the min(count(|score| >= tau), kcap) largest entries, i.e. all
+    entries >= tau capped at the fixed packed capacity. Returns
+    (tau, mask_bool (J,)).
+    """
+    from repro.kernels.compress.kernel import key_bin_edge
+    keys = jnp.abs(score.astype(jnp.float32))
+    kv, ki = jax.lax.top_k(keys, int(min(kcap, keys.shape[0])))
+    tau = key_bin_edge(kv[k - 1])
+    sel = ki[kv >= tau]
+    mask = jnp.zeros(keys.shape, bool).at[sel].set(True)
+    return tau, mask
+
+
 def bucket_hists_ref(keys, bounds, bins: int = 2048):
     """Per-bucket bit-pattern histograms, dense oracle (DESIGN.md §2.4).
 

@@ -8,10 +8,15 @@ fusion-friendly XLA ops instead:
   one loop over the dense inputs (and into the sweep-2 operand read).
 - Sweep 2 is a batched per-row ``lax.top_k``: each CHUNK-sized row emits
   its top-W |score| candidates, the row analogue of the Pallas kernel's
-  per-block threshold slots. W is sized ~4x the expected per-row top-k
-  share, so the candidate set provably covers the true top-k unless a
-  row's W-th candidate reaches the global threshold (the ``ok`` flag the
-  caller checks before trusting the compaction).
+  per-block threshold slots. W is sized ~4x the expected per-row share
+  of the caller's packing budget (k for exact selection, hist_capacity
+  for the histogram selector — ops passes the budget as ``k``), so the
+  candidate set provably covers the true top-budget unless a row's W-th
+  candidate reaches the selection threshold (the exact k-th key, or the
+  histogram bin edge below it — the witness ops checks before trusting
+  the compaction). The histogram selector needs NO dense histogram on
+  this strategy: its tau is key_bin_edge(k-th |score|), computable from
+  the same trimmed candidates (kernel.key_bin_edge docstring).
 
 Cost: O(J log W) compute in one O(J) read — no full-array O(J log k)
 sort, and no second sort for packing.

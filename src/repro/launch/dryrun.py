@@ -177,7 +177,7 @@ def build_step(run: RunConfig, mesh, kind: str):
 def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
                sparsity=0.001, comm="sparse", verbose=True,
                variant="", state_format="dense", ef_dtype="float32",
-               pipeline="reference", num_buckets=1,
+               pipeline="reference", num_buckets=1, selector="exact",
                **cfg_overrides) -> dict:
     shape = SHAPES[shape_name]
     cfg = get_config(arch)
@@ -196,7 +196,7 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
     run = RunConfig(
         model=cfg, shape=shape,
         sparsifier=SparsifierConfig(kind=sparsifier, sparsity=sparsity,
-                                    comm_mode=comm, selector="exact",
+                                    comm_mode=comm, selector=selector,
                                     mu=0.5, state_format=state_format,
                                     ef_dtype=ef_dtype, pipeline=pipeline,
                                     num_buckets=num_buckets),
@@ -204,6 +204,15 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
         attn_override=attn_override,
     )
     kind = shape.kind
+    num_buckets_resolved = num_buckets
+    if num_buckets == 0 and kind == "train":
+        # the trace resolves inside sync_gradient; the shared helper
+        # mirrors it exactly (same flattened per-rank J, same dp extent)
+        # so the record — which the roofline's collective_exposed_s
+        # consumes — carries the chunk count the compiled program
+        # actually executes
+        from repro.train.step import auto_num_buckets_for_run
+        num_buckets_resolved, _, _ = auto_num_buckets_for_run(run, mesh)
     t0 = time.time()
     step, abs_args, pal = build_step(run, mesh, kind)
     with mesh:
@@ -226,7 +235,8 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
         "mesh": dict(zip(mesh.axis_names,
                          [int(mesh.shape[a]) for a in mesh.axis_names])),
         "kind": kind, "attn_override": attn_override,
-        "num_buckets": num_buckets,
+        "num_buckets": num_buckets_resolved,
+        "num_buckets_requested": num_buckets,
         "params": int(n_params), "active_params": int(n_active),
         "flops": float(cost.get("flops", -1)),
         "bytes_accessed": float(cost.get("bytes accessed", -1)),
@@ -276,7 +286,11 @@ def main():
     ap.add_argument("--num-buckets", type=int, default=1,
                     help="bucketed compression + chunked sparse collectives "
                          "(DESIGN.md §2.4); the record carries num_buckets "
-                         "so the roofline reports collective_exposed_s")
+                         "so the roofline reports collective_exposed_s. "
+                         "0 auto-tunes the count (the record then carries "
+                         "the resolved value)")
+    ap.add_argument("--selector", default="exact",
+                    choices=["exact", "histogram"])
     ap.add_argument("--out", default="")
     ap.add_argument("--variant", default="", help="perf-variant tag for the record")
     ap.add_argument("--state-format", default="dense")
@@ -315,7 +329,8 @@ def main():
                     sparsity=args.sparsity, comm=args.comm,
                     variant=args.variant, state_format=args.state_format,
                     ef_dtype=args.ef_dtype, pipeline=args.pipeline,
-                    num_buckets=args.num_buckets, **overrides))
+                    num_buckets=args.num_buckets, selector=args.selector,
+                    **overrides))
             except Exception as e:  # noqa: BLE001 — report every combo
                 import traceback
                 traceback.print_exc()

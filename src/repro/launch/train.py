@@ -35,7 +35,16 @@ def parse_args(argv=None):
                          "buckets; the fused sweeps and the sparse "
                          "all-gather run per bucket so collectives overlap "
                          "compaction. Selection is bucketing-invariant; "
-                         "1 disables bucketing")
+                         "1 disables bucketing; 0 auto-tunes the count from "
+                         "the sparse-collective payload vs the interconnect "
+                         "latency floor (roofline.analysis.auto_num_buckets)")
+    ap.add_argument("--selector", default="exact",
+                    choices=["exact", "histogram"],
+                    help="top-k selection rule: exact lax.top_k semantics, "
+                         "or histogram threshold selection (over-selects "
+                         "within [k, k*(1+slack)]; served by the fused "
+                         "pipeline's sweep-1 bit-pattern histogram, "
+                         "DESIGN.md §2.5)")
     ap.add_argument("--optimizer", default="adam")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--data", type=int, default=1)
@@ -77,6 +86,7 @@ def main(argv=None):
                                     sparsity=args.sparsity, mu=args.mu,
                                     comm_mode=args.comm,
                                     pipeline=args.pipeline,
+                                    selector=args.selector,
                                     num_buckets=args.num_buckets),
         optimizer=OptimizerConfig(kind=args.optimizer, lr=args.lr),
         seed=args.seed, steps=args.steps,
@@ -95,6 +105,16 @@ def main(argv=None):
         print(f"[train] {cfg.name}: {n:,} params (global), mesh="
               f"{dict(zip(mesh.axis_names, mesh.devices.shape))}, "
               f"sparsifier={args.sparsifier}@{args.sparsity}")
+        from repro.core.aggregate import effective_comm_mode
+        sp = run.sparsifier
+        if sp.num_buckets == 0:
+            # the shared trace-accurate mirror of sync_gradient's
+            # resolution (train/step.auto_num_buckets_for_run)
+            from repro.train.step import auto_num_buckets_for_run
+            nb, j_local, dp = auto_num_buckets_for_run(run, mesh, pal)
+            print(f"[train] num_buckets=0 -> auto-tuned {nb} "
+                  f"(J_local={j_local:,}, dp={dp})")
+        print(f"[train] effective comm mode: {effective_comm_mode(sp)}")
         import time
         t0 = time.time()
         for t in range(args.steps):

@@ -27,6 +27,57 @@ class Hardware:
 
 HW_V5E = Hardware("tpu-v5e", 197e12, 819e9, 50e9)
 
+# Per-collective dispatch + ICI setup latency floor: below this, splitting
+# a collective into more chunks costs more in launch latency than the
+# pipelined overlap recovers (the "bytes per chunk vs interconnect latency
+# floor" term of the num_buckets auto-tune, ROADMAP / DESIGN.md §2.4).
+COLLECTIVE_LATENCY_S = 5e-6
+# A chunk below this wire size is latency-dominated — never split finer.
+MIN_CHUNK_BYTES = 1 << 16
+# Past ~16 chunks the overlap model's min/B term is already flat (and the
+# sweep audit resolves bucketings only to ~16, DESIGN.md §2.3).
+MAX_AUTO_BUCKETS = 16
+
+
+def auto_num_buckets(packed_len: int, n_workers: int,
+                     hw: Hardware = HW_V5E,
+                     latency_s: float = COLLECTIVE_LATENCY_S,
+                     max_buckets: int = MAX_AUTO_BUCKETS) -> int:
+    """Auto-tuned bucket count for the chunked sparse-comm schedule.
+
+    The bucketed all-gather (DESIGN.md §2.4) pipelines each chunk's
+    collective against the previous chunk's local scatter-add combine;
+    with B chunks the exposed time is
+
+        exposed(B) ~= max(t_coll, t_combine) + min(t_coll, t_combine)/B
+                      + (B - 1) * latency_s
+
+    where t_coll = payload / ici_bw (wire) and t_combine =
+    payload / hbm_bw (the combine's HBM landing traffic) over the
+    gathered payload n_workers * packed_len * 8 bytes (fp32 values +
+    uint32 indices per rank). Minimizing over B gives
+    B* = sqrt(min(t_coll, t_combine) / latency_s), clamped so every
+    chunk stays above MIN_CHUNK_BYTES and B <= max_buckets. Small
+    payloads (smoke scale) resolve to 1 — chunking only pays once the
+    combine itself outweighs a collective launch.
+
+    Deterministic in its inputs: ``num_buckets=0`` and a manual
+    ``num_buckets=auto_num_buckets(...)`` flag are bit-identical
+    (bucketing never changes selection semantics regardless).
+    """
+    import math
+    payload = max(0, int(n_workers)) * max(0, int(packed_len)) * 8
+    if payload <= 0 or latency_s <= 0:
+        return 1
+    t_coll = payload / hw.ici_bw
+    t_combine = payload / hw.hbm_bw
+    short = min(t_coll, t_combine)
+    if short <= latency_s:
+        return 1
+    b = int(math.sqrt(short / latency_s))
+    b = min(b, max(1, payload // MIN_CHUNK_BYTES), int(max_buckets))
+    return max(1, b)
+
 
 def model_flops(kind: str, active_params: int, global_batch: int,
                 seq_len: int) -> float:

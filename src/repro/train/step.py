@@ -88,6 +88,25 @@ def abstract_params(run: RunConfig, pal: Parallel):
                           jax.random.PRNGKey(0))
 
 
+def auto_num_buckets_for_run(run: RunConfig, mesh, pal: Parallel = None):
+    """Trace-accurate mirror of sync_gradient's ``num_buckets=0``
+    resolution: the SAME flattened per-rank gradient length (TreeFlattener
+    total over the abstract per-rank params — what step_fn's
+    ``g.shape[0]`` is) and the same data-parallel extent. The single
+    helper every out-of-band consumer (launch log line, dryrun record)
+    must use, so logs and records can never disagree with the chunk
+    count the compiled program executes. Returns (num_buckets, j_local,
+    dp)."""
+    from repro.core.flatten import tree_size
+    from repro.core.sparsify import resolve_num_buckets
+    pal = pal or build_parallel(mesh)
+    dp = 1
+    for a in pal.data_axes:
+        dp *= int(mesh.shape[a])
+    j_local = tree_size(abstract_params(run, pal))
+    return resolve_num_buckets(run.sparsifier, j_local, dp), j_local, dp
+
+
 def train_state_specs(run: RunConfig, mesh, pal: Parallel):
     """(param_specs, opt_specs, ef_specs) PartitionSpec trees."""
     tmpl = abstract_params(run, pal)

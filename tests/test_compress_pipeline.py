@@ -59,43 +59,66 @@ class TestParityMatrix:
                              comm_mode=comm_mode)
         _roundtrip(cfg_r, cfg_f, j=12_345)
 
-    def test_histogram_selector_falls_back_to_reference(self):
-        """Histogram selectors over-select by design; pipeline="fused"
-        must not silently change them to exact-k selection."""
+    def test_histogram_selector_is_fused_with_contract(self):
+        """selector="histogram" is served by the fused pipeline since the
+        capability-dispatch PR: threshold selection at the sweep-1
+        bit-pattern bin edge, count in [k, hist_capacity]. The full
+        contract suite lives in tests/test_fused_configs.py."""
+        from repro.kernels.compress.dispatch import dispatch, hist_capacity
         cfg_r, cfg_f = _pair("topk", sparsity=0.02, selector="histogram")
+        assert dispatch(cfg_f).path == "fused"
+        assert dispatch(cfg_r).path == "reference"
         j = 20_000
-        st_r = sparsify.init_state(cfg_r, j)
+        k = sparsify.resolve_k(cfg_f, j)
         st_f = sparsify.init_state(cfg_f, j)
-        assert "err" in st_f        # reference layout, not fused
+        assert "a_prev" in st_f and "err" not in st_f   # fused layout
         g = jax.random.normal(jax.random.PRNGKey(11), (j,))
-        orr = sparsify.compress(cfg_r, st_r, g)
         off = sparsify.compress(cfg_f, st_f, g)
-        assert (orr.mask == off.mask).all()
-        assert int(off.mask.sum()) >= sparsify.resolve_k(cfg_f, j)
+        n = int(off.mask.astype(jnp.int32).sum())
+        assert k <= n <= hist_capacity(k, j)
+        # the reference histogram selector keeps its own (linear-bin)
+        # over-selection; both are supersets of the exact top-k
+        orr = sparsify.compress(cfg_r, sparsify.init_state(cfg_r, j), g)
+        assert int(orr.mask.sum()) >= k
 
-    def test_bf16_ef_dtype_falls_back_to_reference(self):
-        """The fused sweeps accumulate in fp32, so bf16 error-feedback
-        configs keep the reference pipeline (parity would break)."""
-        cfg_r, cfg_f = _pair("regtopk", sparsity=0.02, mu=0.5,
-                             ef_dtype="bfloat16")
+    def test_bf16_ef_dtype_is_fused(self):
+        """ef_dtype="bfloat16" takes the fused path: bf16 J-sized state,
+        fp32 in-register sweep math (tolerance contract vs the fp32
+        reference in tests/test_fused_configs.py)."""
+        _, cfg_f = _pair("regtopk", sparsity=0.02, mu=0.5,
+                         ef_dtype="bfloat16")
         j = 2_000
         st_f = sparsify.init_state(cfg_f, j)
-        assert "err" in st_f        # reference (dense) layout, not fused
-        _roundtrip(cfg_r, cfg_f, j=j, steps=2)
+        assert "a_prev" in st_f and "err" not in st_f   # fused layout
+        assert st_f["a_prev"].dtype == jnp.bfloat16
+        out = sparsify.compress(cfg_f, st_f, jax.random.normal(
+            jax.random.PRNGKey(1), (j,)))
+        assert int(out.mask.astype(jnp.int32).sum()) == \
+            sparsify.resolve_k(cfg_f, j)
 
     @pytest.mark.parametrize("kind", ["randk", "thresholdk"])
-    def test_unfused_kinds_delegate(self, kind):
-        """pipeline="fused" on kinds without a fused implementation runs
-        the reference path unchanged."""
+    def test_randk_thresholdk_fused_parity(self, kind):
+        """randk/thresholdk are fused since the capability-dispatch PR and
+        must match the reference path (identical sampler / identical
+        exact selection) — and both now pack (values, indices)."""
         cfg_r, cfg_f = _pair(kind, sparsity=0.05)
         j = 2_000
         key = jax.random.PRNGKey(1)
         sr = sparsify.init_state(cfg_r, j)
         sf = sparsify.init_state(cfg_f, j)
+        assert "a_prev" in sf and "err" not in sf       # fused layout
         g = jax.random.normal(key, (j,))
         orr = sparsify.compress(cfg_r, sr, g, key=key)
         off = sparsify.compress(cfg_f, sf, g, key=key)
         assert (orr.mask == off.mask).all()
+        assert orr.values is not None and off.values is not None
+        if kind == "randk":
+            # shared sampler => identical index STREAM, not just support
+            np.testing.assert_array_equal(np.asarray(orr.indices),
+                                          np.asarray(off.indices))
+        else:
+            assert set(np.asarray(orr.indices).tolist()) == \
+                set(np.asarray(off.indices).tolist())
 
     def test_sparse_comm_skips_dense_ghat(self):
         _, cfg_f = _pair("regtopk", sparsity=0.01, mu=0.5,

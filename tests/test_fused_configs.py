@@ -1,0 +1,607 @@
+"""Contract suite for the capability-dispatched fused configs
+(DESIGN.md §2.5): histogram-selector threshold selection, bf16 error
+feedback, randk / thresholdk, auto-tuned num_buckets, and the explicit
+sparse->simulate degrade.
+
+Contracts (not all are bit-parity):
+
+- selector="exact" configs stay BIT-identical to the reference exact
+  selector for every num_buckets including auto (np.testing
+  assert_array_equal, no allclose).
+- selector="histogram": tau = key_bin_edge(exact k-th |score|) (== the
+  sweep-1 bit-pattern histogram threshold), selected count in
+  [k, hist_capacity(k, j)], selection is a superset of the exact top-k,
+  packed pairs fixed-size with inert pads.
+- ef_dtype="bfloat16": exact-k counts, selection/value drift vs the
+  fp32 reference bounded by bf16 rounding (documented tolerances).
+- comm_mode="sparse" configs without packed pairs warn once and degrade
+  to simulate, queryably (effective_comm_mode).
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SparsifierConfig
+from repro.core import select, sparsify
+from repro.core import aggregate as agg
+from repro.kernels.compress import kernel as ck
+from repro.kernels.compress import ops as cops
+from repro.kernels.compress import ref as cref
+from repro.kernels.compress.dispatch import (
+    FUSED_EF_DTYPES,
+    FUSED_KINDS,
+    FUSED_SELECTORS,
+    dispatch,
+    effective_comm_mode,
+    hist_capacity,
+    packed_len,
+)
+
+BF16_EPS = 2.0 ** -8          # bf16 mantissa rounding unit
+
+
+def _cfg(kind, **kw):
+    kw.setdefault("selector", "exact")
+    kw.setdefault("pipeline", "fused")
+    return SparsifierConfig(kind=kind, **kw)
+
+
+class TestDispatchTable:
+    def test_full_matrix_is_fused(self):
+        """No config in the advertised capability matrix falls back."""
+        for kind in FUSED_KINDS:
+            for sel in FUSED_SELECTORS:
+                for ef in FUSED_EF_DTYPES:
+                    cfg = _cfg(kind, selector=sel, ef_dtype=ef,
+                               sparsity=0.02)
+                    d = dispatch(cfg)
+                    assert d.path == "fused", (kind, sel, ef, d.reason)
+                    assert d.reason == ""
+                    assert d.packs_pairs
+
+    def test_reference_reasons_are_queryable(self):
+        for cfg, frag in [
+            (_cfg("topk", pipeline="reference"), "pipeline"),
+            (_cfg("sketchtopk"), "kind"),
+            (_cfg("globaltopk"), "kind"),
+            (_cfg("topk", selector="histogram_kernel"), "selector"),
+            (_cfg("topk", ef_dtype="float16"), "ef_dtype"),
+        ]:
+            d = dispatch(cfg)
+            assert d.path == "reference"
+            assert frag in d.reason, (d.reason, frag)
+
+    def test_effective_comm_mode(self):
+        sparse = dict(comm_mode="sparse")
+        assert effective_comm_mode(_cfg("topk", **sparse)) == "sparse"
+        assert effective_comm_mode(
+            _cfg("topk", selector="histogram", **sparse)) == "sparse"
+        # reference histogram packs nothing -> explicit degrade
+        assert effective_comm_mode(_cfg(
+            "topk", selector="histogram", pipeline="reference",
+            **sparse)) == "simulate"
+        assert effective_comm_mode(_cfg("none", **sparse)) == "dense"
+        assert effective_comm_mode(_cfg("sketchtopk", **sparse)) == "sparse"
+        assert effective_comm_mode(_cfg("topk", comm_mode="simulate")) == \
+            "simulate"
+
+    def test_reference_regtopk_sparse_state_packs(self):
+        """regtopk state_format="sparse" packs exact-k pairs on the
+        reference path REGARDLESS of selector (its O(k) layout selects
+        via topk_indices unconditionally) — the table must report the
+        sparse comm it actually runs, not a degrade."""
+        cfg = SparsifierConfig(kind="regtopk", sparsity=0.01, mu=0.5,
+                               state_format="sparse", selector="histogram",
+                               comm_mode="sparse", pipeline="reference")
+        assert dispatch(cfg).packs_pairs
+        assert effective_comm_mode(cfg) == "sparse"
+        j = 2_048
+        out = sparsify.compress(cfg, sparsify.init_state(cfg, j),
+                                jax.random.normal(jax.random.PRNGKey(0),
+                                                  (j,)))
+        assert out.values is not None
+        assert out.values.shape == (sparsify.resolve_k(cfg, j),)
+
+    def test_packed_len(self):
+        j = 10_000
+        cfg = _cfg("topk", sparsity=0.02)
+        k = sparsify.resolve_k(cfg, j)
+        assert packed_len(cfg, j) == k
+        cfg_h = dataclasses.replace(cfg, selector="histogram")
+        assert packed_len(cfg_h, j) == hist_capacity(k, j) > k
+        # reference histogram packs k-sized nothing; packed_len reports k
+        # (the fixed-count baseline) and packs_pairs=False carries the truth
+        cfg_rh = dataclasses.replace(cfg_h, pipeline="reference")
+        assert not dispatch(cfg_rh).packs_pairs
+
+    def test_comm_bytes_uses_effective_mode(self):
+        cfg = _cfg("topk", sparsity=0.001, selector="histogram",
+                   pipeline="reference", comm_mode="sparse")
+        v = agg.comm_bytes_per_step(cfg, 1_000_000, 8)
+        assert v["effective_comm_mode"] == "simulate"
+        assert v["ratio"] == 1.0
+        cfg_f = dataclasses.replace(cfg, pipeline="fused")
+        vf = agg.comm_bytes_per_step(cfg_f, 1_000_000, 8)
+        assert vf["effective_comm_mode"] == "sparse"
+        assert vf["bytes"] == 8 * vf["packed_len"] * 8
+
+
+class TestFusedHistogram:
+    """Threshold-selection contract: tau at the bit-pattern bin edge of
+    the exact k-th |score|, count in [k, hist_capacity], superset of the
+    exact top-k, fixed-size packing with inert pads."""
+
+    @pytest.mark.parametrize("kind", ["topk", "dgc", "thresholdk"])
+    def test_contract_multi_step(self, kind):
+        j = 12_345
+        cfg = _cfg(kind, sparsity=0.02, selector="histogram")
+        k = sparsify.resolve_k(cfg, j)
+        kcap = hist_capacity(k, j)
+        st = sparsify.init_state(cfg, j)
+        key = jax.random.PRNGKey(0)
+        for t in range(4):
+            g = jax.random.normal(jax.random.fold_in(key, t), (j,))
+            out = sparsify.compress(cfg, st, g)
+            mask = np.asarray(out.mask).astype(bool)
+            n = int(mask.sum())
+            assert k <= n <= kcap, (t, n)
+            # superset of the exact top-k of the same score
+            if kind == "dgc":
+                score = np.asarray(st["a_prev"] * (1 - st["s_prev"].astype(
+                    jnp.float32)) + (cfg.momentum * st["mom"] + g))
+            else:
+                score = np.asarray(st["a_prev"] * (1 - st["s_prev"].astype(
+                    jnp.float32)) + g)
+            topk = np.argsort(-np.abs(score), kind="stable")[:k]
+            assert mask[topk].all(), f"t={t}: top-k not covered"
+            # every selected entry is >= the oracle tau (bin edge of kth)
+            tau, mref = cref.hist_select_ref(jnp.asarray(score), k, kcap)
+            assert (np.abs(score[mask]) >= float(tau) - 1e-7).all()
+            np.testing.assert_array_equal(mask, np.asarray(mref))
+            st = out.state
+
+    def test_packed_pairs_fixed_size_inert_pads(self):
+        j = 8_192
+        cfg = _cfg("topk", sparsity=0.01, selector="histogram",
+                   comm_mode="sparse")
+        k = sparsify.resolve_k(cfg, j)
+        kcap = hist_capacity(k, j)
+        st = sparsify.init_state(cfg, j)
+        g = jax.random.normal(jax.random.PRNGKey(3), (j,))
+        out = sparsify.compress(cfg, st, g)
+        assert out.ghat is None                      # sparse comm: no dense
+        assert out.values.shape == (kcap,)
+        assert out.indices.shape == (kcap,)
+        n = int(out.mask.astype(jnp.int32).sum())
+        vals = np.asarray(out.values)
+        assert (vals[n:] == 0.0).all()               # inert tail
+        assert (np.asarray(out.indices)[n:] == 0).all()
+        dense = np.asarray(sparsify.dense_ghat(out, j))
+        np.testing.assert_array_equal(
+            dense != 0, np.asarray(out.mask).astype(bool) &
+            (np.asarray(st["a_prev"] + g) != 0))
+
+    def test_regtopk_histogram_roundtrip(self):
+        j = 9_999
+        cfg = _cfg("regtopk", sparsity=0.02, mu=0.5, selector="histogram")
+        k = sparsify.resolve_k(cfg, j)
+        kcap = hist_capacity(k, j)
+        st = sparsify.init_state(cfg, j)
+        assert st["idx_prev"].shape == (kcap,)       # capacity-sized posterior
+        key = jax.random.PRNGKey(1)
+        for t in range(4):
+            g = jax.random.normal(jax.random.fold_in(key, t), (j,))
+            out = sparsify.compress(cfg, st, g, omega=0.25)
+            n = int(out.mask.astype(jnp.int32).sum())
+            assert k <= n <= kcap, (t, n)
+            st = sparsify.observe_aggregate(
+                cfg, out.state, 0.25 * sparsify.dense_ghat(out, j))
+            assert int(st["nsel"]) == n              # live-slot count tracks
+
+    @pytest.mark.parametrize("kind", ["topk", "regtopk"])
+    @pytest.mark.parametrize("nb", [3, 8])
+    def test_bucketed_parity_vs_flat(self, kind, nb):
+        """Bucketing stays an execution-schedule choice for the histogram
+        selector too: packed pairs and mask bitwise equal to flat."""
+        j = 12_345
+        cfg1 = _cfg(kind, sparsity=0.02, mu=0.5, selector="histogram")
+        cfgb = dataclasses.replace(cfg1, num_buckets=nb)
+        s1, sb = sparsify.init_state(cfg1, j), sparsify.init_state(cfgb, j)
+        key = jax.random.PRNGKey(2)
+        for t in range(3):
+            g = jax.random.normal(jax.random.fold_in(key, t), (j,))
+            o1 = sparsify.compress(cfg1, s1, g, omega=0.25)
+            ob = sparsify.compress(cfgb, sb, g, omega=0.25)
+            for f, x1, xb in (("idx", o1.indices, ob.indices),
+                              ("val", o1.values, ob.values),
+                              ("mask", o1.mask, ob.mask)):
+                np.testing.assert_array_equal(np.asarray(x1), np.asarray(xb),
+                                              err_msg=f"{f} t={t}")
+            aggd = 0.25 * sparsify.dense_ghat(o1, j)
+            s1 = sparsify.observe_aggregate(cfg1, o1.state, aggd)
+            sb = sparsify.observe_aggregate(cfgb, ob.state, aggd)
+
+    @pytest.mark.parametrize("kind", ["topk", "regtopk"])
+    def test_pallas_interpret_matches_xla(self, kind):
+        """Both strategies realize the same threshold (merged-histogram
+        tau == key_bin_edge(kth)) and, on tie-free data, the same
+        selection and packing."""
+        j, k = 2 * ck.BLOCK, 37
+        kcap = hist_capacity(k, j)
+        g = jax.random.normal(jax.random.PRNGKey(5), (j,))
+        kw = {}
+        if kind == "regtopk":
+            kw = dict(idx_prev=jnp.zeros((kcap,), jnp.uint32),
+                      a_prev_sel=jnp.zeros((kcap,)),
+                      g_prev_sel=jnp.zeros((kcap,)),
+                      nsel_prev=jnp.zeros((), jnp.int32))
+        outs = {}
+        for strat in ("pallas_interpret", "xla"):
+            outs[strat] = cops.fused_compress_arrays(
+                kind, g, jnp.zeros((j,)), jnp.zeros((j,), jnp.uint8),
+                jnp.zeros((), jnp.int32), k=k, omega=0.25, mu=0.5,
+                selector="histogram", strategy=strat, **kw)
+        for f in ("mask8", "values", "indices", "count"):
+            np.testing.assert_array_equal(
+                np.asarray(outs["pallas_interpret"][f]),
+                np.asarray(outs["xla"][f]), err_msg=f)
+        assert float(outs["pallas_interpret"]["tau"]) == \
+            float(outs["xla"]["tau"])
+
+    def test_adversarial_all_equal_capped(self):
+        """Degenerate input (every entry ties): the reference histogram
+        selector would select everything; the fused contract caps at the
+        fixed capacity, still >= k."""
+        j, k = 6_000, 64
+        cfg = _cfg("topk", k=k, selector="histogram")
+        out = sparsify.compress(cfg, sparsify.init_state(cfg, j),
+                                jnp.ones((j,)))
+        n = int(out.mask.astype(jnp.int32).sum())
+        assert k <= n <= hist_capacity(k, j)
+
+    def test_dgc_histogram_momentum_masking(self):
+        j = 4_096
+        cfg = _cfg("dgc", sparsity=0.02, selector="histogram")
+        st = sparsify.init_state(cfg, j)
+        g = jax.random.normal(jax.random.PRNGKey(1), (j,))
+        out = sparsify.compress(cfg, st, g)
+        mom_expect = (cfg.momentum * np.asarray(st["mom"]) + np.asarray(g)) \
+            * (1.0 - np.asarray(out.mask).astype(np.float32))
+        np.testing.assert_allclose(np.asarray(out.state["mom"]), mom_expect,
+                                   rtol=1e-6, atol=1e-7)
+
+
+class TestFusedBf16:
+    """bf16 error feedback: bf16 J-sized state, fp32 in-register sweeps.
+    Tolerance contract vs the fp32 reference (documented, not bit-parity):
+    exact-k counts; step-0 selection flips confined to the bf16 rounding
+    band around the k-th magnitude; selected-value drift bounded by bf16
+    rounding; support overlap stays high across steps."""
+
+    @pytest.mark.parametrize("kind", ["topk", "regtopk"])
+    def test_tolerance_vs_fp32_reference(self, kind):
+        j = 8_192
+        cfg32 = SparsifierConfig(kind=kind, sparsity=0.02, mu=0.5,
+                                 selector="exact")
+        cfg16 = dataclasses.replace(cfg32, ef_dtype="bfloat16",
+                                    pipeline="fused")
+        k = sparsify.resolve_k(cfg32, j)
+        s32 = sparsify.init_state(cfg32, j)
+        s16 = sparsify.init_state(cfg16, j)
+        key = jax.random.PRNGKey(2)
+        for t in range(4):
+            g = jax.random.normal(jax.random.fold_in(key, t), (j,))
+            o32 = sparsify.compress(cfg32, s32, g, omega=0.25)
+            o16 = sparsify.compress(cfg16, s16, g, omega=0.25)
+            m32 = np.asarray(o32.mask).astype(bool)
+            m16 = np.asarray(o16.mask).astype(bool)
+            assert int(m16.sum()) == k               # exact-k preserved
+            flips = int((m32 ^ m16).sum())
+            assert flips <= max(2, int(0.1 * k)), f"t={t}: {flips} flips"
+            if t == 0:
+                # identical (zero) state: every flip sits in the bf16
+                # rounding band around the k-th magnitude
+                a_ref = np.asarray(g, np.float32)
+                tau = np.sort(np.abs(a_ref))[-k]
+                band = np.abs(np.abs(a_ref[m32 ^ m16]) - tau)
+                assert (band <= 8 * BF16_EPS * tau + 1e-6).all()
+            common = m32 & m16
+            gd32 = np.asarray(o32.ghat)[common]
+            gd16 = np.asarray(sparsify.dense_ghat(o16, j))[common]
+            np.testing.assert_allclose(gd16, gd32, rtol=16 * BF16_EPS,
+                                       atol=1e-4)
+            aggd = 0.25 * np.asarray(o32.ghat)
+            s32 = sparsify.observe_aggregate(cfg32, o32.state,
+                                             jnp.asarray(aggd))
+            s16 = sparsify.observe_aggregate(cfg16, o16.state,
+                                             jnp.asarray(aggd))
+
+    def test_state_is_bf16(self):
+        j = 4_096
+        cfg = _cfg("regtopk", sparsity=0.02, mu=0.5, ef_dtype="bfloat16")
+        st = sparsify.init_state(cfg, j)
+        assert st["a_prev"].dtype == jnp.bfloat16
+        assert st["a_prev_sel"].dtype == jnp.bfloat16
+        out = sparsify.compress(cfg, st, jax.random.normal(
+            jax.random.PRNGKey(0), (j,)))
+        assert out.state["a_prev"].dtype == jnp.bfloat16
+        assert out.values.dtype == jnp.float32       # packed comm stays fp32
+
+    @pytest.mark.parametrize("nb", [3, 8])
+    def test_bucketed_bf16_bitwise_vs_flat(self, nb):
+        """Bucketing-invariance is exact even under bf16 state (the
+        sweeps read the SAME bf16 inputs either way)."""
+        j = 6_000
+        cfg1 = _cfg("topk", sparsity=0.02, ef_dtype="bfloat16")
+        cfgb = dataclasses.replace(cfg1, num_buckets=nb)
+        s1, sb = sparsify.init_state(cfg1, j), sparsify.init_state(cfgb, j)
+        key = jax.random.PRNGKey(4)
+        for t in range(3):
+            g = jax.random.normal(jax.random.fold_in(key, t), (j,))
+            o1 = sparsify.compress(cfg1, s1, g)
+            ob = sparsify.compress(cfgb, sb, g)
+            np.testing.assert_array_equal(np.asarray(o1.indices),
+                                          np.asarray(ob.indices))
+            np.testing.assert_array_equal(np.asarray(o1.mask),
+                                          np.asarray(ob.mask))
+            s1, sb = o1.state, ob.state
+
+
+class TestFusedRandk:
+    def test_roundtrip_parity_with_reference(self):
+        j = 9_999
+        cfgr = SparsifierConfig(kind="randk", k=50, selector="exact")
+        cfgf = dataclasses.replace(cfgr, pipeline="fused")
+        sr, sf = sparsify.init_state(cfgr, j), sparsify.init_state(cfgf, j)
+        key = jax.random.PRNGKey(3)
+        for t in range(4):
+            g = jax.random.normal(jax.random.fold_in(key, 100 + t), (j,))
+            kt = jax.random.fold_in(key, t)
+            orr = sparsify.compress(cfgr, sr, g, key=kt)
+            off = sparsify.compress(cfgf, sf, g, key=kt)
+            np.testing.assert_array_equal(np.asarray(orr.indices),
+                                          np.asarray(off.indices))
+            np.testing.assert_allclose(
+                np.asarray(orr.ghat),
+                np.asarray(sparsify.dense_ghat(off, j)),
+                rtol=1e-6, atol=1e-7)
+            sr, sf = orr.state, off.state
+
+    def test_sampler_is_uniform_and_distinct(self):
+        j, k, rounds = 5_000, 64, 40
+        seen = np.zeros(j)
+        for i in range(rounds):
+            idx = np.asarray(select.randk_indices(
+                jax.random.PRNGKey(i), j, k))
+            assert len(set(idx.tolist())) == k       # without replacement
+            seen[idx] += 1
+        # dispersion, not the (tautological) mean: per-index occupancy is
+        # ~Binomial(40, k/j) under uniformity. A degenerate sampler that
+        # repeats a fixed subset would put seen.max() == rounds and touch
+        # exactly k indices; uniform draws touch ~j*(1-(1-k/j)^rounds)
+        # ~ 2000 distinct indices with max occupancy ~4 (P(>=9) < 1e-6).
+        assert seen.max() <= 8, seen.max()
+        assert int((seen > 0).sum()) > 1_200
+
+    def test_make_round_fn_randk_regression(self):
+        """make_round_fn crashed for kind="randk" (no PRNG key threaded
+        to its inner compress) before the capability-dispatch PR."""
+        cfg = SparsifierConfig(kind="randk", k=16, selector="exact")
+        n, j = 3, 500
+        rf = sparsify.make_round_fn(cfg, n)
+        states = sparsify.stack_states(
+            [sparsify.init_state(cfg, j) for _ in range(n)])
+        grads = jnp.stack([jax.random.normal(jax.random.PRNGKey(i), (j,))
+                           for i in range(n)])
+        g_agg, new_states = rf(states, grads, jax.random.PRNGKey(0))
+        assert 0 < int((np.asarray(g_agg) != 0).sum()) <= n * 16
+        assert int(new_states["step"][0]) == 1
+        # matches the list-based sparsified_round driver (same fold_in)
+        g_agg2, _ = sparsify.sparsified_round(
+            cfg, [sparsify.init_state(cfg, j) for _ in range(n)],
+            list(grads), key=jax.random.PRNGKey(0))
+        np.testing.assert_allclose(np.asarray(g_agg), np.asarray(g_agg2),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_fused_randk_sparse_comm(self):
+        """randk participates in sparse comm now: packed pairs drive the
+        all-gather, no dense ghat materialized."""
+        from jax.sharding import PartitionSpec as P
+        j = 4_096
+        cfg = _cfg("randk", sparsity=0.01, comm_mode="sparse")
+        st = sparsify.init_state(cfg, j)
+        g = jax.random.normal(jax.random.PRNGKey(0), (j,))
+        out = sparsify.compress(cfg, st, g, key=jax.random.PRNGKey(7))
+        assert out.ghat is None and out.values is not None
+        mesh = jax.make_mesh((1,), ("data",))
+
+        def f(g_, st_, key):
+            return agg.sync_gradient(cfg, st_, g_, ("data",), key=key)[0]
+
+        with mesh:
+            fn = jax.jit(jax.shard_map(
+                f, mesh=mesh,
+                in_specs=(P("data"), jax.tree_util.tree_map(
+                    lambda _: P(), st), P()),
+                out_specs=P("data"), check_vma=False))
+            g_agg = np.asarray(fn(g, st, jax.random.PRNGKey(7)))
+        k = sparsify.resolve_k(cfg, j)
+        assert int((g_agg != 0).sum()) <= k
+
+
+class TestAutoNumBuckets:
+    def test_model_shape(self):
+        from repro.roofline.analysis import auto_num_buckets
+        assert auto_num_buckets(0, 16) == 1
+        assert auto_num_buckets(1000, 4) == 1        # latency-dominated
+        big = auto_num_buckets(2_280_000, 16)        # qwen-scale payload
+        assert big > 1
+        assert auto_num_buckets(10 ** 9, 64) <= 16   # clamped
+
+    def test_resolve_is_deterministic_and_manual_reproducible(self):
+        cfg0 = _cfg("regtopk", sparsity=0.05, mu=0.5, num_buckets=0)
+        j = 12_345
+        nb = sparsify.resolve_num_buckets(cfg0, j, 64)
+        assert nb == sparsify.resolve_num_buckets(cfg0, j, 64)
+        assert sparsify.resolve_num_buckets(
+            dataclasses.replace(cfg0, num_buckets=nb), j, 64) == nb
+
+    def test_compress_bit_parity_auto_vs_manual(self):
+        """num_buckets=0 output is BIT-identical to passing the resolved
+        value manually (and to nb=1 — bucketing-invariance)."""
+        j = 12_345
+        cfg0 = _cfg("regtopk", sparsity=0.05, mu=0.5, num_buckets=0,
+                    comm_mode="sparse")
+        nb = sparsify.resolve_num_buckets(cfg0, j, 64)
+        cfgm = dataclasses.replace(cfg0, num_buckets=nb)
+        cfg1 = dataclasses.replace(cfg0, num_buckets=1)
+        g = jax.random.normal(jax.random.PRNGKey(0), (j,))
+        outs = [sparsify.compress(c, sparsify.init_state(c, j), g,
+                                  omega=1 / 64)
+                for c in (cfg0, cfgm, cfg1)]
+        for o in outs[1:]:
+            np.testing.assert_array_equal(np.asarray(outs[0].indices),
+                                          np.asarray(o.indices))
+            np.testing.assert_array_equal(np.asarray(outs[0].values),
+                                          np.asarray(o.values))
+
+    def test_sync_gradient_resolves_auto(self):
+        from jax.sharding import PartitionSpec as P
+        j = 4_096
+        cfg0 = _cfg("regtopk", sparsity=0.01, mu=0.5, comm_mode="sparse",
+                    num_buckets=0)
+        cfg1 = dataclasses.replace(cfg0, num_buckets=1)
+        mesh = jax.make_mesh((1,), ("data",))
+        g = jax.random.normal(jax.random.PRNGKey(0), (j,))
+
+        def run(cfg):
+            st = sparsify.init_state(cfg, j)
+
+            def f(g_, st_):
+                return agg.sync_gradient(cfg, st_, g_, ("data",))[0]
+
+            with mesh:
+                fn = jax.jit(jax.shard_map(
+                    f, mesh=mesh,
+                    in_specs=(P("data"), jax.tree_util.tree_map(
+                        lambda _: P(), st)),
+                    out_specs=P("data"), check_vma=False))
+                return np.asarray(fn(g, st))
+
+        np.testing.assert_array_equal(run(cfg0), run(cfg1))
+
+
+class TestSparseDegrade:
+    def test_reference_histogram_warns_once_and_simulates(self):
+        from jax.sharding import PartitionSpec as P
+        agg._DEGRADE_WARNED.clear()
+        j = 2_048
+        cfg = SparsifierConfig(kind="topk", sparsity=0.01,
+                               selector="histogram", comm_mode="sparse")
+        assert effective_comm_mode(cfg) == "simulate"
+        mesh = jax.make_mesh((1,), ("data",))
+        st = sparsify.init_state(cfg, j)
+        g = jax.random.normal(jax.random.PRNGKey(0), (j,))
+
+        def f(g_, st_):
+            return agg.sync_gradient(cfg, st_, g_, ("data",))[0]
+
+        def trace():
+            with mesh:
+                fn = jax.jit(jax.shard_map(
+                    f, mesh=mesh,
+                    in_specs=(P("data"), jax.tree_util.tree_map(
+                        lambda _: P(), st)),
+                    out_specs=P("data"), check_vma=False))
+                return np.asarray(fn(g, st))
+
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            out = trace()
+            msgs = [str(x.message) for x in w
+                    if issubclass(x.category, RuntimeWarning)]
+        assert any("degrading to a dense simulate" in m for m in msgs), msgs
+        # warned once per config, not per trace
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            trace()
+            again = [str(x.message) for x in w
+                     if "degrading" in str(x.message)]
+        assert not again
+        # numerics are the simulate path's
+        cfg_sim = dataclasses.replace(cfg, comm_mode="simulate")
+        st2 = sparsify.init_state(cfg_sim, j)
+
+        def f2(g_, st_):
+            return agg.sync_gradient(cfg_sim, st_, g_, ("data",))[0]
+
+        with mesh:
+            fn2 = jax.jit(jax.shard_map(
+                f2, mesh=mesh,
+                in_specs=(P("data"), jax.tree_util.tree_map(
+                    lambda _: P(), st2)),
+                out_specs=P("data"), check_vma=False))
+            np.testing.assert_allclose(out, np.asarray(fn2(g, st2)),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_fused_histogram_does_not_degrade(self):
+        agg._DEGRADE_WARNED.clear()
+        from jax.sharding import PartitionSpec as P
+        j = 2_048
+        cfg = _cfg("topk", sparsity=0.01, selector="histogram",
+                   comm_mode="sparse")
+        assert effective_comm_mode(cfg) == "sparse"
+        mesh = jax.make_mesh((1,), ("data",))
+        st = sparsify.init_state(cfg, j)
+        g = jax.random.normal(jax.random.PRNGKey(0), (j,))
+
+        def f(g_, st_):
+            return agg.sync_gradient(cfg, st_, g_, ("data",))[0]
+
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            with mesh:
+                fn = jax.jit(jax.shard_map(
+                    f, mesh=mesh,
+                    in_specs=(P("data"), jax.tree_util.tree_map(
+                        lambda _: P(), st)),
+                    out_specs=P("data"), check_vma=False))
+                fn(g, st)
+            assert not [x for x in w
+                        if "degrading" in str(x.message)]
+
+
+class TestSketchSyncBigvec:
+    def test_sketch_sparse_uses_buckets_and_bigvec(self):
+        """_sketch_sync routes its value gather through bigvec and
+        threads num_buckets into the chunked combine; numerics match the
+        simulate path."""
+        from jax.sharding import PartitionSpec as P
+        j = 4_096
+        cfg = SparsifierConfig(kind="sketchtopk", sparsity=0.02,
+                               comm_mode="sparse", num_buckets=4,
+                               sketch_rows=3)
+        cfg_sim = dataclasses.replace(cfg, comm_mode="simulate")
+        mesh = jax.make_mesh((1,), ("data",))
+        g = jax.random.normal(jax.random.PRNGKey(0), (j,))
+
+        def run(c):
+            st = sparsify.init_state(c, j)
+
+            def f(g_, st_):
+                return agg.sync_gradient(c, st_, g_, ("data",))[0]
+
+            with mesh:
+                fn = jax.jit(jax.shard_map(
+                    f, mesh=mesh,
+                    in_specs=(P("data"), jax.tree_util.tree_map(
+                        lambda _: P(), st)),
+                    out_specs=P("data"), check_vma=False))
+                return np.asarray(fn(g, st))
+
+        np.testing.assert_allclose(run(cfg), run(cfg_sim),
+                                   rtol=1e-5, atol=1e-6)
