@@ -6,8 +6,16 @@ Compares a freshly produced BENCH_compress.json (``benchmarks.run --json
 --only compress``) against the committed baseline and FAILS (exit 1) if:
 
 - any fused-pipeline row regressed its deterministic audit metrics —
-  ``sweeps_per_step`` (O(J)-traversal J-equivalents) or ``read_units``
+  ``sweeps_per_step`` (O(J)-traversal J-equivalents), ``read_units``,
+  or ``write_units`` (streamed J-fp32-equivalents, DESIGN.md §2.3)
   above the baseline row of the same name;
+- any SPARSE-COMM fused row (``comm_mode`` on the row, falling back to
+  the payload-level field) exceeds the ABSOLUTE two-traversal budget
+  (``sweeps_per_step`` > FUSED_MAX_TRAVERSALS): the err_prev state
+  layout makes the whole sparse-path step 2 sweeps, and a third one
+  creeping back in is a regression even if a stale baseline row also
+  had it. Dense/simulate fused rows are exempt — their extra ghat
+  write is by design (ops.sweep_plan);
 - in any benchmark group (``group`` field: the exact-selector REGTOP-k
   path, the histogram-selector path, ...) at the largest J where the
   group has BOTH a reference and a fused row, no fused variant's
@@ -29,6 +37,10 @@ import sys
 # deterministic integer-ish metrics get an epsilon for float formatting
 # noise only; a real regression moves them by >= 1/num_buckets
 EPS = 1e-6
+# absolute O(J)-traversal budget of the fused SPARSE-COMM compress step
+# (sweep 1 + sweep 2; all state updates are O(k) since the err_prev
+# layout — DESIGN.md §2.2). Dense/simulate fused rows are 3 by design.
+FUSED_MAX_TRAVERSALS = 2.0
 
 
 def _rows_by_name(payload: dict) -> dict:
@@ -40,14 +52,21 @@ def check(baseline: dict, fresh: dict) -> list:
     failures = []
     base = _rows_by_name(baseline)
     new = _rows_by_name(fresh)
+    payload_comm = fresh.get("comm_mode", "sparse")
 
     for name, row in sorted(new.items()):
         if row.get("pipeline", "").startswith("fused"):
+            sw = row.get("sweeps_per_step")
+            if (sw is not None and sw > FUSED_MAX_TRAVERSALS + EPS
+                    and row.get("comm_mode", payload_comm) == "sparse"):
+                failures.append(
+                    f"{name}: sweeps_per_step {sw} exceeds the absolute "
+                    f"sparse-path fused budget {FUSED_MAX_TRAVERSALS}")
             ref_row = base.get(name)
             if ref_row is None:
                 print(f"[check_compress] new row (not gated): {name}")
                 continue
-            for metric in ("sweeps_per_step", "read_units"):
+            for metric in ("sweeps_per_step", "read_units", "write_units"):
                 got, want = row.get(metric), ref_row.get(metric)
                 if got is None or want is None:
                     continue

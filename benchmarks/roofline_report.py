@@ -59,8 +59,9 @@ def dryrun_table(recs):
 def fits_table():
     from repro.configs.base import RunConfig, SparsifierConfig
     from repro.roofline.memory_model import per_device_memory
-    rows = ["| arch | EF layout | params | opt | EF | act | total/dev | fits 16GB? |",
-            "|---|---|---|---|---|---|---|---|"]
+    rows = ["| arch | EF layout | params | opt | EF | act | total/dev | "
+            "peak/dev | fits 16GB? |",
+            "|---|---|---|---|---|---|---|---|---|"]
     for a in list_archs():
         from repro.configs.base import get_config
         cfg = get_config(a)
@@ -74,8 +75,8 @@ def fits_table():
             rows.append(
                 f"| {a} | {tag} | {mb.params/1e9:.2f} | {mb.opt/1e9:.2f} | "
                 f"{mb.ef/1e9:.2f} | {mb.activations/1e9:.2f} | "
-                f"{mb.total/1e9:.2f} GB | "
-                f"{'YES' if mb.total <= 16e9 else 'NO'} |")
+                f"{mb.total/1e9:.2f} GB | {mb.peak/1e9:.2f} GB | "
+                f"{'YES' if mb.peak <= 16e9 else 'NO'} |")
     return "\n".join(rows)
 
 

@@ -5,6 +5,14 @@ rebuilds the pytree and (optionally) re-shards onto a mesh by device_put
 with the given sharding tree. Deterministic, dependency-free, adequate for
 the CPU-scale runs in this container; a real deployment would swap in
 tensorstore/orbax behind the same two functions.
+
+Legacy EF-state migration: checkpoints written before the two-traversal
+state layout carried the fused sparsifier state as the pair
+``(a_prev, s_prev)``; the current layout stores the single vector
+``err_prev = a_prev * (1 - s_prev)``. ``restore_checkpoint`` performs
+that one-shot dense multiply at restore when the saved EF tree has the
+legacy keys and the template asks for ``err_prev`` — after which the
+running state is maintained O(k) by the pipeline itself.
 """
 from __future__ import annotations
 
@@ -40,21 +48,44 @@ def latest_step(ckpt_dir: str):
     return max(steps) if steps else None
 
 
+def _migrate_ef_leaf(data, pstr: str):
+    """Resolve one EF leaf from a saved npz, migrating the legacy
+    ``(a_prev, s_prev)`` pair to ``err_prev`` when needed (one-shot
+    dense multiply — the EF invariant err = a * (1 - s))."""
+    if pstr in data:
+        return data[pstr]
+    if "err_prev" in pstr:
+        pa = pstr.replace("err_prev", "a_prev")
+        ps = pstr.replace("err_prev", "s_prev")
+        if pa in data.files and ps in data.files:
+            a = data[pa]
+            s = data[ps]
+            return (a.astype(np.float32)
+                    * (1.0 - s.astype(np.float32))).astype(a.dtype)
+    raise KeyError(
+        f"checkpoint is missing EF leaf {pstr!r} and no legacy "
+        "(a_prev, s_prev) pair to migrate it from")
+
+
 def restore_checkpoint(ckpt_dir: str, step: int, params, opt_state, ef_state,
                        shardings=None):
     """Restore into the STRUCTURE of the given trees (values replaced)."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
 
-    def load(tree, fname):
+    def load(tree, fname, migrate_ef=False):
         data = np.load(fname)
         flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-        leaves = [data[jax.tree_util.keystr(p)] for p, _ in flat]
+        if migrate_ef:
+            leaves = [_migrate_ef_leaf(data, jax.tree_util.keystr(p))
+                      for p, _ in flat]
+        else:
+            leaves = [data[jax.tree_util.keystr(p)] for p, _ in flat]
         return jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(tree), leaves)
 
     params = load(params, path + ".params.npz")
     opt_state = load(opt_state, path + ".opt.npz")
-    ef_state = load(ef_state, path + ".ef.npz")
+    ef_state = load(ef_state, path + ".ef.npz", migrate_ef=True)
     if shardings is not None:
         pshard, oshard, eshard = shardings
         params = jax.device_put(params, pshard)

@@ -148,6 +148,14 @@ class SparsifierConfig:
                                   # count in [k, k*(1+slack)]; fused via the
                                   # sweep-1 bit-pattern histogram)
     ef_dtype: str = "float32"     # error-feedback accumulator dtype
+    # wire dtype of the PACKED VALUES in comm_mode="sparse": the
+    # all-gather payload is cast (values only — indices stay uint32)
+    # before the collective and upcast to fp32 in the scatter-add
+    # combine. "bfloat16" cuts sparse wire bytes by 25% (8 -> 6 bytes
+    # per pair) at bf16 rounding of the combined g_agg (tolerance
+    # contract in tests/test_fused_configs.py::TestWireBf16). Identical
+    # on every rank, so REGTOP-k's shared-g_agg assumption holds.
+    wire_dtype: str = "float32"   # float32 | bfloat16
     # sketchtopk (beyond-paper): CountSketch-coordinated global TOP-k
     sketch_rows: int = 3
     sketch_width: int = 0         # 0 -> min(max(4k, 256), 2^22)
@@ -163,9 +171,10 @@ class SparsifierConfig:
     #   per step.
     # - "fused": two-sweep pipeline (kernels/compress). Sweep 1 reads the
     #   dense inputs exactly once and emits (a, score); sweep 2 compacts
-    #   fixed-size (values, indices) without a full-array sort.
-    #   Error-feedback state is implicit (err = a_prev * (1 - s_prev)),
-    #   the selection mask is stored as uint8, and the posterior state is
+    #   fixed-size (values, indices) without a full-array sort. The only
+    #   J-sized state is err_prev = a * (1 - s), written by an O(k)
+    #   scatter-zero (no dense mask exists; the whole step is 2 O(J)
+    #   traversals), and the posterior state is
     #   O(k). Serves kind in {topk, dgc, regtopk, randk, thresholdk},
     #   selector in {exact, histogram}, ef_dtype in {float32, bfloat16}:
     #   selector="exact" is bit-identical to "reference"; "histogram"

@@ -73,7 +73,8 @@ def simulate_allreduce(ghat: jnp.ndarray, axes: AxisNames) -> jnp.ndarray:
 
 def sparse_allgather_combine(values: jnp.ndarray, indices: jnp.ndarray,
                              j: int, axes: AxisNames,
-                             num_buckets: int = 1) -> jnp.ndarray:
+                             num_buckets: int = 1,
+                             wire_dtype: str = "float32") -> jnp.ndarray:
     """All-gather (k,) sparse contributions over `axes`; dense-combine locally.
 
     Every worker ends up with g_agg = (1/N) sum_n scatter(values_n, idx_n),
@@ -87,6 +88,11 @@ def sparse_allgather_combine(values: jnp.ndarray, indices: jnp.ndarray,
     chunk b's compaction instead of serializing one monolithic gather
     ahead of one monolithic scatter. The combined g_agg is the same sum
     (chunking only reorders additions at duplicate indices).
+
+    ``wire_dtype="bfloat16"`` casts the packed VALUES (never the
+    indices) right before each chunk's all-gather and upcasts in the
+    scatter-add combine: 6 wire bytes per pair instead of 8. Every rank
+    applies the same cast, so g_agg stays rank-identical.
     """
     if isinstance(axes, str):
         axes = (axes,)
@@ -102,14 +108,17 @@ def sparse_allgather_combine(values: jnp.ndarray, indices: jnp.ndarray,
         # inert tail: scatter-add of 0.0 at index 0
         values = jnp.concatenate([values, jnp.zeros((pad,), values.dtype)])
         indices = jnp.concatenate([indices, jnp.zeros((pad,), indices.dtype)])
-    dense = jnp.zeros((j,), values.dtype)
+    acc_dtype = values.dtype
+    wire_dt = jnp.dtype(wire_dtype)
+    dense = jnp.zeros((j,), acc_dtype)
     for b in range(num_buckets):
-        vb = values[b * chunk:(b + 1) * chunk]
+        vb = values[b * chunk:(b + 1) * chunk].astype(wire_dt)
         ib = indices[b * chunk:(b + 1) * chunk]
         for a in axes:
             vb = jax.lax.all_gather(vb, a)     # stacks leading axis
             ib = jax.lax.all_gather(ib, a)
-        dense = bigvec.scatter_add(dense, ib.reshape(-1), vb.reshape(-1))
+        dense = bigvec.scatter_add(dense, ib.reshape(-1),
+                                   vb.reshape(-1).astype(acc_dtype))
     return dense / n
 
 
@@ -152,7 +161,8 @@ def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     if cfg.comm_mode == "sparse" and out.values is not None:
         g_agg = sparse_allgather_combine(out.values, out.indices,
                                          g.shape[0], axes,
-                                         num_buckets=cfg.num_buckets)
+                                         num_buckets=cfg.num_buckets,
+                                         wire_dtype=cfg.wire_dtype)
     else:
         if cfg.comm_mode == "sparse":
             # explicit, not silent: this config emits no packed pairs, so
@@ -184,7 +194,8 @@ def _sketch_sync(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         from repro.core import bigvec
         vals = bigvec.gather(a, idx)   # uint32-safe for J > 2^31
         g_agg = sparse_allgather_combine(vals, idx, j, axes,
-                                         num_buckets=cfg.num_buckets)
+                                         num_buckets=cfg.num_buckets,
+                                         wire_dtype=cfg.wire_dtype)
         # combine scatters duplicate indices once per worker; mask-multiply
         # keeps only the shared-mask support (defensive; supports coincide)
         g_agg = g_agg * mask
@@ -212,12 +223,37 @@ def comm_bytes_per_step(cfg: SparsifierConfig, j: int, n_workers: int) -> dict:
         from repro.core import sketch as _sketch
         width = _sketch.resolve_width(k, cfg.sketch_width)
         sk = 2 * cfg.sketch_rows * width * 4 * (n_workers - 1) / n_workers
-        vals = n_workers * k * 4                            # indices implied
+        vals = n_workers * k * _wire_value_bytes(cfg)       # indices implied
         b = sk + vals
         return {"bytes": b, "k": k, "ratio": b / dense_ar,
                 "sketch_bytes": sk, "effective_comm_mode": eff}
     from repro.kernels.compress.dispatch import packed_len
     kp = packed_len(cfg, j)                 # k, or hist_capacity (fused hist)
-    sparse = n_workers * kp * (4 + 4)       # allgather vals+idx
+    vb = _wire_value_bytes(cfg)             # 4, or 2 for wire_dtype=bf16
+    sparse = n_workers * kp * (vb + 4)      # allgather vals+idx
     return {"bytes": sparse, "k": k, "packed_len": kp,
-            "ratio": sparse / dense_ar, "effective_comm_mode": eff}
+            "wire_value_bytes": vb, "ratio": sparse / dense_ar,
+            "effective_comm_mode": eff}
+
+
+def _wire_value_bytes(cfg: SparsifierConfig) -> int:
+    """Wire bytes per packed VALUE (dtype-aware; indices stay uint32)."""
+    import numpy as np
+    return int(np.dtype(cfg.wire_dtype).itemsize)
+
+
+def sparse_gather_wire_bytes(cfg: SparsifierConfig, j: int,
+                             n_workers: int):
+    """Per-device wire bytes of the sparse gradient all-gather, or None
+    when the config's EFFECTIVE comm mode is not sparse. This is the
+    chunked-collective share the roofline's ``collective_exposed_s``
+    overlap model scopes to (roofline/analysis.py) — dtype-aware, so a
+    ``wire_dtype="bfloat16"`` run is modeled at its real 6-bytes-per-pair
+    payload."""
+    # sketchtopk's sketch-coordinated exchange is modeled separately
+    # (comm_bytes_per_step); every other non-sparse case already reports
+    # itself via effective_comm_mode
+    if effective_comm_mode(cfg) != "sparse" or cfg.kind == "sketchtopk":
+        return None
+    from repro.kernels.compress.dispatch import packed_len
+    return n_workers * packed_len(cfg, j) * (_wire_value_bytes(cfg) + 4)

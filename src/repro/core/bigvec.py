@@ -59,3 +59,14 @@ def scatter_add(a: jnp.ndarray, idx: jnp.ndarray, vals) -> jnp.ndarray:
 
 def mask_from_indices(j: int, idx: jnp.ndarray, dtype) -> jnp.ndarray:
     return scatter_set(jnp.zeros((j,), dtype), idx, jnp.ones(idx.shape, dtype))
+
+
+def live_idx(idx: jnp.ndarray, live: jnp.ndarray, j: int) -> jnp.ndarray:
+    """Route non-live slots of a fixed-capacity index array OUT OF RANGE
+    (sentinel ``j``) so a ``mode="drop"`` scatter skips them.
+
+    This is THE way to scatter through packed indices with inert pad
+    slots: pads alias index 0, and a duplicate scatter write of a
+    different value at one index is order-undefined in XLA — the
+    sentinel + drop makes them true no-ops instead."""
+    return jnp.where(live, idx.astype(jnp.uint32), jnp.uint32(j))

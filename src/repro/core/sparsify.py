@@ -24,20 +24,24 @@ Execution pipelines (cfg.pipeline, DESIGN.md §2.2):
 
 - "reference": the dense math above, selection via cfg.selector. Oracle.
 - "fused": two-sweep pipeline (repro.kernels.compress) for kind in
-  {topk, dgc, regtopk, randk, thresholdk}. Error feedback is implicit —
-  the state stores (a_prev, s_prev) and reconstructs
-  eps^{t+1} = a^t * (1 - s^t) in-register — the mask is uint8, and
-  REGTOP-k's posterior is O(k) (idx_prev, a_prev_sel, g_prev_sel),
-  since Algorithm 1 line 5 reads a^{t-1} and g^{t-1} only at the
-  support of s^{t-1}. With selector="exact" the selected support is
-  bit-identical to "reference"; selector="histogram" keeps the
-  threshold-selection contract (count in [k, k*(1+HIST_SLACK)], tau at
-  a bit-pattern bin edge); ef_dtype="bfloat16" stores the J-sized EF
-  state in bf16 with fp32 in-register sweep math. In comm_mode="sparse"
-  no dense ghat is materialized (CompressOut.ghat is None and the
-  packed (values, indices) drive the all-gather). Which path serves a
-  config is an explicit table — repro.kernels.compress.dispatch
-  (DESIGN.md §2.5) — not an opaque boolean.
+  {topk, dgc, regtopk, randk, thresholdk}. The ONLY J-sized state is
+  ``err_prev`` = eps^{t+1} = a^t * (1 - s^t), written by an O(k)
+  scatter that zeroes the selected slots of ``a`` after the trim — no
+  dense mask exists anywhere (CompressOut.mask is None on this path;
+  reconstruct one on demand with :func:`dense_mask`), and REGTOP-k's
+  posterior is O(k) (idx_prev, a_prev_sel, g_prev_sel), since
+  Algorithm 1 line 5 reads a^{t-1} and g^{t-1} only at the support of
+  s^{t-1} — idx_prev doubles as that support set. With
+  selector="exact" the selected support is bit-identical to
+  "reference"; selector="histogram" keeps the threshold-selection
+  contract (count in [k, k*(1+HIST_SLACK)], tau at a bit-pattern bin
+  edge); ef_dtype="bfloat16" stores the J-sized EF state in bf16 with
+  fp32 in-register sweep math. In comm_mode="sparse" no dense ghat is
+  materialized (CompressOut.ghat is None and the packed
+  (values, indices) drive the all-gather) and the whole step is TWO
+  O(J) traversals (DESIGN.md §2.2). Which path serves a config is an
+  explicit table — repro.kernels.compress.dispatch (DESIGN.md §2.5) —
+  not an opaque boolean.
 """
 from __future__ import annotations
 
@@ -58,10 +62,15 @@ class CompressOut:
     ghat: Optional[jnp.ndarray]  # dense sparsified gradient (J,); None for
                                  # pipeline="fused" + comm_mode="sparse"
                                  # (reconstructible from values/indices)
-    mask: jnp.ndarray        # 0/1 selection mask (J,); uint8 when fused
+    mask: Optional[jnp.ndarray]  # dense 0/1 selection mask (J,) on the
+                                 # reference path; None on the fused path
+                                 # (no dense mask is ever materialized —
+                                 # derive one on demand via dense_mask())
     state: Any               # updated state (pre-aggregation)
     values: Optional[jnp.ndarray] = None  # (k,) packed values (exact selector)
     indices: Optional[jnp.ndarray] = None  # (k,) uint32 indices
+    count: Optional[jnp.ndarray] = None   # live packed slots (() int32);
+                                          # None means all slots are live
 
 
 def resolve_k(cfg: SparsifierConfig, j: int) -> int:
@@ -124,10 +133,11 @@ def init_state(cfg: SparsifierConfig, j: int) -> dict:
     dt = jnp.dtype(cfg.ef_dtype)
     z = jnp.zeros((j,), dt)
     if _fused_supported(cfg):
-        # implicit error feedback: err = a_prev * (1 - s_prev)
+        # ONE J-sized state vector: err_prev = a^{t-1} * (1 - s^{t-1}),
+        # maintained by the O(k) scatter-zero that closes each step (no
+        # dense mask exists in the fused layout)
         st = {
-            "a_prev": z,
-            "s_prev": jnp.zeros((j,), jnp.uint8),
+            "err_prev": z,
             "step": jnp.zeros((), jnp.int32),
         }
         if cfg.kind == "dgc":
@@ -343,12 +353,15 @@ def _compress_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     ef_dtype="bfloat16" keeps the J-sized state in bf16 (sweep math is
     fp32 in-register). In comm_mode="sparse" no dense ghat is
     materialized — the packed (values, indices) drive the sparse
-    all-gather and CompressOut.ghat is None. cfg.num_buckets > 1 runs
-    the sweeps per contiguous bucket with a histogram-merge global
-    threshold (DESIGN.md §2.4); selection, packed order, and post-step
-    state stay bit-identical to num_buckets=1.
+    all-gather and CompressOut.ghat is None. The state update is O(k):
+    ops scatter-zeroes the selected slots of ``a`` into the next
+    ``err_prev`` (and masks DGC's momentum the same way), so the step is
+    two O(J) traversals end to end and no dense mask is written
+    (CompressOut.mask is None — use dense_mask() on demand).
+    cfg.num_buckets > 1 runs the sweeps per contiguous bucket with a
+    histogram-merge global threshold (DESIGN.md §2.4); selection, packed
+    order, and post-step state stay bit-identical to num_buckets=1.
     """
-    from repro.core import bigvec
     from repro.kernels.compress import ops as cops
     hist = cfg.selector == "histogram" and cfg.kind != "randk"
     kwargs = {}
@@ -361,32 +374,23 @@ def _compress_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     if cfg.kind == "dgc":
         kwargs["mom"] = state["mom"]
     out = cops.fused_compress_arrays(
-        cfg.kind, g, state["a_prev"], state["s_prev"], state["step"],
+        cfg.kind, g, state["err_prev"], state["step"],
         k=k, omega=omega, mu=cfg.mu, Q=cfg.Q, momentum=cfg.momentum,
         want_ghat=cfg.comm_mode != "sparse", selector=cfg.selector,
-        key=key, num_buckets=cfg.num_buckets, **kwargs)
+        ef_dtype=cfg.ef_dtype, key=key, num_buckets=cfg.num_buckets,
+        **kwargs)
     dt = jnp.dtype(cfg.ef_dtype)
-    new = {"a_prev": out["a"].astype(dt), "s_prev": out["mask8"],
-           "step": state["step"] + 1}
+    new = {"err_prev": out["err"], "step": state["step"] + 1}
     if cfg.kind == "dgc":
-        if hist:
-            # variable-count selection: mask-multiply (fuses into the
-            # sweep-1 stream) instead of an O(k) scatter whose inert
-            # pad slots would alias index 0
-            new["mom"] = (out["mom"] *
-                          (1.0 - out["mask8"].astype(jnp.float32))).astype(dt)
-        else:
-            # momentum masking (mom * (1 - mask)) as an O(k) scatter
-            new["mom"] = bigvec.scatter_set(out["mom"].astype(dt),
-                                            out["indices"], 0.0)
+        new["mom"] = out["mom"]              # selection-masked, ef_dtype
     if cfg.kind == "regtopk":
         new["idx_prev"] = out["indices"]
         new["a_prev_sel"] = out["values"].astype(dt)
         new["g_prev_sel"] = jnp.zeros_like(state["g_prev_sel"])  # observe_aggregate
         if hist:
             new["nsel"] = out["count"]
-    return CompressOut(out["ghat"], out["mask8"], new,
-                       out["values"], out["indices"])
+    return CompressOut(out["ghat"], None, new,
+                       out["values"], out["indices"], out["count"])
 
 
 def observe_aggregate(cfg: SparsifierConfig, state: dict, g_agg: jnp.ndarray) -> dict:
@@ -401,6 +405,28 @@ def observe_aggregate(cfg: SparsifierConfig, state: dict, g_agg: jnp.ndarray) ->
         else:
             state["g_agg_prev"] = g_agg.astype(jnp.dtype(cfg.ef_dtype))
     return state
+
+
+def dense_mask(out: CompressOut, j: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Dense 0/1 selection mask for a CompressOut, in the requested dtype.
+
+    The ONE shared reconstruction both pipelines funnel through: the
+    reference path carries a dense mask (returned cast), the fused path
+    carries none — its mask is derived from the packed indices by an
+    O(k) scatter. Histogram-selector outputs pad their fixed-capacity
+    tail with inert (index 0) slots; ``out.count`` marks the live
+    prefix, and pads are routed to an out-of-range sentinel + dropped
+    (a duplicate write at index 0 would corrupt the mask there).
+    """
+    if out.mask is not None:
+        return out.mask.astype(dtype)
+    from repro.core import bigvec
+    idx = out.indices.astype(jnp.uint32)
+    if out.count is not None:
+        live = jnp.arange(idx.shape[0], dtype=jnp.int32) < out.count
+        idx = bigvec.live_idx(idx, live, j)
+    return bigvec.scatter_set(jnp.zeros((j,), dtype), idx,
+                              jnp.ones(idx.shape, dtype), mode="drop")
 
 
 def dense_ghat(out: CompressOut, j: int) -> jnp.ndarray:

@@ -1,22 +1,26 @@
 """Two-sweep fused compression pipeline (DESIGN.md §2.2).
 
 Executes the entire TOP-k / DGC / REGTOP-k compression step in two
-O(J) sweeps over the flat gradient instead of the ~8 HBM passes plus two
-O(J log k) ``lax.top_k`` sorts the reference path performs:
+O(J) sweeps over the flat gradient — total — instead of the ~8 HBM
+passes plus two O(J log k) ``lax.top_k`` sorts the reference path
+performs:
 
-- **Sweep 1** reads the dense inputs (g, a_prev, s_prev [, mom]) exactly
-  once and emits ``a`` (the error-compensated gradient) and the selection
-  ``score``. Error feedback is *implicit*: ``err = a_prev * (1 - s_prev)``
-  (the EF invariant), so no dense ``err`` vector is ever read or written.
-  The Pallas kernel additionally accumulates the bit-pattern histogram
-  the TPU threshold is derived from, plus per-block amax (a diagnostic
-  witness exercised by the kernel tests; the threshold itself needs no
-  amax, since bit-pattern bins are scale-free).
+- **Sweep 1** reads the dense inputs (g, err_prev [, mom]) exactly once
+  and emits ``a`` (the error-compensated gradient) and the selection
+  ``score``. ``err_prev`` is the ONE J-sized state vector: the previous
+  step's error feedback a^{t-1} * (1 - s^{t-1}), maintained by the O(k)
+  scatter-zero that closes each step — no dense mask or ``a_prev`` copy
+  exists in the state, and no traversal is ever spent writing next-step
+  state. The Pallas kernel additionally accumulates the bit-pattern
+  histogram the TPU threshold is derived from, plus per-block amax (a
+  diagnostic witness exercised by the kernel tests; the threshold
+  itself needs no amax, since bit-pattern bins are scale-free).
 - **Sweep 2** compacts per-block top-candidate (value, index) slots; a
   small O(candidates) trim then selects the exact top-k with
   ``lax.top_k`` tie-break semantics (value desc, index asc). REGTOP-k's
   O(k) posterior corrections (Algorithm 1 line 5) are applied in
-  candidate space, never densely.
+  candidate space, never densely — ``idx_prev`` doubles as the support
+  set for the candidate/support membership test.
 
 Execution strategies (auto-selected from the JAX backend by ``ops``):
 

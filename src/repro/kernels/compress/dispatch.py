@@ -31,7 +31,7 @@ Fused selection contracts per selector:
   which buckets |score|/amax into LINEAR bins — both satisfy the same
   count contract.
 
-``ef_dtype="bfloat16"`` stores the J-sized EF state (``a_prev``, and
+``ef_dtype="bfloat16"`` stores the J-sized EF state (``err_prev``, and
 ``mom`` for DGC) in bf16 with all sweep math in fp32 registers; it
 tracks the fp32 reference within bf16 rounding (DESIGN.md §2.5 states
 the tolerance contract the parity tests pin).

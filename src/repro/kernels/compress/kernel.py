@@ -3,10 +3,13 @@
 Sweep 1 (``sweep1_pallas``): one VMEM-tiled pass over the dense inputs.
 Per (1, BLOCK) grid step it
 
-- reconstructs error feedback in-register (``err = a_prev * (1 - s_prev)``,
-  the EF invariant — no dense err vector exists in the fused state),
-- emits ``a`` and the selection ``score`` (``a * c`` with ``c`` the
-  off-support REGTOP-k regularizer, 1 for plain TOP-k / DGC / step 0),
+- reads the ONE J-sized state vector ``err_prev`` (the previous step's
+  error feedback, already zeroed at the selected support by the O(k)
+  scatter that closes each step — no dense mask exists in the fused
+  state),
+- emits ``a = err_prev + g`` and the selection ``score`` (``a * c`` with
+  ``c`` the off-support REGTOP-k regularizer, 1 for plain TOP-k / DGC /
+  step 0),
 - emits the per-block amax of |score| and accumulates a BINS-bin
   *bit-pattern* histogram of |score| (top bits of the fp32 encoding —
   monotone in magnitude, so no separate amax pass is needed to scale the
@@ -76,10 +79,10 @@ def _sweep1_kernel(c_ref, *refs, mode: str, momentum: float, bins: int):
     # dgc mode threads the momentum buffer; plain mode omits it entirely
     # (no dead O(J) passthrough streams on the non-dgc path)
     if mode == "dgc":
-        (g_ref, a_prev_ref, s_prev_ref, mom_ref,
+        (g_ref, err_ref, mom_ref,
          a_ref, score_ref, mom_out_ref, amax_ref, hist_ref) = refs
     else:
-        (g_ref, a_prev_ref, s_prev_ref,
+        (g_ref, err_ref,
          a_ref, score_ref, amax_ref, hist_ref) = refs
     i = pl.program_id(0)
 
@@ -88,9 +91,7 @@ def _sweep1_kernel(c_ref, *refs, mode: str, momentum: float, bins: int):
         hist_ref[...] = jnp.zeros_like(hist_ref)
 
     g = g_ref[...].astype(jnp.float32)
-    a_prev = a_prev_ref[...].astype(jnp.float32)
-    s_prev = s_prev_ref[...].astype(jnp.float32)
-    err = a_prev * (1.0 - s_prev)              # EF invariant, in-register
+    err = err_ref[...].astype(jnp.float32)     # one state read: err_prev
     if mode == "dgc":
         mom = momentum * mom_ref[...].astype(jnp.float32) + g
         mom_out_ref[...] = mom
@@ -108,11 +109,15 @@ def _sweep1_kernel(c_ref, *refs, mode: str, momentum: float, bins: int):
         0, bidx[0]].add(1)
 
 
-def sweep1_pallas(g, a_prev, s_prev, c, *, mode: str = "plain",
+def sweep1_pallas(g, err_prev, c, *, mode: str = "plain",
                   momentum: float = 0.0, mom=None,
                   bins: int = BINS, interpret: bool = True):
     """All dense inputs (J,) with J % BLOCK == 0 (caller pads).
 
+    ``err_prev`` is the ONE J-sized state vector of the fused layout —
+    the previous step's error feedback, already zero at the selected
+    support (the O(k) scatter-zero that closes each step maintains the
+    EF invariant err = a * (1 - s) without a dense mask).
     ``c`` is the (traced) off-support score factor: the REGTOP-k
     regularizer constant tanh(|1+Q|/mu), or 1 for TOP-k / DGC / step 0.
     Returns (a, score, mom_out, block_amax (rows,), hist (bins,));
@@ -125,14 +130,14 @@ def sweep1_pallas(g, a_prev, s_prev, c, *, mode: str = "plain",
     spec = pl.BlockSpec((1, BLOCK), lambda i: (i, 0))
     dgc = mode == "dgc"
     vec_out = jax.ShapeDtypeStruct((rows, BLOCK), jnp.float32)
-    inputs = [jnp.asarray(c, jnp.float32).reshape(1, 1), rs(g), rs(a_prev),
-              rs(s_prev)] + ([rs(mom)] if dgc else [])
+    inputs = [jnp.asarray(c, jnp.float32).reshape(1, 1), rs(g),
+              rs(err_prev)] + ([rs(mom)] if dgc else [])
     outs = pl.pallas_call(
         functools.partial(_sweep1_kernel, mode=mode,
                           momentum=float(momentum), bins=bins),
         grid=(rows,),
         in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0))]      # factor c
-                 + [spec] * (4 if dgc else 3),
+                 + [spec] * (3 if dgc else 2),
         out_specs=[spec] * (3 if dgc else 2) + [
             pl.BlockSpec((1, 1), lambda i: (i, 0)),        # per-block amax
             pl.BlockSpec((1, bins), lambda i: (0, 0)),     # accumulated hist

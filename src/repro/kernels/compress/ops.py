@@ -5,8 +5,16 @@
     sweep 1:  a, score           (dense inputs read exactly once)
     sweep 2:  candidate slots    (per-row/per-block top candidates)
     O(cand):  exact-k trim, REGTOP-k posterior corrections, exactness
-              checks, fixed-k (values, indices), uint8 mask, optional
-              dense ghat
+              checks, fixed-k (values, indices), optional dense ghat,
+              and the O(k) scatter-zero that writes the next step's
+              err state in place (DESIGN.md §2.2)
+
+The step is **two O(J) traversals end to end** on the sparse-comm path:
+the only J-sized state is ``err_prev`` (= a^{t-1} * (1 - s^{t-1}),
+maintained by zeroing the k selected slots of ``a`` after the trim), so
+no dense mask is ever written and sweep 1 reads exactly one state
+vector. Dense masks, when a caller needs one, are reconstructed from
+the packed indices (``core.sparsify.dense_mask``, O(k)).
 
 With ``num_buckets > 1`` (DESIGN.md §2.4) the flat gradient is
 partitioned into contiguous buckets (core.flatten.bucket_bounds); both
@@ -66,19 +74,25 @@ def sweep_plan(pipeline: str, comm_mode: str = "sparse") -> dict:
         # (a, score) + step-0 where pass + two full |score| sorts + mask
         # scatter + ghat/err pass: ~8 traversals, 2 O(J log k) sorts.
         return {"o_j_passes": 8, "full_sorts": 2}
-    passes = 3 if comm_mode == "sparse" else 4   # +1: dense ghat write
+    # fused: sweep 1 (one elementwise stream) + sweep 2 (candidate
+    # compaction). State updates (err scatter-zero, mom masking, packed
+    # pairs, mask reconstruction) are all O(k) — no third traversal.
+    passes = 2 if comm_mode == "sparse" else 3   # +1: dense ghat write
     return {"o_j_passes": passes, "full_sorts": 0}
 
 
-def _posterior_keys(a, idx_prev, a_prev_sel, g_prev_sel, step, *,
+def _posterior_keys(a_sel, a_prev_sel, g_prev_sel, step, *,
                     omega, mu, support_valid=None):
     """|score| of the support entries (Algorithm 1 line 5, O(k)).
 
-    ``support_valid`` masks inert pad slots of the histogram selector's
-    fixed-capacity support state (slots >= nsel_prev point at index 0
-    and must not contribute a corrected key)."""
-    from repro.core import bigvec
-    a_sel = bigvec.gather(a, idx_prev)
+    ``a_sel`` is the error-compensated gradient AT the support indices.
+    The production call site gathers it from the dense ``a`` buffer
+    BEFORE the trim's lax.cond (a pre-cond read keeps the final err
+    scatter-zero in-place); the fallback branch recomputes it from the
+    function parameters (``_gather_inputs``). ``support_valid`` masks
+    inert pad slots of the histogram selector's fixed-capacity support
+    state (slots >= nsel_prev point at index 0 and must not contribute
+    a corrected key)."""
     safe = safe_denom(omega * a_sel)
     delta_sel = (g_prev_sel - omega * a_prev_sel) / safe
     skey = jnp.abs(a_sel * jnp.tanh(jnp.abs(1.0 + delta_sel) / mu))
@@ -88,9 +102,8 @@ def _posterior_keys(a, idx_prev, a_prev_sel, g_prev_sel, step, *,
     return skey
 
 
-def _sweep1_xla(kind, g, a_prev, s_prev8, c, *, momentum, mom):
-    s = s_prev8.astype(jnp.float32)
-    err = a_prev.astype(jnp.float32) * (1.0 - s)     # EF invariant
+def _sweep1_xla(kind, g, err_prev, c, *, momentum, mom):
+    err = err_prev.astype(jnp.float32)               # ONE state read
     g = g.astype(jnp.float32)
     mom_out = mom
     if kind == "dgc":
@@ -101,7 +114,7 @@ def _sweep1_xla(kind, g, a_prev, s_prev8, c, *, momentum, mom):
     return a, a * c, mom_out
 
 
-def _candidates_pallas(kind, g, a_prev, s_prev8, c, step, *, k: int,
+def _candidates_pallas(kind, g, err_prev, c, step, *, k: int,
                        regtopk: bool, momentum: float, mom, interpret: bool,
                        bounds):
     """Per-bucket Pallas sweeps + histogram-merge global threshold.
@@ -120,7 +133,7 @@ def _candidates_pallas(kind, g, a_prev, s_prev8, c, step, *, k: int,
         pad = lambda x: jnp.pad(
             x[off:off + size].astype(jnp.float32), (0, j_pad - size))
         a_p, score_p, mom_p, _amax, hist = pk.sweep1_pallas(
-            pad(g), pad(a_prev), pad(s_prev8), c,
+            pad(g), pad(err_prev), c,
             mode=("dgc" if dgc else "plain"), momentum=momentum,
             mom=None if mom is None else pad(mom), interpret=interpret)
         # padding contributed (j_pad - size) zero keys to bin 0
@@ -159,7 +172,7 @@ def _candidates_pallas(kind, g, a_prev, s_prev8, c, step, *, k: int,
     return a, mom_out, cand_k, cand_i, producer_ok
 
 
-def _candidates_xla(kind, g, a_prev, s_prev8, c, *, k: int, momentum: float,
+def _candidates_xla(kind, g, err_prev, c, *, k: int, momentum: float,
                     mom, bounds):
     """Per-bucket XLA candidate compaction.
 
@@ -172,7 +185,7 @@ def _candidates_xla(kind, g, a_prev, s_prev8, c, *, k: int, momentum: float,
     preserving the flat path's tie-break semantics bit-for-bit.
     """
     j = g.shape[0]
-    a, score, mom_out = _sweep1_xla(kind, g, a_prev, s_prev8, c,
+    a, score, mom_out = _sweep1_xla(kind, g, err_prev, c,
                                     momentum=momentum, mom=mom)
     if kind != "dgc":
         mom_out = None
@@ -193,54 +206,63 @@ def _candidates_xla(kind, g, a_prev, s_prev8, c, *, k: int, momentum: float,
     return a, mom_out, cand_k, cand_i, witnesses
 
 
-def _fused_randk(g, a_prev, s_prev8, *, k: int, key, want_ghat: bool) -> dict:
+def _fused_randk(g, err_prev, *, k: int, key, want_ghat: bool,
+                 ef_dtype) -> dict:
     """Fused RANDOM-k: selection is score-free, so the whole step is ONE
-    elementwise sweep (implicit-EF ``a``) plus O(k) random gathers — no
-    sweep 2, no histogram, no trim. The elementwise form is optimal on
-    every backend (XLA fuses it; a Pallas grid would add nothing), so
-    all strategies share it. Index stream is identical to the reference
-    randk's (both call select.randk_indices on the same key)."""
+    elementwise sweep (the err_prev + g stream) plus O(k) random gathers
+    and the O(k) scatter-zero state write — no sweep 2, no histogram, no
+    trim. The elementwise form is optimal on every backend (XLA fuses
+    it; a Pallas grid would add nothing), so all strategies share it.
+    Index stream is identical to the reference randk's (both call
+    select.randk_indices on the same key)."""
     from repro.core import bigvec
     from repro.core.select import randk_indices
     assert key is not None, "randk needs a PRNG key"
     j = g.shape[0]
-    a, _, _ = _sweep1_xla("randk", g, a_prev, s_prev8, jnp.float32(1.0),
+    a, _, _ = _sweep1_xla("randk", g, err_prev, jnp.float32(1.0),
                           momentum=0.0, mom=None)
     idx = randk_indices(key, j, k)
+    # gather before the scatter-zero: a's buffer is read-complete when
+    # the O(k) state write runs, so it updates in place
     values = bigvec.gather(a, idx)
-    mask8 = bigvec.mask_from_indices(j, idx, jnp.uint8)
+    err = bigvec.scatter_set(a.astype(jnp.dtype(ef_dtype)), idx, 0.0)
     ghat = None
     if want_ghat:
         ghat = bigvec.scatter_set(jnp.zeros((j,), jnp.float32), idx, values)
-    return {"a": a, "mask8": mask8, "values": values, "indices": idx,
+    return {"err": err, "values": values, "indices": idx,
             "ghat": ghat, "mom": None, "count": jnp.asarray(k, jnp.int32),
             "tau": None}
 
 
-def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
+def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
                           omega=1.0, mu: float = 0.1, Q: float = 0.0,
                           momentum: float = 0.9, mom=None,
                           idx_prev=None, a_prev_sel=None, g_prev_sel=None,
                           nsel_prev=None, want_ghat: bool = True,
                           strategy: Optional[str] = None,
                           num_buckets: int = 1, selector: str = "exact",
-                          key=None) -> dict:
+                          ef_dtype="float32", key=None) -> dict:
     """One fused compression step. kind in {"topk", "dgc", "regtopk",
     "randk", "thresholdk"} (thresholdk shares the plain-score path with
     topk; randk needs ``key`` and ignores ``selector``).
 
-    Inputs: g (J,) raw gradient; a_prev (J,) previous error-compensated
-    gradient (fp32 or bf16 — sweep math is always fp32 in-register);
-    s_prev8 (J,) uint8 previous selection mask; step () int32. REGTOP-k
-    additionally takes the O(k) posterior (idx_prev uint32, a_prev_sel,
-    g_prev_sel; with selector="histogram" these are hist_capacity-sized
-    and ``nsel_prev`` marks how many leading slots are live). DGC takes
-    the momentum buffer ``mom``. ``num_buckets`` partitions the sweeps
-    into contiguous buckets (DESIGN.md §2.4); selection semantics are
-    bucketing-invariant.
+    Inputs: g (J,) raw gradient; err_prev (J,) the ONE J-sized state
+    vector — the previous step's error feedback a^{t-1} * (1 - s^{t-1})
+    (fp32 or bf16 per ``ef_dtype``; sweep math is always fp32
+    in-register); step () int32. REGTOP-k additionally takes the O(k)
+    posterior (idx_prev uint32, a_prev_sel, g_prev_sel; with
+    selector="histogram" these are hist_capacity-sized and ``nsel_prev``
+    marks how many leading slots are live) — the posterior's idx_prev
+    doubles as the support set, so no dense mask exists anywhere in the
+    state. DGC takes the momentum buffer ``mom``. ``num_buckets``
+    partitions the sweeps into contiguous buckets (DESIGN.md §2.4);
+    selection semantics are bucketing-invariant.
 
-    Returns {"a", "mask8", "values", "indices", "count", "tau", "ghat"
-    (None unless want_ghat), "mom" (dgc only)}.
+    Returns {"err", "values", "indices", "count", "tau", "ghat" (None
+    unless want_ghat), "mom" (dgc only: the selection-masked momentum)}.
+    ``err`` is the NEXT step's state — ``a`` with the selected slots
+    zeroed by an O(k) scatter (bit-identical to the reference's
+    a - mask*a), stored in ``ef_dtype``.
 
     - selector="exact": values/indices are the fixed-k packed pairs
       ordered by |score| descending; selected support is bit-identical
@@ -258,8 +280,8 @@ def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
     j = g.shape[0]
     k = int(min(k, j))
     if kind == "randk":
-        return _fused_randk(g, a_prev, s_prev8, k=k, key=key,
-                            want_ghat=want_ghat)
+        return _fused_randk(g, err_prev, k=k, key=key,
+                            want_ghat=want_ghat, ef_dtype=ef_dtype)
     hist = selector == "histogram"
     # static packed capacity; also the candidate-provisioning budget —
     # for exact selection kcap == k and everything below degenerates to
@@ -276,28 +298,53 @@ def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
     if strategy in ("pallas", "pallas_interpret"):
         interpret = strategy == "pallas_interpret" or auto_interpret()
         a, mom_out, cand_k, cand_i, producer_ok = _candidates_pallas(
-            kind, g, a_prev, s_prev8, c, step, k=kcap, regtopk=regtopk,
+            kind, g, err_prev, c, step, k=kcap, regtopk=regtopk,
             momentum=momentum, mom=mom, interpret=interpret, bounds=bounds)
         witnesses = None
     else:
         a, mom_out, cand_k, cand_i, witnesses = _candidates_xla(
-            kind, g, a_prev, s_prev8, c, k=kcap, momentum=momentum, mom=mom,
+            kind, g, err_prev, c, k=kcap, momentum=momentum, mom=mom,
             bounds=bounds)
         producer_ok = None                   # needs tau; checked below
 
     # --- O(candidates) fixed-capacity trim ------------------------------
+    def _gather_inputs(idx):
+        """a[idx] recomputed from the step's INPUT arrays (bitwise
+        identical: per-element adds commute with the gather). Used only
+        inside the lax.cond fallback branch, whose operands are already
+        the function parameters — gathering from the dense ``a`` there
+        would extend a's liveness past the cond and force the err
+        scatter-zero to copy the whole buffer."""
+        gi = bigvec.gather(g, idx).astype(jnp.float32)
+        ei = bigvec.gather(err_prev, idx).astype(jnp.float32)
+        if kind == "dgc":
+            return ei + (momentum * bigvec.gather(mom, idx).astype(
+                jnp.float32) + gi)
+        return ei + gi
+
     support_valid = None
     if regtopk:
         if nsel_prev is not None:
             support_valid = (jnp.arange(idx_prev.shape[0], dtype=jnp.int32)
                              < nsel_prev)
-        skey = _posterior_keys(a, idx_prev, a_prev_sel, g_prev_sel, step,
-                               omega=omega, mu=mu,
+        skey = _posterior_keys(bigvec.gather(a, idx_prev), a_prev_sel,
+                               g_prev_sel, step, omega=omega, mu=mu,
                                support_valid=support_valid)
         # candidates that are support members carry an uncorrected key:
-        # disable them (the corrected copy is appended below)
-        ci_safe = jnp.minimum(cand_i, jnp.uint32(j - 1))
-        hit = (bigvec.gather(s_prev8, ci_safe) > 0) & (step > 0)
+        # disable them (the corrected copy is appended below). With no
+        # dense mask in the state, membership is resolved against the
+        # O(k) posterior support itself — sort + searchsorted in
+        # candidate space, O((k + cand) log k), no O(J) array touched.
+        if support_valid is not None:
+            # inert pad slots alias index 0: exclude them via the
+            # out-of-range sentinel before the sort (bigvec.live_idx)
+            idx_live = bigvec.live_idx(idx_prev, support_valid, j)
+        else:
+            idx_live = idx_prev.astype(jnp.uint32)
+        idx_sorted = jnp.sort(idx_live)
+        pos = jnp.minimum(jnp.searchsorted(idx_sorted, cand_i),
+                          idx_sorted.shape[0] - 1)
+        hit = (idx_sorted[pos] == cand_i) & (step > 0)
         cand_k = jnp.where(hit, -jnp.inf, cand_k)
         allk = jnp.concatenate([cand_k, skey])
         alli = jnp.concatenate([cand_i, idx_prev.astype(jnp.uint32)])
@@ -306,6 +353,14 @@ def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
 
     tv, tsel = jax.lax.top_k(allk, kcap)
     idx_fast = alli[tsel]
+    # signed a-values of every trim entry, gathered from the dense ``a``
+    # BEFORE the cond: every read of a's buffer stays ahead of the final
+    # err scatter-zero, which can then update it in place (a post-cond
+    # gather would extend a's liveness and cost a defensive O(J) copy).
+    # Clamp: Pallas INVALID_IDX slots carry -inf keys and are never
+    # selected on the fast path.
+    allv = bigvec.gather(a, jnp.minimum(alli, jnp.uint32(j - 1)))
+    val_fast = allv[tsel]
     kth = tv[k - 1]
     valid = kth > -jnp.inf
     # histogram tau: bit-pattern bin lower edge of the k-th key. The
@@ -339,7 +394,7 @@ def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
         # *function parameters* rather than capturing the intermediate
         # `a` — XLA CPU copies non-parameter conditional operands, which
         # would tax the fast path with an O(J) copy
-        a2, score2, _ = _sweep1_xla(kind, g, a_prev, s_prev8, c,
+        a2, score2, _ = _sweep1_xla(kind, g, err_prev, c,
                                     momentum=momentum, mom=mom)
         keys_d = jnp.abs(score2)
         if regtopk:
@@ -347,11 +402,9 @@ def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
             live = step > 0
             if support_valid is not None:
                 live = live & support_valid
-                # inert pad slots alias index 0: write via the
-                # out-of-range sentinel + drop instead (a duplicate
-                # scatter of a DIFFERENT value at index 0 would be
-                # order-undefined)
-                idx_w = jnp.where(support_valid, idx_prev, jnp.uint32(j))
+                # inert pad slots alias index 0: sentinel + drop
+                # (bigvec.live_idx docstring)
+                idx_w = bigvec.live_idx(idx_prev, support_valid, j)
             else:
                 idx_w = idx_prev
             fix = jnp.where(live, skey, base)
@@ -360,7 +413,7 @@ def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
 
     if hist:
         def _fast(_):
-            return idx_fast, tv >= tau, tau
+            return idx_fast, val_fast, tv >= tau, tau
 
         def _fallback(_):
             keys_d = _fallback_keys()
@@ -368,41 +421,50 @@ def fused_compress_arrays(kind: str, g, a_prev, s_prev8, step, *, k: int,
             idx_d = select.topk_indices(keys_d, kcap)
             tvd = bigvec.gather(keys_d, idx_d)
             tau_d = pk.key_bin_edge(tvd[k - 1])
-            return idx_d, tvd >= tau_d, tau_d
+            return idx_d, _gather_inputs(idx_d), tvd >= tau_d, tau_d
 
-        idx_k, valid_sel, tau = jax.lax.cond(ok, _fast, _fallback,
-                                             operand=None)
-        values = jnp.where(valid_sel,
-                           bigvec.gather(a, jnp.minimum(idx_k,
-                                                        jnp.uint32(j - 1))),
-                           0.0)
+        idx_k, vraw, valid_sel, tau = jax.lax.cond(ok, _fast, _fallback,
+                                                   operand=None)
+        values = jnp.where(valid_sel, vraw, 0.0)
         idx_k = jnp.where(valid_sel, idx_k, 0).astype(jnp.uint32)
         count = jnp.sum(valid_sel.astype(jnp.int32))
-        # inert pads: scatter-ADD so a pad's (0, 0.0) never clobbers a
-        # live selection at index 0
-        mask8 = bigvec.scatter_add(jnp.zeros((j,), jnp.uint8), idx_k,
-                                   valid_sel.astype(jnp.uint8))
+        # inert pad slots must never zero a live entry's error feedback:
+        # sentinel + drop for the O(k) state scatters (bigvec.live_idx)
+        idx_w = bigvec.live_idx(idx_k, valid_sel, j)
         ghat = None
         if want_ghat:
+            # scatter-ADD: a pad's (0, 0.0) never clobbers index 0
             ghat = bigvec.scatter_add(jnp.zeros((j,), jnp.float32),
                                       idx_k, values)
     else:
         def _fast(_):
-            return idx_fast
+            return idx_fast, val_fast
 
         def _fallback(_):
             from repro.core import select
-            return select.topk_indices(_fallback_keys(), k)
+            idx_d = select.topk_indices(_fallback_keys(), k)
+            return idx_d, _gather_inputs(idx_d)
 
-        idx_k = jax.lax.cond(ok, _fast, _fallback, operand=None)
-        values = bigvec.gather(a, idx_k)
+        idx_k, values = jax.lax.cond(ok, _fast, _fallback, operand=None)
         count = jnp.asarray(k, jnp.int32)
         tau = None
-        mask8 = bigvec.mask_from_indices(j, idx_k, jnp.uint8)
+        idx_w = idx_k                        # exact: all k slots live
         ghat = None
         if want_ghat:
             ghat = bigvec.scatter_set(jnp.zeros((j,), jnp.float32),
                                       idx_k, values)
-    return {"a": a, "mask8": mask8, "values": values,
+    # --- O(k) state writes ---------------------------------------------
+    # err^{t+1} = a * (1 - s): zero the selected slots of a in place —
+    # the ONLY J-sized state, written by an O(k) scatter (the third
+    # O(J) traversal of the old (a_prev, s_prev) layout is gone). The
+    # ef_dtype cast happens BEFORE the scatter so bf16 state fuses into
+    # the sweep-1 stream instead of adding a post-scatter convert pass.
+    dt = jnp.dtype(ef_dtype)
+    err = bigvec.scatter_set(a.astype(dt), idx_w, 0.0, mode="drop")
+    if kind == "dgc":
+        # momentum masking mom * (1 - s), same O(k) scatter-zero
+        mom_out = bigvec.scatter_set(mom_out.astype(dt), idx_w, 0.0,
+                                     mode="drop")
+    return {"err": err, "values": values,
             "indices": idx_k.astype(jnp.uint32), "ghat": ghat,
             "mom": mom_out, "count": count, "tau": tau}

@@ -4,7 +4,8 @@ Mirrors ``core.sparsify.compress`` (pipeline="reference",
 selector="exact") on the *fused* state layout, so kernel/ops tests can
 check parity without round-tripping through the dense state dict:
 
-    a     = a_prev * (1 - s_prev) + g            (EF invariant)
+    a     = err_prev + g       (err_prev = a^{t-1} * (1 - s^{t-1}),
+                                maintained by the O(k) scatter-zero)
     score = a * tanh(|1 + Delta| / mu),  Delta from the O(k) posterior
     top-k by |score| with lax.top_k tie-break (value desc, index asc)
 """
@@ -16,13 +17,17 @@ import jax.numpy as jnp
 from repro.core.numerics import safe_denom
 
 
-def dense_scores_ref(g, a_prev, s_prev, step, *, kind: str, omega: float = 1.0,
+def dense_scores_ref(g, err_prev, step, *, kind: str, omega: float = 1.0,
                      mu: float = 0.1, Q: float = 0.0, momentum: float = 0.9,
                      mom=None, idx_prev=None, a_prev_sel=None,
-                     g_prev_sel=None):
-    """(a, score, mom_out) for the fused state layout, dense math."""
-    s = s_prev.astype(jnp.float32)
-    err = a_prev.astype(jnp.float32) * (1.0 - s)
+                     g_prev_sel=None, nsel=None):
+    """(a, score, mom_out) for the fused state layout, dense math.
+
+    The previous support is densified from ``idx_prev`` (the O(k)
+    posterior already carries it; ``nsel`` marks the live-slot count of
+    the histogram selector's fixed-capacity layout — pad slots alias
+    index 0 and must not densify as support members)."""
+    err = err_prev.astype(jnp.float32)
     g = g.astype(jnp.float32)
     mom_out = mom
     if kind == "dgc":
@@ -34,10 +39,16 @@ def dense_scores_ref(g, a_prev, s_prev, step, *, kind: str, omega: float = 1.0,
         return a, a, mom_out
     j = a.shape[0]
     # densify the O(k) posterior (oracle only; the pipeline never does)
-    a_prev_d = jnp.zeros((j,), jnp.float32).at[idx_prev.astype(jnp.int32)].set(
-        a_prev_sel.astype(jnp.float32))
-    g_agg_d = jnp.zeros((j,), jnp.float32).at[idx_prev.astype(jnp.int32)].set(
-        g_prev_sel.astype(jnp.float32))
+    idx_w = idx_prev.astype(jnp.int32)
+    if nsel is not None:
+        from repro.core.bigvec import live_idx
+        live = jnp.arange(idx_w.shape[0], dtype=jnp.int32) < nsel
+        idx_w = live_idx(idx_w, live, j).astype(jnp.int32)  # pads dropped
+    s = jnp.zeros((j,), jnp.float32).at[idx_w].set(1.0, mode="drop")
+    a_prev_d = jnp.zeros((j,), jnp.float32).at[idx_w].set(
+        a_prev_sel.astype(jnp.float32), mode="drop")
+    g_agg_d = jnp.zeros((j,), jnp.float32).at[idx_w].set(
+        g_prev_sel.astype(jnp.float32), mode="drop")
     safe = safe_denom(omega * a)
     delta = s * ((g_agg_d - omega * a_prev_d) / safe) + Q * (1.0 - s)
     score = a * jnp.tanh(jnp.abs(1.0 + delta) / mu)

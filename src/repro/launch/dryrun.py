@@ -178,7 +178,7 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
                sparsity=0.001, comm="sparse", verbose=True,
                variant="", state_format="dense", ef_dtype="float32",
                pipeline="reference", num_buckets=1, selector="exact",
-               **cfg_overrides) -> dict:
+               wire_dtype="float32", **cfg_overrides) -> dict:
     shape = SHAPES[shape_name]
     cfg = get_config(arch)
     moe_over = {k[4:]: v for k, v in cfg_overrides.items()
@@ -199,20 +199,28 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
                                     comm_mode=comm, selector=selector,
                                     mu=0.5, state_format=state_format,
                                     ef_dtype=ef_dtype, pipeline=pipeline,
-                                    num_buckets=num_buckets),
+                                    num_buckets=num_buckets,
+                                    wire_dtype=wire_dtype),
         optimizer=OptimizerConfig(kind="adam", lr=1e-4),
         attn_override=attn_override,
     )
     kind = shape.kind
     num_buckets_resolved = num_buckets
-    if num_buckets == 0 and kind == "train":
-        # the trace resolves inside sync_gradient; the shared helper
-        # mirrors it exactly (same flattened per-rank J, same dp extent)
-        # so the record — which the roofline's collective_exposed_s
-        # consumes — carries the chunk count the compiled program
-        # actually executes
+    gather_wire = None
+    if kind == "train":
+        # the trace resolves num_buckets inside sync_gradient; the shared
+        # helper mirrors it exactly (same flattened per-rank J, same dp
+        # extent) so the record — which the roofline's
+        # collective_exposed_s consumes — carries the chunk count the
+        # compiled program actually executes. The same (j_local, dp)
+        # yields the dtype-aware sparse-gather payload
+        # (aggregate.sparse_gather_wire_bytes, None off the sparse path).
+        from repro.core.aggregate import sparse_gather_wire_bytes
         from repro.train.step import auto_num_buckets_for_run
-        num_buckets_resolved, _, _ = auto_num_buckets_for_run(run, mesh)
+        nb_auto, j_local, dp = auto_num_buckets_for_run(run, mesh)
+        if num_buckets == 0:
+            num_buckets_resolved = nb_auto
+        gather_wire = sparse_gather_wire_bytes(run.sparsifier, j_local, dp)
     t0 = time.time()
     step, abs_args, pal = build_step(run, mesh, kind)
     with mesh:
@@ -250,6 +258,7 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
         "hlo_collective_wire_bytes": parsed["collective_wire_bytes"],
         "unknown_trip_loops": parsed["unknown_trip_loops"],
         "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "wire_dtype": wire_dtype,
         "memory": {
             k: int(getattr(mem, k, -1)) for k in
             ("temp_size_in_bytes", "argument_size_in_bytes",
@@ -257,6 +266,8 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
              "alias_size_in_bytes", "peak_memory_in_bytes")
         },
     }
+    if gather_wire is not None:
+        rec["sparse_gather_wire_bytes"] = int(gather_wire)
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} mesh={rec['mesh']}: "
               f"lower {t_lower:.0f}s compile {t_compile:.0f}s", flush=True)
@@ -291,6 +302,12 @@ def main():
                          "the resolved value)")
     ap.add_argument("--selector", default="exact",
                     choices=["exact", "histogram"])
+    ap.add_argument("--wire-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="wire dtype of the packed VALUES in "
+                         "comm_mode='sparse' (indices stay uint32); "
+                         "bfloat16 cuts sparse wire bytes 25%% and the "
+                         "record's sparse_gather_wire_bytes reflects it")
     ap.add_argument("--out", default="")
     ap.add_argument("--variant", default="", help="perf-variant tag for the record")
     ap.add_argument("--state-format", default="dense")
@@ -330,7 +347,7 @@ def main():
                     variant=args.variant, state_format=args.state_format,
                     ef_dtype=args.ef_dtype, pipeline=args.pipeline,
                     num_buckets=args.num_buckets, selector=args.selector,
-                    **overrides))
+                    wire_dtype=args.wire_dtype, **overrides))
             except Exception as e:  # noqa: BLE001 — report every combo
                 import traceback
                 traceback.print_exc()

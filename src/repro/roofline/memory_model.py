@@ -2,6 +2,15 @@
 16 GB of v5e HBM?"). Derived from our sharding rules — exact for parameter /
 state / cache residency; activations use the remat working-set estimate.
 
+Beyond the resident breakdown, the model surfaces the PEAK HBM per train
+step: the compress stage's transient working buffers (the fused sweeps'
+``a``/``score`` streams, or the reference path's longer dense chain) live
+simultaneously with the resident state, and — when the EF state buffers
+are NOT donated into the jitted step (``jax.jit(..., donate_argnums)``,
+as launch/train.py does) — every step transiently double-buffers the
+J-sized state vectors it rewrites. ``MemoryBreakdown.peak`` accounts for
+both; ``fits_hbm`` gates on it.
+
 XLA's CompiledMemoryStats on the CPU backend aggregates buffers in a
 backend-dependent way (see EXPERIMENTS.md §4 note), so the fits-check uses
 this model; the raw XLA numbers are recorded alongside in the dry-run JSON.
@@ -23,11 +32,25 @@ class MemoryBreakdown:
     ef: float
     cache: float
     activations: float
+    # transient compress working set (fused: the a/score fp32 streams;
+    # reference: its longer dense score/mask/ghat chain). Zero outside
+    # train steps.
+    compress_transient: float = 0.0
+    # extra J-sized state copies alive while the step rewrites err/mom
+    # buffers that were NOT donated in place (0 when donated)
+    state_double_buffer: float = 0.0
 
     @property
     def total(self):
+        """Resident bytes (state + activation working set)."""
         return (self.params + self.grads + self.opt + self.ef + self.cache +
                 self.activations)
+
+    @property
+    def peak(self):
+        """Peak per-step bytes: resident + compress transients + any
+        undonated state double-buffering."""
+        return self.total + self.compress_transient + self.state_double_buffer
 
 
 def _dtype_bytes(dt: str) -> int:
@@ -35,7 +58,14 @@ def _dtype_bytes(dt: str) -> int:
 
 
 def per_device_memory(run: RunConfig, *, tp=16, dp=16, kind="train",
-                      state_format=None, ef_dtype=None) -> MemoryBreakdown:
+                      state_format=None, ef_dtype=None,
+                      donate_ef: bool = True) -> MemoryBreakdown:
+    """``donate_ef=False`` models a caller that does NOT donate the EF
+    state buffers into the jitted step: the J-sized vectors the step
+    rewrites (err_prev, DGC's mom, the reference layouts' err/a_prev/
+    s_prev) are then transiently double-buffered
+    (MemoryBreakdown.state_double_buffer). launch/train.py donates
+    (params, opt, ef), so the default matches production."""
     cfg = run.model
     sp = run.sparsifier
     state_format = state_format or sp.state_format
@@ -71,16 +101,36 @@ def per_device_memory(run: RunConfig, *, tp=16, dp=16, kind="train",
     opt = 3 * (j_local / dp) * 4           # ZeRO-1 master+m+v fp32
     efb = _dtype_bytes(ef_dtype)
     k = resolve_k(sp, int(j_local))
-    if sp.kind == "regtopk" and state_format == "dense":
+    # the capability table (kernels.compress.dispatch) decides which
+    # layout a config actually runs — never re-derive it here
+    from repro.kernels.compress.dispatch import dispatch as _dispatch
+    fused = _dispatch(sp).path == "fused"
+    if fused:
+        # two-traversal layout (DESIGN.md §2.2): ONE J-sized vector
+        # (err_prev; + mom for DGC) + REGTOP-k's O(k) posterior — no
+        # dense mask, no a_prev copy
+        ef = j_local * efb * (2 if sp.kind == "dgc" else 1)
+        if sp.kind == "regtopk":
+            ef += k * (4 + 2 * efb)        # idx u32 + a_sel/g_sel
+    elif sp.kind == "regtopk" and state_format == "dense":
         ef = (1 * j_local + 3 * j_local) * efb     # err + a_prev+s_prev+g_prev
     elif sp.kind == "regtopk":
         ef = j_local * efb + 3 * k * 4
-    elif sp.kind in ("topk", "thresholdk", "sketchtopk"):
+    elif sp.kind in ("topk", "thresholdk", "sketchtopk", "randk"):
         ef = j_local * efb
     elif sp.kind == "dgc":
         ef = 2 * j_local * efb
     else:
         ef = 0.0
+    # compress transients: the fused sweeps stream two fp32 J-vectors
+    # (a, score); the reference chain holds ~4 (a, score, mask, ghat)
+    if sp.kind in ("none", "globaltopk"):
+        compress_transient = 0.0
+    elif fused:
+        compress_transient = 2 * j_local * 4
+    else:
+        compress_transient = 4 * j_local * 4
+    state_double_buffer = 0.0 if donate_ef else ef
     # activations: remat keeps one super-block working set + layer inputs
     b_local = shape.global_batch // dp
     seq_local = shape.seq_len // tp        # SP-sharded residual stream
@@ -89,9 +139,12 @@ def per_device_memory(run: RunConfig, *, tp=16, dp=16, kind="train",
     resid = b_local * shape.seq_len * cfg.d_model * pb  # gathered, transient
     saved = nsb * b_local * seq_local * cfg.d_model * pb * superblock_period(cfg)
     activations = saved + 4 * resid
-    return MemoryBreakdown(params, grads, opt, ef, 0.0, activations)
+    return MemoryBreakdown(params, grads, opt, ef, 0.0, activations,
+                           compress_transient, state_double_buffer)
 
 
 def fits_hbm(run: RunConfig, hbm_bytes=16e9, **kw) -> tuple:
+    """Gates on the PEAK per-step bytes (resident + compress transients
+    + any undonated state double-buffer), not just residency."""
     mb = per_device_memory(run, **kw)
-    return mb.total <= hbm_bytes, mb
+    return mb.peak <= hbm_bytes, mb

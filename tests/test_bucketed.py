@@ -55,8 +55,9 @@ def _roundtrip_vs_flat(kind, nb, j, steps=4, seed=0, omega=0.25, gfn=None):
                                       np.asarray(ob.indices), err_msg=ctx)
         np.testing.assert_array_equal(np.asarray(o1.values),
                                       np.asarray(ob.values), err_msg=ctx)
-        np.testing.assert_array_equal(np.asarray(o1.mask),
-                                      np.asarray(ob.mask), err_msg=ctx)
+        np.testing.assert_array_equal(np.asarray(sparsify.dense_mask(o1, j)),
+                                      np.asarray(sparsify.dense_mask(ob, j)),
+                                      err_msg=ctx)
         agg = omega * sparsify.dense_ghat(o1, j)
         s1 = sparsify.observe_aggregate(cfg1, o1.state, agg)
         sb = sparsify.observe_aggregate(cfgb, ob.state, agg)
@@ -154,8 +155,7 @@ class TestPallasBucketed:
         if kind == "regtopk":
             kw = dict(idx_prev=jnp.zeros((k,), jnp.uint32),
                       a_prev_sel=jnp.zeros((k,)), g_prev_sel=jnp.zeros((k,)))
-        a_prev = {1: jnp.zeros((j,)), nb: jnp.zeros((j,))}
-        s8 = {1: jnp.zeros((j,), jnp.uint8), nb: jnp.zeros((j,), jnp.uint8)}
+        err_prev = {1: jnp.zeros((j,)), nb: jnp.zeros((j,))}
         step = jnp.zeros((), jnp.int32)
         kws = {1: dict(kw), nb: dict(kw)}
         for t in range(3):
@@ -163,15 +163,15 @@ class TestPallasBucketed:
             outs = {}
             for b in (1, nb):
                 outs[b] = cops.fused_compress_arrays(
-                    kind, g, a_prev[b], s8[b], step, k=k, omega=0.25,
+                    kind, g, err_prev[b], step, k=k, omega=0.25,
                     mu=0.5, Q=0.0, want_ghat=True,
                     strategy="pallas_interpret", num_buckets=b, **kws[b])
-            for f in ("a", "mask8", "values", "indices", "ghat"):
+            for f in ("err", "values", "indices", "ghat"):
                 np.testing.assert_array_equal(
                     np.asarray(outs[1][f]), np.asarray(outs[nb][f]),
                     err_msg=f"kind={kind} nb={nb} t={t} field={f}")
             for b in (1, nb):
-                a_prev[b], s8[b] = outs[b]["a"], outs[b]["mask8"]
+                err_prev[b] = outs[b]["err"]
                 if kind == "regtopk":
                     agg = 0.25 * outs[b]["ghat"]
                     kws[b] = dict(
@@ -209,7 +209,7 @@ class TestPallasBucketed:
             j_pad = -(-size // ck.BLOCK) * ck.BLOCK
             pad = lambda x: jnp.pad(x[off:off + size], (0, j_pad - size))
             _a, _s, _m, _amax, hist = ck.sweep1_pallas(
-                pad(g), pad(jnp.zeros((j,))), pad(jnp.zeros((j,))), 1.0,
+                pad(g), pad(jnp.zeros((j,))), 1.0,
                 mode="plain", interpret=True)
             hists.append(hist.at[0].add(-(j_pad - size)))
         merged = np.asarray(ck.merge_bucket_hists(hists))
@@ -222,7 +222,8 @@ class TestPallasBucketed:
 class TestBucketedSweepCount:
     """The bucketed path must stay within the fused pipeline's O(J)
     traversal budget: num_buckets partial sweeps are ONE J-equivalent,
-    not num_buckets traversals (audit weights by size, DESIGN.md §2.3)."""
+    not num_buckets traversals (audit weights by size, DESIGN.md §2.3)
+    — and their partial WRITES must sum the same way."""
 
     @staticmethod
     def _audit(nb, comm_mode="sparse", j=1 << 21):
@@ -240,17 +241,21 @@ class TestBucketedSweepCount:
                 outs.append(o.ghat)
             return tuple(jax.tree_util.tree_leaves(outs))
 
-        return audit_fn(f, state, g, j=j)
+        return audit_fn(f, state, g, j=j, donate_argnums=(0,))
 
     @pytest.mark.parametrize("nb", [1, 3, 8])
     def test_bucketed_sparse_within_budget(self, nb):
+        # <= 2 traversals + the per-bucket BLOCK-padding slack (a bucket
+        # of J/nb elements pads to a row multiple; < 1% at this J)
         res = self._audit(nb)
-        assert res["traversals"] <= 3.01, (nb, res)
-        assert res["read_units"] <= 5.0, (nb, res)
+        assert res["traversals"] <= 2.02, (nb, res)
+        assert res["read_units"] <= 3.55, (nb, res)
+        assert res["write_units"] <= 2.02, (nb, res)
 
     def test_bucketing_does_not_inflate_traversals(self):
         flat, b8 = self._audit(1), self._audit(8)
         assert abs(b8["traversals"] - flat["traversals"]) <= 0.01, (flat, b8)
+        assert abs(b8["write_units"] - flat["write_units"]) <= 0.01, (flat, b8)
 
 
 class TestBucketedSyncGradient:
@@ -321,5 +326,5 @@ class TestEdgeCases:
         g = jax.random.normal(jax.random.PRNGKey(2), (j,))
         o1 = sparsify.compress(cfg1, sparsify.init_state(cfg1, j), g)
         ob = sparsify.compress(cfgb, sparsify.init_state(cfgb, j), g)
-        np.testing.assert_array_equal(np.asarray(o1.mask),
-                                      np.asarray(ob.mask))
+        np.testing.assert_array_equal(np.asarray(sparsify.dense_mask(o1, j)),
+                                      np.asarray(sparsify.dense_mask(ob, j)))

@@ -40,3 +40,54 @@ def test_latest_step_multiple(tmp_path):
         save_checkpoint(d, s, t, t, t)
     assert latest_step(d) == 5
     assert latest_step(str(tmp_path / "missing")) is None
+
+
+def test_legacy_ef_state_migrates_to_err_prev(tmp_path):
+    """Checkpoints written by the (a_prev, s_prev) fused layout restore
+    into the err_prev layout via the one-shot dense multiply
+    err = a_prev * (1 - s_prev) at load time (checkpoint/io.py)."""
+    d = str(tmp_path)
+    j = 513
+    key = jax.random.PRNGKey(1)
+    a_prev = jax.random.normal(key, (j,))
+    s_prev = (jax.random.uniform(jax.random.fold_in(key, 1), (j,)) < 0.05
+              ).astype(jnp.uint8)
+    legacy_ef = {"a_prev": a_prev, "s_prev": s_prev,
+                 "step": jnp.int32(9)}
+    t = {"x": jnp.ones(2)}
+    save_checkpoint(d, 3, t, t, legacy_ef)
+    tmpl = {"err_prev": jnp.zeros((j,)), "step": jnp.int32(0)}
+    _, _, ef2 = restore_checkpoint(d, 3, t, t, tmpl)
+    np.testing.assert_array_equal(
+        np.asarray(ef2["err_prev"]),
+        np.asarray(a_prev) * (1.0 - np.asarray(s_prev, np.float32)))
+    assert int(ef2["step"]) == 9
+
+
+def test_current_ef_state_roundtrips_through_train_state(tmp_path):
+    """New-layout fused EF state (err_prev + O(k) posterior) saves and
+    restores unchanged — and a missing leaf with no legacy pair to
+    migrate from is a hard error, not a silent zero-fill."""
+    import pytest
+    from repro.configs.base import SparsifierConfig
+    from repro.core import sparsify
+    d = str(tmp_path)
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.02, mu=0.5,
+                           pipeline="fused")
+    j = 777
+    st = sparsify.init_state(cfg, j)
+    out = sparsify.compress(cfg, st, jax.random.normal(
+        jax.random.PRNGKey(2), (j,)))
+    st = sparsify.observe_aggregate(cfg, out.state,
+                                    0.5 * sparsify.dense_ghat(out, j))
+    t = {"x": jnp.ones(2)}
+    save_checkpoint(d, 1, t, t, st)
+    z = jax.tree_util.tree_map(jnp.zeros_like, st)
+    _, _, st2 = restore_checkpoint(d, 1, t, t, z)
+    for k_ in st:
+        np.testing.assert_array_equal(np.asarray(st[k_]),
+                                      np.asarray(st2[k_]), err_msg=k_)
+    bad = dict(z)
+    bad["not_there"] = jnp.zeros((3,))
+    with pytest.raises(KeyError):
+        restore_checkpoint(d, 1, t, t, bad)

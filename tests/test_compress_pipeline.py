@@ -34,15 +34,17 @@ def _roundtrip(cfg_r, cfg_f, j, steps=4, seed=0, omega=0.25):
         g = jax.random.normal(jax.random.fold_in(key, t), (j,))
         orr = sparsify.compress(cfg_r, sr, g, omega=omega)
         off = sparsify.compress(cfg_f, sf, g, omega=omega)
-        assert (orr.mask == off.mask).all(), f"mask diverged at t={t}"
+        # fused carries no dense mask; both reconstruct via the one
+        # shared O(k) helper (no dtype branching)
+        assert (sparsify.dense_mask(orr, j) ==
+                sparsify.dense_mask(off, j)).all(), f"mask diverged at t={t}"
         gr = np.asarray(orr.ghat)
         gf = np.asarray(sparsify.dense_ghat(off, j))
         np.testing.assert_allclose(gr, gf, rtol=1e-5, atol=1e-6)
-        # error feedback parity: fused err is implicit (EF invariant)
-        err_f = off.state["a_prev"] * (1.0 - off.state["s_prev"].astype(
-            jnp.float32))
-        np.testing.assert_allclose(np.asarray(orr.state["err"]),
-                                   np.asarray(err_f), rtol=1e-5, atol=1e-6)
+        # error feedback parity: fused err_prev is the ONE state vector,
+        # maintained by the O(k) scatter-zero — bit-identical, not close
+        np.testing.assert_array_equal(np.asarray(orr.state["err"]),
+                                      np.asarray(off.state["err_prev"]))
         if orr.values is not None:
             assert set(np.asarray(orr.indices).tolist()) == \
                 set(np.asarray(off.indices).tolist())
@@ -71,11 +73,13 @@ class TestParityMatrix:
         j = 20_000
         k = sparsify.resolve_k(cfg_f, j)
         st_f = sparsify.init_state(cfg_f, j)
-        assert "a_prev" in st_f and "err" not in st_f   # fused layout
+        assert "err_prev" in st_f and "err" not in st_f   # fused layout
+        assert "s_prev" not in st_f                       # no dense mask state
         g = jax.random.normal(jax.random.PRNGKey(11), (j,))
         off = sparsify.compress(cfg_f, st_f, g)
-        n = int(off.mask.astype(jnp.int32).sum())
+        n = int(sparsify.dense_mask(off, j).sum())
         assert k <= n <= hist_capacity(k, j)
+        assert n == int(off.count)
         # the reference histogram selector keeps its own (linear-bin)
         # over-selection; both are supersets of the exact top-k
         orr = sparsify.compress(cfg_r, sparsify.init_state(cfg_r, j), g)
@@ -89,11 +93,11 @@ class TestParityMatrix:
                          ef_dtype="bfloat16")
         j = 2_000
         st_f = sparsify.init_state(cfg_f, j)
-        assert "a_prev" in st_f and "err" not in st_f   # fused layout
-        assert st_f["a_prev"].dtype == jnp.bfloat16
+        assert "err_prev" in st_f and "err" not in st_f   # fused layout
+        assert st_f["err_prev"].dtype == jnp.bfloat16
         out = sparsify.compress(cfg_f, st_f, jax.random.normal(
             jax.random.PRNGKey(1), (j,)))
-        assert int(out.mask.astype(jnp.int32).sum()) == \
+        assert int(sparsify.dense_mask(out, j).sum()) == \
             sparsify.resolve_k(cfg_f, j)
 
     @pytest.mark.parametrize("kind", ["randk", "thresholdk"])
@@ -106,11 +110,12 @@ class TestParityMatrix:
         key = jax.random.PRNGKey(1)
         sr = sparsify.init_state(cfg_r, j)
         sf = sparsify.init_state(cfg_f, j)
-        assert "a_prev" in sf and "err" not in sf       # fused layout
+        assert "err_prev" in sf and "err" not in sf     # fused layout
         g = jax.random.normal(key, (j,))
         orr = sparsify.compress(cfg_r, sr, g, key=key)
         off = sparsify.compress(cfg_f, sf, g, key=key)
-        assert (orr.mask == off.mask).all()
+        assert (sparsify.dense_mask(orr, j) ==
+                sparsify.dense_mask(off, j)).all()
         assert orr.values is not None and off.values is not None
         if kind == "randk":
             # shared sampler => identical index STREAM, not just support
@@ -143,7 +148,8 @@ class TestParityMatrix:
             g = jax.random.normal(jax.random.fold_in(key, t), (j,))
             ot = sparsify.compress(cfg_t, st_t, g)
             orr = sparsify.compress(cfg_r, st_r, g)
-            assert (ot.mask == orr.mask).all(), f"t={t}"
+            assert (sparsify.dense_mask(ot, j) ==
+                    sparsify.dense_mask(orr, j)).all(), f"t={t}"
             agg = 0.5 * (sparsify.dense_ghat(ot, j) +
                          sparsify.dense_ghat(orr, j))
             st_t = sparsify.observe_aggregate(cfg_t, ot.state, agg)
@@ -181,7 +187,8 @@ def _roundtrip_static(cfg_r, cfg_f, g, steps=3, omega=0.5):
     for t in range(steps):
         orr = sparsify.compress(cfg_r, sr, g, omega=omega)
         off = sparsify.compress(cfg_f, sf, g, omega=omega)
-        assert (orr.mask == off.mask).all(), f"t={t}"
+        assert (sparsify.dense_mask(orr, j) ==
+                sparsify.dense_mask(off, j)).all(), f"t={t}"
         np.testing.assert_allclose(
             np.asarray(orr.ghat), np.asarray(sparsify.dense_ghat(off, j)),
             rtol=1e-5, atol=1e-6)
@@ -198,11 +205,12 @@ class TestPallasKernels:
         key = jax.random.PRNGKey(0)
         ks = jax.random.split(key, 3)
         g = jax.random.normal(ks[0], (j,))
-        a_prev = jax.random.normal(ks[1], (j,))
-        s_prev = (jax.random.uniform(ks[2], (j,)) < 0.1).astype(jnp.float32)
+        # err_prev: the ONE state vector (zero at the previous support)
+        err_prev = jax.random.normal(ks[1], (j,)) * (
+            jax.random.uniform(ks[2], (j,)) >= 0.1)
         a, score, _mom, amax, hist = ck.sweep1_pallas(
-            g, a_prev, s_prev, 1.0, mode="plain", interpret=True)
-        a_ref, score_ref, _ = cref.dense_scores_ref(g, a_prev, s_prev,
+            g, err_prev, 1.0, mode="plain", interpret=True)
+        a_ref, score_ref, _ = cref.dense_scores_ref(g, err_prev,
                                                     1, kind="topk")
         np.testing.assert_allclose(np.asarray(a), np.asarray(a_ref),
                                    rtol=1e-6, atol=1e-6)
@@ -223,7 +231,7 @@ class TestPallasKernels:
         g = jax.random.normal(key, (j,))
         mom = jax.random.normal(jax.random.fold_in(key, 1), (j,))
         a, _score, mom_out, _amax, _hist = ck.sweep1_pallas(
-            g, jnp.zeros((j,)), jnp.zeros((j,)), 1.0, mode="dgc",
+            g, jnp.zeros((j,)), 1.0, mode="dgc",
             momentum=0.9, mom=mom, interpret=True)
         np.testing.assert_allclose(np.asarray(mom_out),
                                    np.asarray(0.9 * mom + g),
@@ -268,8 +276,7 @@ class TestPallasKernels:
         cfg_r = SparsifierConfig(kind="regtopk", k=k, mu=0.5,
                                  selector="exact")
         sr = sparsify.init_state(cfg_r, j)
-        a_prev = jnp.zeros((j,))
-        s8 = jnp.zeros((j,), jnp.uint8)
+        err_prev = jnp.zeros((j,))
         idx_prev = jnp.zeros((k,), jnp.uint32)
         aps = jnp.zeros((k,))
         gps = jnp.zeros((k,))
@@ -279,25 +286,31 @@ class TestPallasKernels:
             g = jax.random.normal(jax.random.fold_in(key, t), (j,))
             orr = sparsify.compress(cfg_r, sr, g, omega=0.25)
             out = cops.fused_compress_arrays(
-                "regtopk", g, a_prev, s8, step, k=k, omega=0.25, mu=0.5,
+                "regtopk", g, err_prev, step, k=k, omega=0.25, mu=0.5,
                 Q=0.0, idx_prev=idx_prev, a_prev_sel=aps, g_prev_sel=gps,
                 want_ghat=True, strategy="pallas_interpret")
-            assert (orr.mask == out["mask8"]).all(), f"t={t}"
+            assert set(np.asarray(orr.indices).tolist()) == \
+                set(np.asarray(out["indices"]).tolist()), f"t={t}"
             np.testing.assert_allclose(np.asarray(orr.ghat),
                                        np.asarray(out["ghat"]),
                                        rtol=1e-6, atol=1e-7)
+            # post-step state parity: err_prev == reference a * (1 - s)
+            np.testing.assert_array_equal(np.asarray(orr.state["err"]),
+                                          np.asarray(out["err"]))
             agg = 0.25 * orr.ghat
             sr = sparsify.observe_aggregate(cfg_r, orr.state, agg)
-            a_prev, s8 = out["a"], out["mask8"]
+            err_prev = out["err"]
             idx_prev, aps = out["indices"], out["values"]
             gps = agg[idx_prev.astype(jnp.int32)]
             step = step + 1
 
 
 class TestSweepCount:
-    """Traced-shape audit: the fused pipeline must stay <= 3 O(J) HBM
-    traversals per compress step on the production (sparse-comm) path,
-    vs ~8 logical passes (audit: >= 6) for the reference path."""
+    """Traced-shape audit: the fused pipeline must stay <= 2 O(J) HBM
+    traversals per compress step on the production (sparse-comm) path —
+    the err_prev layout leaves NO third sweep (state writes are O(k)
+    scatters) — vs ~8 logical passes (audit: >= 6) for the reference
+    path. Writes are gated too (write_units, DESIGN.md §2.3)."""
 
     @staticmethod
     def _audit(pipeline, comm_mode, j=1 << 18):
@@ -314,12 +327,15 @@ class TestSweepCount:
                 outs.append(o.ghat)
             return tuple(jax.tree_util.tree_leaves(outs))
 
-        return audit_fn(f, state, g, j=j)
+        return audit_fn(f, state, g, j=j, donate_argnums=(0,))
 
     def test_fused_sparse_within_budget(self):
         res = self._audit("fused", "sparse")
-        assert res["traversals"] <= 3, res
-        assert res["read_units"] <= 5.0, res
+        assert res["traversals"] <= 2, res
+        assert res["read_units"] <= 3.5, res
+        # writes: sweep-1's (a, keys) streams only — the mask-write
+        # sweep of the (a_prev, s_prev) layout is gone
+        assert res["write_units"] <= 2.0, res
 
     def test_fused_simulate_within_budget(self):
         res = self._audit("fused", "simulate")
@@ -331,9 +347,11 @@ class TestSweepCount:
         assert ref["traversals"] >= 6, ref
         assert ref["traversals"] > fus["traversals"]
         assert ref["read_units"] > 2 * fus["read_units"], (ref, fus)
+        assert ref["write_units"] > fus["write_units"], (ref, fus)
 
     def test_plan_matches_audit(self):
-        assert sweep_plan("fused", "sparse")["o_j_passes"] == 3
+        assert sweep_plan("fused", "sparse")["o_j_passes"] == 2
+        assert sweep_plan("fused", "simulate")["o_j_passes"] == 3
         assert sweep_plan("reference")["full_sorts"] == 2
 
 
@@ -378,7 +396,7 @@ class TestRandkBigIndex:
         out = sparsify.compress(cfg, st, jnp.arange(j, dtype=jnp.float32),
                                 key=jax.random.PRNGKey(0))
         assert out.indices.dtype == jnp.uint32
-        assert int(out.mask.sum()) == 16
+        assert int(sparsify.dense_mask(out, j).sum()) == 16
         np.testing.assert_allclose(
             np.asarray(out.values),
             np.asarray(out.indices).astype(np.float32))
