@@ -8,7 +8,10 @@ Compares a freshly produced BENCH_compress.json (``benchmarks.run --json
 - any fused-pipeline row regressed its deterministic audit metrics —
   ``sweeps_per_step`` (O(J)-traversal J-equivalents), ``read_units``,
   or ``write_units`` (streamed J-fp32-equivalents, DESIGN.md §2.3)
-  above the baseline row of the same name;
+  above the baseline row of the same name. Rows carry an ``allocation``
+  column (DESIGN.md §2.6); the allocated fused variants (fused_prop /
+  fused_adapt) are gated exactly like the rest — per-segment budget
+  allocation must not cost a traversal;
 - any SPARSE-COMM fused row (``comm_mode`` on the row, falling back to
   the payload-level field) exceeds the ABSOLUTE two-traversal budget
   (``sweeps_per_step`` > FUSED_MAX_TRAVERSALS): the err_prev state

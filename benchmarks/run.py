@@ -122,7 +122,10 @@ def bench_compress(quick):
 
     - group "regtopk_exact": the REGTOP-k exact-selector path, plus the
       bucketed (num_buckets=8) and auto-bucketed (num_buckets=0) fused
-      variants (§2.4);
+      variants (§2.4), and the density-allocation variants (§2.6:
+      fused_prop / fused_adapt — per-segment budget split; every row
+      carries an ``allocation`` column and the allocated rows must hold
+      the same absolute 2-sweep / 2-write-unit fused budget);
     - group "topk_hist": the histogram-selector path — fused since the
       capability-dispatch PR (reference-pipeline histogram packs no
       pairs and degrades sparse comm, so its row times the simulate
@@ -153,6 +156,10 @@ def bench_compress(quick):
                 ("fused", cfg_fus),
                 ("fused_b8", dataclasses.replace(cfg_fus, num_buckets=8)),
                 ("fused_auto", dataclasses.replace(cfg_fus, num_buckets=0)),
+                ("fused_prop", dataclasses.replace(
+                    cfg_fus, allocation="proportional")),
+                ("fused_adapt", dataclasses.replace(
+                    cfg_fus, allocation="adaptive")),
             )),
             ("topk_hist", "topk_hist", (
                 ("reference", cfg_hr),
@@ -217,6 +224,7 @@ def _bench_compress_one(cfg, g, j, repeats) -> dict:
         best = min(best, time.perf_counter() - t0)
     aud = audit_fn(f, state, g, j=j, donate_argnums=(0,))
     row = {"j": j, "num_buckets": cfg.num_buckets,
+           "allocation": cfg.allocation,
            "us_per_call": round(best * 1e6, 1),
            "sweeps_per_step": aud["traversals"],
            "read_units": round(aud["read_units"], 2),

@@ -141,8 +141,30 @@ class SparsifierConfig:
     mu: float = 0.1               # REGTOP-k regularizer temperature
     Q: float = 0.0                # posterior distortion for never-sent entries
     momentum: float = 0.9         # dgc momentum correction
-    per_layer: bool = False       # RESERVED (layer-wise k) — not implemented;
-                                  # the paper and all experiments use flat-J
+    # density allocation (DESIGN.md §2.6, core/allocate.py): how the
+    # global budget k = round(sparsity * J) splits across contiguous
+    # segments of the flat gradient BEFORE selection.
+    # - "global":       one global top-k (the paper; bit-identical to
+    #   the pre-allocation pipeline — the allocation machinery is never
+    #   entered).
+    # - "proportional": k_l ~ k * J_l / J per segment (largest-remainder
+    #   apportionment; per-layer top-k at uniform density when segments
+    #   are layer-aligned).
+    # - "adaptive":     k_l from per-segment second-moment (top-mass)
+    #   statistics of the selection score, a la Adaptive Top-K — O(S)
+    #   from sweep products the pipeline already makes, intensity-
+    #   clipped to a bounded deviation from proportional.
+    # Every mode conserves sum(k_l) == k exactly, so the packed pairs
+    # and sparse-comm wire bytes are unchanged. Requires kind in
+    # {topk, dgc, regtopk, thresholdk, randk} and selector="exact"
+    # (allocate.check_allocation raises otherwise, never silent).
+    allocation: str = "global"    # global | proportional | adaptive
+    # segment count for allocation != "global": 0 resolves to the bucket
+    # partition when num_buckets > 1 (segments follow buckets) else
+    # allocate.DEFAULT_SEGMENTS; the train step overrides the near-equal
+    # cut with layer-aligned TreeFlattener bounds (allocate.
+    # layer_segments), which this count caps.
+    num_segments: int = 0
     comm_mode: str = "simulate"   # simulate | sparse | dense
     selector: str = "exact"       # exact | histogram (threshold selection,
                                   # count in [k, k*(1+slack)]; fused via the

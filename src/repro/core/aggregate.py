@@ -123,7 +123,7 @@ def sparse_allgather_combine(values: jnp.ndarray, indices: jnp.ndarray,
 
 
 def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
-                  axes: AxisNames, key=None):
+                  axes: AxisNames, key=None, seg_bounds=None):
     """Full per-step gradient sync for one worker shard (inside shard_map).
 
     Returns (g_agg, new_state). `g` is this rank's flat local gradient
@@ -135,7 +135,20 @@ def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     cfg.num_buckets > 1 additionally chunks that all-gather into
     per-bucket collectives interleaved with the local scatter-add
     combine (DESIGN.md §2.4 overlap schedule).
+
+    cfg.allocation != "global" (DESIGN.md §2.6) splits the selection
+    budget per segment BEFORE compression; ``seg_bounds`` optionally
+    pins the segmentation (the train step passes layer-aligned
+    TreeFlattener bounds — static python ints, safe under shard_map).
+    The wire format is allocation-invariant: compress still packs
+    exactly k pairs (sum(k_l) == k), so the sparse collective moves the
+    same N*k*(4+wire_value_bytes) bytes in every mode
+    (tests/test_allocate.py::TestSyncGradient). Unsupported combos
+    raise here at trace time, never degrade silently.
     """
+    if cfg.allocation != "global":
+        from repro.core import allocate
+        allocate.check_allocation(cfg)     # explicit trace-time error
     if cfg.kind == "none":
         g_agg = dense_allreduce(g.astype(jnp.dtype(cfg.ef_dtype)), axes)
         return g_agg, {"step": state["step"] + 1}
@@ -157,7 +170,8 @@ def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     if cfg.kind == "sketchtopk":
         return _sketch_sync(cfg, state, g, axes)
 
-    out = sparsify.compress(cfg, state, g, key=key, omega=omega)
+    out = sparsify.compress(cfg, state, g, key=key, omega=omega,
+                            seg_bounds=seg_bounds)
     if cfg.comm_mode == "sparse" and out.values is not None:
         g_agg = sparse_allgather_combine(out.values, out.indices,
                                          g.shape[0], axes,
@@ -211,14 +225,18 @@ def comm_bytes_per_step(cfg: SparsifierConfig, j: int, n_workers: int) -> dict:
     Uses the EFFECTIVE comm mode (DESIGN.md §2.5): configs whose
     compress step packs no pairs move dense bytes even when
     comm_mode="sparse" was requested, and the fused histogram selector
-    moves its fixed hist_capacity packed length, not k.
+    moves its fixed hist_capacity packed length, not k. Density
+    allocation (DESIGN.md §2.6) never changes the volume — every
+    allocation mode conserves sum(k_l) == k and packs exactly
+    packed_len pairs; the returned dict carries ``allocation`` so
+    benchmark rows can still distinguish the modes.
     """
     k = sparsify.resolve_k(cfg, j)
     dense_ar = 2 * j * 4 * (n_workers - 1) / n_workers     # ring all-reduce fp32
     eff = effective_comm_mode(cfg)
     if cfg.kind == "none" or eff in ("dense", "simulate"):
         return {"bytes": dense_ar, "k": k, "ratio": 1.0,
-                "effective_comm_mode": eff}
+                "effective_comm_mode": eff, "allocation": cfg.allocation}
     if cfg.kind == "sketchtopk":
         from repro.core import sketch as _sketch
         width = _sketch.resolve_width(k, cfg.sketch_width)
@@ -226,14 +244,15 @@ def comm_bytes_per_step(cfg: SparsifierConfig, j: int, n_workers: int) -> dict:
         vals = n_workers * k * _wire_value_bytes(cfg)       # indices implied
         b = sk + vals
         return {"bytes": b, "k": k, "ratio": b / dense_ar,
-                "sketch_bytes": sk, "effective_comm_mode": eff}
+                "sketch_bytes": sk, "effective_comm_mode": eff,
+                "allocation": cfg.allocation}
     from repro.kernels.compress.dispatch import packed_len
     kp = packed_len(cfg, j)                 # k, or hist_capacity (fused hist)
     vb = _wire_value_bytes(cfg)             # 4, or 2 for wire_dtype=bf16
     sparse = n_workers * kp * (vb + 4)      # allgather vals+idx
     return {"bytes": sparse, "k": k, "packed_len": kp,
             "wire_value_bytes": vb, "ratio": sparse / dense_ar,
-            "effective_comm_mode": eff}
+            "effective_comm_mode": eff, "allocation": cfg.allocation}
 
 
 def _wire_value_bytes(cfg: SparsifierConfig) -> int:

@@ -1,0 +1,359 @@
+"""Layer-adaptive density allocation: split the global budget k across
+segments BEFORE selection (DESIGN.md §2.6).
+
+The paper's REGTOP-k statistics are computed over the whole flattened
+gradient, but the sparsity budget itself need not be uniform: *Adaptive
+Top-K in SGD* (Ruan et al., 2022) derives per-layer k from gradient
+statistics, and *rTop-k* (Barnes et al., 2020) shows a statistical split
+of the budget beats pure magnitude selection. This module owns that
+split. A **segment** is a contiguous slice of the flat gradient — a
+near-equal partition (``segment_bounds``) by default, or leaf-aligned
+"layer" bounds from the model's ``TreeFlattener`` metadata
+(``layer_segments``; the train step passes these, so segments track real
+parameter groups).
+
+``SparsifierConfig.allocation`` selects the mode:
+
+- ``"global"``       : one global top-k over the flat vector — today's
+  behavior, bit-identical (the allocation machinery is never entered).
+- ``"proportional"`` : k_l proportional to J_l (largest-remainder
+  apportionment, static Python ints). With near-equal segments this is
+  global-budget-per-slice; with layer segments it is per-layer top-k at
+  uniform density.
+- ``"adaptive"``     : k_l from per-segment second-moment (top-mass)
+  statistics of the selection score, computed O(segments) from the
+  sweep products the fused pipeline already makes (candidate covers /
+  dense slices) — no extra O(J) traversal (audit-gated at 2.0 sweeps,
+  ``tests/test_allocate.py::TestAllocatedSweepCount``). The per-element
+  intensity ratio is clipped to [1/ADAPTIVE_CLIP, ADAPTIVE_CLIP] of the
+  global mean, so adaptive quotas deviate at most ADAPTIVE_CLIP**2 x
+  from the proportional share — which bounds candidate provisioning
+  (``segment_caps``) statically and prevents degenerate all-in-one-
+  segment allocations.
+
+**Budget conservation** is exact in every mode: sum(k_l) == k
+(including remainder distribution, per-segment caps k_l <= J_l with
+overflow redistribution, and the >=1-per-segment floor when k >=
+num_segments), pinned by ``tests/test_allocate.py::TestApportionment``.
+The packed wire format is unchanged — compress still emits exactly k
+(values, indices) pairs, so ``aggregate.sync_gradient`` moves the same
+bytes for every allocation mode.
+
+Supported configs (``check_allocation``): kind in {topk, dgc, regtopk,
+thresholdk, randk} with selector="exact" (exact-count selection is what
+makes sum(k_l) == k conservable; the histogram selector over-selects per
+threshold). randk is score-free: allocation="adaptive" degrades to the
+proportional split for it (documented, not silent — there is no score
+statistic to adapt to). Everything is O(segments + k) beyond the sweeps
+the pipelines already run.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+ALLOCATION_MODES = ("global", "proportional", "adaptive")
+# kinds with a per-worker compress step whose selection can honor
+# per-segment counts (aggregate-level / sketch-coordinated kinds cannot)
+ALLOCATED_KINDS = ("topk", "dgc", "regtopk", "thresholdk", "randk")
+# near-equal segment count when num_segments=0 and buckets don't decide
+DEFAULT_SEGMENTS = 8
+# adaptive per-element intensity ratio clip: quotas deviate at most
+# ADAPTIVE_CLIP**2 x from the proportional share (the bounded-deviation
+# rule that keeps candidate provisioning static and O(k))
+ADAPTIVE_CLIP = 2.0
+# additive per-segment provisioning headroom on top of the clipped quota
+ADAPTIVE_SLACK = 64
+
+
+def check_allocation(cfg) -> None:
+    """Raise ValueError for configs the allocation subsystem cannot
+    serve (explicit, never silent — mirroring the §2.5 dispatch rule).
+    allocation="global" is universally valid (it is the no-op mode)."""
+    if cfg.allocation not in ALLOCATION_MODES:
+        raise ValueError(f"unknown allocation {cfg.allocation!r}; "
+                         f"known: {ALLOCATION_MODES}")
+    if cfg.allocation == "global":
+        return
+    if cfg.kind not in ALLOCATED_KINDS:
+        raise ValueError(
+            f"allocation={cfg.allocation!r} needs a per-worker compress "
+            f"step that can honor per-segment counts; kind={cfg.kind!r} "
+            "selects at the aggregate/sketch level (supported kinds: "
+            f"{ALLOCATED_KINDS})")
+    if cfg.kind != "randk" and cfg.selector != "exact":
+        raise ValueError(
+            f"allocation={cfg.allocation!r} requires selector='exact': "
+            "per-segment budget conservation (sum k_l == k) needs "
+            "exact-count selection, and the histogram selector "
+            f"over-selects per threshold (got selector={cfg.selector!r})")
+    if (cfg.kind == "regtopk" and cfg.pipeline != "fused"
+            and cfg.state_format == "sparse"):
+        raise ValueError(
+            "allocation != 'global' is not implemented for the reference "
+            "pipeline's regtopk state_format='sparse' layout; use "
+            "state_format='dense' or pipeline='fused'")
+
+
+def resolve_num_segments(cfg, j: int) -> int:
+    """Concrete segment count for a config: cfg.num_segments, with 0
+    resolved to the bucket partition (segments follow buckets when
+    num_buckets > 1, so per-segment sweeps and the chunked collective
+    share one cut) or DEFAULT_SEGMENTS for the flat schedule. Clamped to
+    [1, j] — a segment is never empty."""
+    ns = int(cfg.num_segments)
+    if ns <= 0:
+        ns = cfg.num_buckets if cfg.num_buckets > 1 else DEFAULT_SEGMENTS
+    return max(1, min(ns, max(1, int(j))))
+
+
+def segment_bounds(j: int, num_segments: int) -> list:
+    """Near-equal contiguous segmentation of [0, j): [(offset, size),
+    ...] — the same deterministic partition rule the bucketed pipeline
+    uses (core.flatten.bucket_bounds)."""
+    from repro.core.flatten import bucket_bounds
+    return bucket_bounds(j, num_segments)
+
+
+def layer_segments(leaves, max_segments: int) -> list:
+    """Leaf-aligned "layer" segmentation: group consecutive flat-vector
+    leaves into at most ``max_segments`` contiguous segments of
+    near-equal total size, never cutting inside a leaf. ``leaves`` is
+    either a list of leaf sizes (TreeFlattener.sizes order) or of
+    (offset, size) pairs (TreeFlattener.layer_bounds()). Returns
+    [(offset, size), ...] with sum(sizes) == sum(leaf sizes) and every
+    segment non-empty. Deterministic in its inputs (a pure function of
+    the static leaf layout)."""
+    sizes = [int(x[1]) if isinstance(x, (tuple, list)) else int(x)
+             for x in leaves]
+    j = sum(sizes)
+    if j <= 0:
+        return [(0, 0)]
+    n = len(sizes)
+    # positive-leaf suffix counts: a segment boundary must leave at least
+    # one positive leaf per remaining segment
+    pos_after = [0] * (n + 1)
+    for i in range(n - 1, -1, -1):
+        pos_after[i] = pos_after[i + 1] + (1 if sizes[i] > 0 else 0)
+    s = max(1, min(int(max_segments), pos_after[0]))
+    bounds, off, i, rem_j = [], 0, 0, j
+    for seg in range(s):
+        rem_segs = s - seg
+        if rem_segs == 1:
+            bounds.append((off, j - off))
+            break
+        target = rem_j / rem_segs
+        acc = 0
+        while i < n:
+            take = sizes[i]
+            if acc > 0 and pos_after[i] <= rem_segs - 1:
+                break                       # leaves reserved for the rest
+            if acc > 0 and abs(acc + take - target) > abs(acc - target):
+                break                       # next leaf overshoots the target
+            acc += take
+            i += 1
+        bounds.append((off, acc))
+        off += acc
+        rem_j -= acc
+    return bounds
+
+
+def segment_caps(k: int, sizes) -> list:
+    """Static per-segment selection/provisioning cap: the most entries
+    any allocation mode may assign to segment l —
+    min(J_l, k, ceil(ADAPTIVE_CLIP**2 * k * J_l / J) + ADAPTIVE_SLACK).
+    Every mode's k_l satisfies k_l <= cap_l (proportional by
+    construction; adaptive by the intensity clip + the integerizer's
+    cap-overflow redistribution), so candidate provisioning sized for
+    cap_l always covers the realized count. sum(caps) >= k always
+    (each cap >= the proportional quota)."""
+    sizes = [int(x) for x in sizes]
+    j = sum(sizes)
+    k = int(min(k, j))
+    caps = [int(min(sz, k,
+                    math.ceil(ADAPTIVE_CLIP ** 2 * k * sz / j)
+                    + ADAPTIVE_SLACK))
+            for sz in sizes]
+    assert sum(caps) >= k, (k, sizes, caps)
+    return caps
+
+
+def proportional_counts(k: int, sizes) -> list:
+    """Static largest-remainder apportionment of k over segment sizes:
+    k_l ~ k * J_l / J, sum(k_l) == k exactly, 0 <= k_l <= J_l, with the
+    >=1-per-segment floor applied when k >= num_segments (taken from
+    the largest counts, deterministically). Pure Python ints — safe to
+    bake into traced code as constants."""
+    sizes = [int(x) for x in sizes]
+    s, j = len(sizes), sum(sizes)
+    k = int(min(k, j))
+    base = [(k * sz) // j for sz in sizes]
+    rems = [(k * sz) % j for sz in sizes]
+    extra = k - sum(base)
+    for i in sorted(range(s), key=lambda t: (-rems[t], t))[:extra]:
+        base[i] += 1                        # base+1 <= ceil(k*J_l/J) <= J_l
+    if k >= s:                              # floor: every segment sends >= 1
+        for i in range(s):
+            while base[i] < 1:
+                d = max(range(s), key=lambda t: (base[t], -t))
+                base[d] -= 1
+                base[i] += 1
+    return base
+
+
+def _excl_cumsum(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.concatenate([jnp.zeros((1,), x.dtype), jnp.cumsum(x)[:-1]])
+
+
+def _integerize_counts(quota: jnp.ndarray, caps: jnp.ndarray, k: int,
+                       lo: int) -> jnp.ndarray:
+    """Exact traced integerization of real quotas (sum == k): cumulative
+    rounding (conserves the sum and keeps |k_l - quota_l| < 1), then cap
+    overflow redistributed to headroom in index order, then the floor
+    raised with the shortfall taken from surplus in index order. All
+    O(segments); deterministic."""
+    cum = jnp.round(jnp.cumsum(quota))
+    cum = jnp.minimum(cum, jnp.float32(k))      # float-sum slack guard
+    cum = cum.at[-1].set(jnp.float32(k))        # conserve exactly
+    kl = jnp.diff(jnp.concatenate([jnp.zeros((1,), cum.dtype), cum]))
+    kl = kl.astype(jnp.int32)                   # cum monotone -> kl >= 0
+    over = jnp.maximum(kl - caps, 0)
+    kl = kl - over
+    head = caps - kl
+    give = jnp.clip(jnp.sum(over) - _excl_cumsum(head), 0, head)
+    kl = kl + give                              # sum(caps) >= k absorbs all
+    if lo:
+        need = jnp.maximum(lo - kl, 0)
+        short = jnp.sum(need)
+        kl = jnp.maximum(kl, lo)
+        sur = kl - lo
+        take = jnp.clip(short - _excl_cumsum(sur), 0, sur)
+        kl = kl - take                          # k >= S*lo guarantees cover
+    return kl
+
+
+def adaptive_counts(k: int, sizes, moments, caps=None) -> jnp.ndarray:
+    """Traced adaptive split of k from per-segment second-moment
+    statistics (``moments``: (S,) sum of squared selection-score
+    magnitudes per segment, any non-negative scale). Per-element
+    intensity m_l / J_l is compared to the global mean and clipped to
+    [1/ADAPTIVE_CLIP, ADAPTIVE_CLIP]; quotas are k-proportional to
+    J_l * ratio_l, integerized exactly (``_integerize_counts``).
+    Returns (S,) int32 with sum == k, k_l <= caps_l (default
+    ``segment_caps``), and k_l >= 1 when k >= S. All-zero moments
+    degrade to the proportional split. O(segments) compute; fully
+    deterministic under jit (tests/test_allocate.py::TestAdaptive)."""
+    sizes = [int(x) for x in sizes]
+    s, j = len(sizes), sum(sizes)
+    k = int(min(k, j))
+    caps = caps if caps is not None else segment_caps(k, sizes)
+    sz = jnp.asarray(sizes, jnp.float32)
+    m = jnp.maximum(jnp.asarray(moments, jnp.float32), 0.0)
+    total = jnp.sum(m)
+    mean = jnp.maximum(total / float(j), jnp.float32(1e-30))
+    ratio = jnp.clip((m / sz) / mean, 1.0 / ADAPTIVE_CLIP, ADAPTIVE_CLIP)
+    w = sz * jnp.where(total > 0, ratio, 1.0)
+    quota = float(k) * w / jnp.sum(w)
+    return _integerize_counts(quota, jnp.asarray(caps, jnp.int32), k,
+                              lo=1 if k >= s else 0)
+
+
+# ---------------------------------------------------------------------------
+# Shared selection helpers (reference pipeline + fused fallback branch)
+# ---------------------------------------------------------------------------
+
+def allocated_select_dense(keys: jnp.ndarray, bounds, caps,
+                           counts: jnp.ndarray, k: int):
+    """Per-segment top-``counts[l]`` selection over a DENSE key vector,
+    packed to exactly k pairs.
+
+    keys: (J,) non-negative fp32 (|score|). For each segment, the top
+    ``caps[l]`` keys are ranked (``lax.top_k`` tie-break: value desc,
+    index asc within the segment) and the leading ``counts[l]`` are
+    live; one final O(sum(caps)) top-k over the live-masked union packs
+    them by key desc (ties resolve segment-major, index asc — the same
+    order the fused per-segment trim produces, which is what makes
+    fused-vs-reference proportional parity exact). Returns (idx (k,)
+    uint32, keys_sel (k,)). Requires sum(counts) == k with counts[l] <=
+    caps[l] (the apportionment functions guarantee both)."""
+    parts_v, parts_i = [], []
+    for pos, ((off, size), cap) in enumerate(zip(bounds, caps)):
+        kv, ki = jax.lax.top_k(
+            jax.lax.dynamic_slice_in_dim(keys, off, size), int(cap))
+        live = jnp.arange(int(cap), dtype=jnp.int32) < counts[pos]
+        parts_v.append(jnp.where(live, kv, -jnp.inf))
+        parts_i.append(jnp.uint32(off) + ki.astype(jnp.uint32))
+    allv = jnp.concatenate(parts_v)
+    alli = jnp.concatenate(parts_i)
+    tv, sel = jax.lax.top_k(allv, int(k))
+    return alli[sel], tv
+
+
+def dense_segment_moments(keys: jnp.ndarray, bounds, caps) -> jnp.ndarray:
+    """(S,) adaptive statistics from a dense key vector: per-segment
+    top-``caps[l]`` mass (sum of squared keys) — the oracle form of the
+    fused pipeline's candidate-cover statistic (identical whenever the
+    candidate cover holds, which the exactness witnesses enforce for
+    the selection itself)."""
+    out = []
+    for (off, size), cap in zip(bounds, caps):
+        kv = jax.lax.top_k(
+            jax.lax.dynamic_slice_in_dim(keys, off, size), int(cap))[0]
+        out.append(jnp.sum(jnp.where(kv > -jnp.inf, kv * kv, 0.0)))
+    return jnp.stack(out)
+
+
+def resolve_counts(allocation: str, k: int, bounds, caps,
+                   moments=None) -> jnp.ndarray:
+    """(S,) int32 per-segment budget for a non-global allocation mode.
+    ``moments`` is required for "adaptive" (per-segment second-moment
+    stats); "proportional" ignores it."""
+    sizes = [sz for _, sz in bounds]
+    if allocation == "adaptive":
+        if moments is None:
+            raise ValueError("allocation='adaptive' needs per-segment "
+                             "moment statistics")
+        return adaptive_counts(k, sizes, moments, caps=caps)
+    if allocation == "proportional":
+        return jnp.asarray(proportional_counts(k, sizes), jnp.int32)
+    raise ValueError(f"not an allocated mode: {allocation!r}")
+
+
+def reference_allocated_select(cfg, a: jnp.ndarray, score: jnp.ndarray,
+                               k: int, seg_bounds=None):
+    """Reference-pipeline allocated selection: (mask (J,), vals (k,),
+    idx (k,) uint32) for allocation != "global". ``score`` is the dense
+    selection score (already REGTOP-k-corrected for that kind); ``a``
+    the error-compensated gradient the packed values are read from.
+    Dense math — the oracle the fused per-segment trim is tested
+    against (tests/test_allocate.py::TestAllocatedParity)."""
+    from repro.core import bigvec
+    j = int(score.shape[0])
+    bounds = seg_bounds or segment_bounds(j, resolve_num_segments(cfg, j))
+    caps = segment_caps(k, [sz for _, sz in bounds])
+    keys = jnp.abs(score.astype(jnp.float32))
+    moments = (dense_segment_moments(keys, bounds, caps)
+               if cfg.allocation == "adaptive" else None)
+    counts = resolve_counts(cfg.allocation, k, bounds, caps, moments)
+    idx, _ = allocated_select_dense(keys, bounds, caps, counts, k)
+    mask = bigvec.mask_from_indices(j, idx, a.dtype)
+    return mask, bigvec.gather(a, idx), idx
+
+
+def randk_allocated_indices(key, bounds, counts) -> jnp.ndarray:
+    """Per-segment uniform k_l-subsets for allocated RANDOM-k
+    (``counts``: static Python ints — randk allocation is the
+    proportional split; there is no score statistic to adapt to). Each
+    segment draws from ``fold_in(key, segment_index)``, so the stream
+    is identical across pipelines and independent of other segments.
+    Returns (k,) uint32 global indices, segment-major."""
+    from repro.core import select
+    parts = []
+    for pos, ((off, size), kl) in enumerate(zip(bounds, counts)):
+        if int(kl) <= 0:
+            continue
+        parts.append(jnp.uint32(off) + select.randk_indices(
+            jax.random.fold_in(key, pos), size, int(kl)))
+    return jnp.concatenate(parts)

@@ -46,6 +46,15 @@ class TreeFlattener:
                 vec, off, size).reshape(shape).astype(dt))
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
 
+    def layer_bounds(self) -> list:
+        """Per-leaf (offset, size) metadata of the flat vector — the
+        layer-aligned segmentation source for density allocation:
+        ``core.allocate.layer_segments`` groups these into the segment
+        bounds the train step hands ``aggregate.sync_gradient`` when
+        ``SparsifierConfig.allocation != "global"`` (DESIGN.md §2.6).
+        Static Python ints (safe to bake into traced code)."""
+        return list(zip(self.offsets, self.sizes))
+
 
 def bucket_bounds(j: int, num_buckets: int) -> list:
     """Contiguous near-equal partition of [0, j) into buckets.
@@ -56,6 +65,11 @@ def bucket_bounds(j: int, num_buckets: int) -> list:
     histograms into one global threshold, so the partition must be
     deterministic and order-preserving (global index = offset + local).
     num_buckets is clamped to [1, j] (a bucket is never empty).
+
+    The density-allocation subsystem (DESIGN.md §2.6) reuses this exact
+    rule for its near-equal segment cut (``core.allocate.segment_bounds``
+    delegates here), so segments and buckets coincide whenever
+    ``num_segments`` follows ``num_buckets``.
     """
     b = max(1, min(int(num_buckets), max(j, 1)))
     base, rem = divmod(j, b)

@@ -42,6 +42,14 @@ Execution pipelines (cfg.pipeline, DESIGN.md §2.2):
   O(J) traversals (DESIGN.md §2.2). Which path serves a config is an
   explicit table — repro.kernels.compress.dispatch (DESIGN.md §2.5) —
   not an opaque boolean.
+
+Density allocation (cfg.allocation, DESIGN.md §2.6, core/allocate.py):
+both pipelines can split the budget sum(k_l) == k across contiguous
+segments (near-equal, or layer-aligned bounds passed by the train step)
+before selection — "proportional" (k_l ~ J_l) and "adaptive" (k_l from
+per-segment second-moment statistics). "global" is the default and is
+bit-identical to the pre-allocation pipeline. State layouts, packed
+shapes, and wire bytes are allocation-invariant.
 """
 from __future__ import annotations
 
@@ -130,6 +138,25 @@ def _workers_from_omega(omega) -> int:
 
 
 def init_state(cfg: SparsifierConfig, j: int) -> dict:
+    """Zero-initialized per-worker sparsifier state for a J-length flat
+    gradient.
+
+    Shapes/dtypes by layout (all vectors cfg.ef_dtype unless noted):
+
+    - fused (dispatch(cfg).path == "fused"): ``err_prev`` (J,) — the ONE
+      J-sized vector — plus ``step`` () int32; DGC adds ``mom`` (J,);
+      REGTOP-k adds the O(k) posterior ``idx_prev`` (kp,) uint32 /
+      ``a_prev_sel`` / ``g_prev_sel`` (kp,) with kp = packed_len(cfg, j)
+      (and ``nsel`` () int32 for the histogram selector's live count).
+    - reference: ``err`` (J,) for the EF kinds; DGC adds ``mom`` (J,);
+      REGTOP-k state_format="dense" adds (a_prev, s_prev, g_agg_prev)
+      (J,) each, state_format="sparse" the O(k) triple instead.
+
+    Layout parity across pipelines is pinned by
+    tests/test_state_traffic.py (err_prev == reference err bitwise) and
+    tests/test_checkpoint.py (round-trip + legacy migration). Density
+    allocation adds NO state — every mode reuses these layouts.
+    """
     dt = jnp.dtype(cfg.ef_dtype)
     z = jnp.zeros((j,), dt)
     if _fused_supported(cfg):
@@ -193,15 +220,53 @@ def _mask_from(score: jnp.ndarray, k: int, method: str) -> jnp.ndarray:
     return select.topk_mask(score, k, method)
 
 
+def _reference_select(cfg: SparsifierConfig, a: jnp.ndarray,
+                      score: jnp.ndarray, k: int, seg_bounds=None):
+    """(mask, vals, idx) for the reference pipeline's score-based kinds.
+
+    allocation="global": cfg.selector selection over the whole vector
+    (vals/idx packed for selector="exact" only). Other allocation modes
+    (DESIGN.md §2.6) select per segment via the shared allocated
+    selector — exact-count by construction, so packed pairs always
+    exist. ``a`` is the error-compensated accumulator the packed values
+    are read from; ``score`` the (possibly REGTOP-k-corrected) selection
+    score."""
+    if cfg.allocation != "global":
+        from repro.core import allocate
+        return allocate.reference_allocated_select(cfg, a, score, k,
+                                                   seg_bounds=seg_bounds)
+    mask = _mask_from(score, k, cfg.selector)
+    vals = idx = None
+    if cfg.selector == "exact":
+        vals, idx = _pack(a, score, k)
+    return mask, vals, idx
+
+
 def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
-             key: Optional[jax.Array] = None, omega: float = 1.0) -> CompressOut:
+             key: Optional[jax.Array] = None, omega: float = 1.0,
+             seg_bounds=None) -> CompressOut:
     """Sparsify one worker's flat gradient. omega = this worker's weight w_n.
+
+    Inputs: ``g`` (J,) fp gradient (cast to cfg.ef_dtype); ``state`` the
+    pytree from :func:`init_state`. Returns a :class:`CompressOut`; cost
+    is O(J) sweeps + O(k) packing on both pipelines (2 O(J) traversals
+    fused sparse-comm, ~8 reference — DESIGN.md §2.2/§2.3, pinned by
+    tests/test_state_traffic.py and tests/test_bucketed.py).
 
     cfg.pipeline selects the execution path: "reference" (dense math,
     cfg.selector) or "fused" (two-sweep kernels/compress pipeline). The
     dispatch decision is the explicit capability table in
     repro.kernels.compress.dispatch (DESIGN.md §2.5); configs outside it
     use the reference path, with the reason queryable via dispatch(cfg).
+
+    cfg.allocation != "global" (DESIGN.md §2.6) splits the budget
+    sum(k_l) == k across contiguous segments before selection on BOTH
+    pipelines — ``seg_bounds`` optionally pins the segmentation (static
+    [(offset, size), ...], e.g. layer-aligned bounds from
+    TreeFlattener.layer_bounds); by default segments are the near-equal
+    allocate.resolve_num_segments cut. Unsupported allocation combos
+    raise ValueError here (allocate.check_allocation), never degrade
+    silently.
     """
     j = g.shape[0]
     k = resolve_k(cfg, j)
@@ -210,9 +275,17 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     if cfg.num_buckets == 0:
         cfg = dataclasses.replace(cfg, num_buckets=resolve_num_buckets(
             cfg, j, _workers_from_omega(omega)))
+    if cfg.allocation != "global":
+        # AFTER bucket auto-resolution: num_segments=0 follows the
+        # RESOLVED bucket count (segments and buckets coincide)
+        from repro.core import allocate
+        allocate.check_allocation(cfg)
+        if seg_bounds is None:
+            seg_bounds = allocate.segment_bounds(
+                j, allocate.resolve_num_segments(cfg, j))
 
     if _fused_supported(cfg):
-        return _compress_fused(cfg, state, g, k, omega, key)
+        return _compress_fused(cfg, state, g, k, omega, key, seg_bounds)
 
     if cfg.kind == "none":
         ones = jnp.ones((j,), dt)
@@ -226,12 +299,9 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
 
     if cfg.kind == "topk":
         a = state["err"] + g
-        mask = _mask_from(a, k, cfg.selector)
+        mask, vals, idx = _reference_select(cfg, a, a, k, seg_bounds)
         ghat = mask * a
         new = {"err": a - ghat, "step": state["step"] + 1}
-        vals = idx = None
-        if cfg.selector == "exact":
-            vals, idx = _pack(a, a, k)
         return CompressOut(ghat, mask, new, vals, idx)
 
     if cfg.kind == "randk":
@@ -241,7 +311,16 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         # samples the k-subset as top-k of random bits (J > 2^31 safe —
         # no int32-bound jax.random.choice permutation sort)
         from repro.core import bigvec
-        idx = select.randk_indices(key, j, k)
+        if cfg.allocation != "global":
+            # score-free selection: allocation draws a uniform k_l-subset
+            # per segment with the PROPORTIONAL counts (same shared
+            # sampler as the fused path -> identical index streams)
+            from repro.core import allocate
+            counts = allocate.proportional_counts(
+                k, [sz for _, sz in seg_bounds])
+            idx = allocate.randk_allocated_indices(key, seg_bounds, counts)
+        else:
+            idx = select.randk_indices(key, j, k)
         mask = bigvec.mask_from_indices(j, idx, dt)
         ghat = mask * a
         return CompressOut(ghat, mask, {"err": a - ghat, "step": state["step"] + 1},
@@ -256,24 +335,18 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         # scales. Selection therefore coincides with topk; the kind
         # exists as the threshold-family baseline.
         a = state["err"] + g
-        mask = _mask_from(a, k, cfg.selector)
+        mask, vals, idx = _reference_select(cfg, a, a, k, seg_bounds)
         ghat = mask * a
         new = {"err": a - ghat, "step": state["step"] + 1}
-        vals = idx = None
-        if cfg.selector == "exact":
-            vals, idx = _pack(a, a, k)
         return CompressOut(ghat, mask, new, vals, idx)
 
     if cfg.kind == "dgc":
         # Deep Gradient Compression [Lin et al. '18]: momentum correction.
         mom = cfg.momentum * state["mom"] + g
         a = state["err"] + mom
-        mask = _mask_from(a, k, cfg.selector)
+        mask, vals, idx = _reference_select(cfg, a, a, k, seg_bounds)
         ghat = mask * a
         new = {"err": a - ghat, "mom": mom * (1.0 - mask), "step": state["step"] + 1}
-        vals = idx = None
-        if cfg.selector == "exact":
-            vals, idx = _pack(a, a, k)
         return CompressOut(ghat, mask, new, vals, idx)
 
     if cfg.kind == "regtopk":
@@ -288,7 +361,7 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         score = a * reg
         is_first = state["step"] == 0
         score = jnp.where(is_first, a, score)   # t=0: plain TOP-k
-        mask = _mask_from(score, k, cfg.selector)
+        mask, vals, idx = _reference_select(cfg, a, score, k, seg_bounds)
         ghat = mask * a
         new = {
             "err": a - ghat,
@@ -297,9 +370,6 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
             "g_agg_prev": state["g_agg_prev"],  # replaced by observe_aggregate
             "step": state["step"] + 1,
         }
-        vals = idx = None
-        if cfg.selector == "exact":
-            vals, idx = _pack(a, score, k)
         return CompressOut(ghat, mask, new, vals, idx)
 
     raise ValueError(f"unknown sparsifier {cfg.kind!r}")
@@ -344,7 +414,8 @@ def _compress_regtopk_sparse(cfg: SparsifierConfig, state: dict,
 
 
 def _compress_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
-                    k: int, omega: float, key=None) -> CompressOut:
+                    k: int, omega: float, key=None,
+                    seg_bounds=None) -> CompressOut:
     """Two-sweep fused pipeline (repro.kernels.compress, DESIGN.md §2.2).
 
     selector="exact": reference-parity top-k semantics;
@@ -378,6 +449,7 @@ def _compress_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         k=k, omega=omega, mu=cfg.mu, Q=cfg.Q, momentum=cfg.momentum,
         want_ghat=cfg.comm_mode != "sparse", selector=cfg.selector,
         ef_dtype=cfg.ef_dtype, key=key, num_buckets=cfg.num_buckets,
+        allocation=cfg.allocation, seg_bounds=seg_bounds,
         **kwargs)
     dt = jnp.dtype(cfg.ef_dtype)
     new = {"err_prev": out["err"], "step": state["step"] + 1}
@@ -394,7 +466,11 @@ def _compress_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
 
 
 def observe_aggregate(cfg: SparsifierConfig, state: dict, g_agg: jnp.ndarray) -> dict:
-    """Store the aggregated gradient g^t the server 'broadcasts' (footnote 1)."""
+    """Store the aggregated gradient g^t the server 'broadcasts'
+    (footnote 1). No-op except for REGTOP-k, where it is O(k) on the
+    fused/sparse layouts (one gather at the support) and one O(J) cast
+    on the dense reference layout. g_agg: (J,) — must be rank-identical
+    (the sparse combine guarantees it; DESIGN.md §2.1)."""
     if cfg.kind == "regtopk":
         state = dict(state)
         if _fused_supported(cfg) or cfg.state_format == "sparse":

@@ -35,6 +35,16 @@ Both strategies verify exactness (per-block overflow + boundary-tie
 ambiguity) and fall back to a full ``lax.top_k`` under ``lax.cond`` on
 the rare adversarial inputs where the compacted candidate set cannot be
 proven to cover the true top-k.
+
+Density allocation (DESIGN.md §2.6, ``core/allocate.py``): with
+``SparsifierConfig.allocation`` in {"proportional", "adaptive"} the
+budget splits sum(k_l) == k across contiguous segments and the global
+trim becomes per-segment trims with per-segment thresholds — same two
+sweeps, same O(k) state tail, same k-pair wire format. Contract tests:
+tests/test_compress_pipeline.py (exact parity), tests/test_bucketed.py
+(bucketing invariance), tests/test_fused_configs.py (capability
+matrix), tests/test_state_traffic.py (2-traversal audit),
+tests/test_allocate.py (budget conservation + allocated parity).
 """
 from repro.kernels.compress.dispatch import (  # noqa: F401
     CompressDispatch,

@@ -82,7 +82,14 @@ def _fused_reason(cfg) -> str:
 
 
 def dispatch(cfg) -> CompressDispatch:
-    """Execution-path decision for a SparsifierConfig (DESIGN.md §2.5)."""
+    """Execution-path decision for a SparsifierConfig (DESIGN.md §2.5).
+
+    Pure python over static config fields (trace-free, O(1)); the
+    contract rows are pinned by tests/test_fused_configs.py::
+    TestDispatchTable. ``cfg.allocation`` does not change the path — both
+    pipelines serve every allocation mode for the kinds
+    allocate.ALLOCATED_KINDS (allocate.check_allocation raises for the
+    rest; DESIGN.md §2.6)."""
     reason = _fused_reason(cfg)
     if not reason:
         exact = cfg.kind == "randk" or cfg.selector == "exact"
@@ -111,7 +118,11 @@ def packed_len(cfg, j: int) -> int:
     """Length of the packed (values, indices) arrays compress emits for
     this config — k for exact-count selection, hist_capacity(k, j) for
     the fused histogram selector (tail slots inert-padded). This is the
-    per-worker unit the sparse all-gather moves."""
+    per-worker unit the sparse all-gather moves: (packed_len,) fp32-or-
+    wire_dtype values + (packed_len,) uint32 indices. Density allocation
+    (DESIGN.md §2.6) never changes it — every mode conserves
+    sum(k_l) == k, so the wire format is allocation-invariant
+    (tests/test_allocate.py::TestSyncGradient pins this)."""
     from repro.core.sparsify import resolve_k
     k = resolve_k(cfg, j)
     d = dispatch(cfg)

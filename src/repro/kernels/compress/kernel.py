@@ -163,6 +163,9 @@ def threshold_from_hist(hist: jnp.ndarray, target) -> jnp.ndarray:
 
     Guarantees count(|score| >= tau) >= target (0 when target exceeds the
     histogram mass, which routes the caller to the exact fallback).
+    ``target`` may be traced — the allocated per-segment path (DESIGN.md
+    §2.6) derives each segment's OWN tau from its sweep-1 histogram at a
+    per-segment target, instead of one merged-histogram global tau.
     """
     from repro.core.select import hist_tail_bin
     b = hist_tail_bin(hist, target)

@@ -29,6 +29,14 @@ is on the COMMUNICATION side (core.aggregate chunks the packed pairs so
 gather b+1 runs concurrently with scatter-add b), not compression
 hidden behind collectives.
 
+With ``allocation != "global"`` (DESIGN.md §2.6) the sweeps run per
+SEGMENT (the allocation partition — layer-aligned when the caller
+passes TreeFlattener bounds) instead of per bucket, each segment gets
+its own threshold/provisioning sized for its cap, and the global trim
+becomes per-segment trims + one O(sum(caps)) pack; sum(k_l) == k keeps
+the packed output exactly k pairs. Bucketing continues to govern only
+the comm-side chunking of those pairs (core.aggregate).
+
 The execution strategy is auto-selected from the JAX backend (the
 "interpret or not" decision the old kernels hardcoded): native Pallas
 kernels on TPU, fusion-friendly XLA lowering elsewhere, and
@@ -67,7 +75,10 @@ def sweep_plan(pipeline: str, comm_mode: str = "sparse") -> dict:
     gathers (mask/ghat/packing fix-ups) are not passes. Bucketing does
     not change the plan: num_buckets partial sweeps of J/num_buckets
     elements are one J-equivalent traversal (the audit weights them
-    fractionally, DESIGN.md §2.3).
+    fractionally, DESIGN.md §2.3). Density allocation doesn't either:
+    per-segment partial sweeps weight the same way, and the allocated
+    trim/pack/statistics are all O(sum(caps)) ~ O(k)
+    (tests/test_allocate.py::TestAllocatedSweepCount).
     """
     if pipeline == "reference":
         # score chain reads (g, err, a_prev, g_agg_prev, s_prev) + writes
@@ -114,6 +125,37 @@ def _sweep1_xla(kind, g, err_prev, c, *, momentum, mom):
     return a, a * c, mom_out
 
 
+def _sweep1_slice(kind, g, err_prev, c, off, size, *, momentum, mom,
+                  interpret):
+    """One padded-slice sweep-1 launch, shared by the bucketed global
+    path and the allocated per-segment path. Returns (a (size,),
+    score_padded, mom (size,)|None, hist) with the bin-0 padding
+    contribution already corrected out of the histogram."""
+    dgc = kind == "dgc"
+    j_pad = -(-size // pk.BLOCK) * pk.BLOCK
+    pad = lambda x: jnp.pad(
+        x[off:off + size].astype(jnp.float32), (0, j_pad - size))
+    a_p, score_p, mom_p, _amax, hist = pk.sweep1_pallas(
+        pad(g), pad(err_prev), c,
+        mode=("dgc" if dgc else "plain"), momentum=momentum,
+        mom=None if mom is None else pad(mom), interpret=interpret)
+    # padding contributed (j_pad - size) zero keys to bin 0
+    return (a_p[:size], score_p, mom_p[:size] if dgc else None,
+            hist.at[0].add(-(j_pad - size)))
+
+
+def _sweep2_slice(score_p, tau, off, size, maxpb: int, interpret):
+    """One slice sweep-2 compaction (shared like _sweep1_slice): kills
+    slice-local padding slots BEFORE the global-offset shift (they must
+    not alias the next slice's index range) and reports ok iff no block
+    overflowed its maxpb candidate slots. Returns (cand_keys,
+    cand_idx_global, ok)."""
+    _mask_t, ck, ci, cnts = pk.sweep2_pallas(
+        score_p, tau, maxpb=maxpb, interpret=interpret, want_mask=False)
+    ck = jnp.where(ci < size, ck, -jnp.inf)
+    return ck, ci + jnp.uint32(off), jnp.max(cnts) <= maxpb
+
+
 def _candidates_pallas(kind, g, err_prev, c, step, *, k: int,
                        regtopk: bool, momentum: float, mom, interpret: bool,
                        bounds):
@@ -129,19 +171,14 @@ def _candidates_pallas(kind, g, err_prev, c, step, *, k: int,
     dgc = kind == "dgc"
     a_parts, score_parts, mom_parts, hists = [], [], [], []
     for off, size in bounds:
-        j_pad = -(-size // pk.BLOCK) * pk.BLOCK
-        pad = lambda x: jnp.pad(
-            x[off:off + size].astype(jnp.float32), (0, j_pad - size))
-        a_p, score_p, mom_p, _amax, hist = pk.sweep1_pallas(
-            pad(g), pad(err_prev), c,
-            mode=("dgc" if dgc else "plain"), momentum=momentum,
-            mom=None if mom is None else pad(mom), interpret=interpret)
-        # padding contributed (j_pad - size) zero keys to bin 0
-        hists.append(hist.at[0].add(-(j_pad - size)))
-        a_parts.append(a_p[:size])
+        a_p, score_p, mom_p, hist = _sweep1_slice(
+            kind, g, err_prev, c, off, size, momentum=momentum, mom=mom,
+            interpret=interpret)
+        hists.append(hist)
+        a_parts.append(a_p)
         score_parts.append(score_p)
         if dgc:
-            mom_parts.append(mom_p[:size])
+            mom_parts.append(mom_p)
     # margin k: REGTOP-k support corrections may drop <=k entries below
     # tau without breaking top-k coverage of the candidates
     target = k + jnp.where(jnp.logical_and(regtopk, step > 0), k, 0)
@@ -151,14 +188,11 @@ def _candidates_pallas(kind, g, err_prev, c, step, *, k: int,
     maxpb = int(min(pk.BLOCK, max(32, -(-8 * k * pk.BLOCK // j))))
     ck_parts, ci_parts, oks = [], [], []
     for (off, size), score_p in zip(bounds, score_parts):
-        _mask_t, ck, ci, cnts = pk.sweep2_pallas(
-            score_p, tau, maxpb=maxpb, interpret=interpret, want_mask=False)
-        # bucket-local padding slots must not alias the next bucket's
-        # index range: kill them BEFORE the global-offset shift
-        ck = jnp.where(ci < size, ck, -jnp.inf)
-        ci_parts.append(ci + jnp.uint32(off))
+        ck, ci, ok_b = _sweep2_slice(score_p, tau, off, size, maxpb,
+                                     interpret)
+        ci_parts.append(ci)
         ck_parts.append(ck)
-        oks.append(jnp.max(cnts) <= maxpb)
+        oks.append(ok_b)
     producer_ok = oks[0]
     for ok_b in oks[1:]:
         producer_ok = jnp.logical_and(producer_ok, ok_b)
@@ -207,21 +241,33 @@ def _candidates_xla(kind, g, err_prev, c, *, k: int, momentum: float,
 
 
 def _fused_randk(g, err_prev, *, k: int, key, want_ghat: bool,
-                 ef_dtype) -> dict:
+                 ef_dtype, allocation: str = "global",
+                 seg_bounds=None) -> dict:
     """Fused RANDOM-k: selection is score-free, so the whole step is ONE
     elementwise sweep (the err_prev + g stream) plus O(k) random gathers
     and the O(k) scatter-zero state write — no sweep 2, no histogram, no
     trim. The elementwise form is optimal on every backend (XLA fuses
     it; a Pallas grid would add nothing), so all strategies share it.
     Index stream is identical to the reference randk's (both call
-    select.randk_indices on the same key)."""
+    select.randk_indices — or, for allocation != "global", the shared
+    per-segment sampler allocate.randk_allocated_indices — on the same
+    key). Allocated randk draws a uniform k_l-subset per segment with
+    the PROPORTIONAL counts (score-free selection has no statistic for
+    "adaptive" to adapt to; the degrade is documented, DESIGN.md §2.6)."""
     from repro.core import bigvec
     from repro.core.select import randk_indices
     assert key is not None, "randk needs a PRNG key"
     j = g.shape[0]
     a, _, _ = _sweep1_xla("randk", g, err_prev, jnp.float32(1.0),
                           momentum=0.0, mom=None)
-    idx = randk_indices(key, j, k)
+    if allocation != "global":
+        from repro.core import allocate
+        bounds = seg_bounds or allocate.segment_bounds(
+            j, allocate.DEFAULT_SEGMENTS)
+        counts = allocate.proportional_counts(k, [sz for _, sz in bounds])
+        idx = allocate.randk_allocated_indices(key, bounds, counts)
+    else:
+        idx = randk_indices(key, j, k)
     # gather before the scatter-zero: a's buffer is read-complete when
     # the O(k) state write runs, so it updates in place
     values = bigvec.gather(a, idx)
@@ -234,6 +280,291 @@ def _fused_randk(g, err_prev, *, k: int, key, want_ghat: bool,
             "tau": None}
 
 
+def _seg_candidates_pallas(kind, g, err_prev, c, step, *, provs, k: int,
+                           regtopk: bool, momentum: float, mom,
+                           interpret: bool, bounds):
+    """Per-SEGMENT Pallas sweeps for allocation != "global" (DESIGN.md
+    §2.6): unlike the bucketed global path (one merged-histogram tau),
+    each segment's sweep-1 histogram picks its OWN threshold at target
+    provs[l] (the segment's provisioning budget — its static count for
+    proportional, its cap for adaptive — plus the REGTOP-k
+    support-correction margin), so the segment's candidates cover its
+    own top-provs[l] regardless of other segments' magnitudes — the
+    coverage the per-segment trim needs. Candidate parts stay SEPARATE
+    (the trim is per segment). Returns (a, mom_out, ck_parts, ci_parts,
+    ok_parts)."""
+    dgc = kind == "dgc"
+    a_parts, mom_parts = [], []
+    ck_parts, ci_parts, ok_parts = [], [], []
+    for pos, (off, size) in enumerate(bounds):
+        a_p, score_p, mom_p, hist = _sweep1_slice(
+            kind, g, err_prev, c, off, size, momentum=momentum, mom=mom,
+            interpret=interpret)
+        # support corrections may drop <= min(k, size) in-segment entries
+        # below tau without breaking coverage of the segment's top-prov
+        target = provs[pos] + jnp.where(
+            jnp.logical_and(regtopk, step > 0), int(min(k, size)), 0)
+        tau = pk.threshold_from_hist(hist, target)
+        maxpb = int(min(pk.BLOCK,
+                        max(32, -(-8 * provs[pos] * pk.BLOCK // size))))
+        ck, ci, ok_b = _sweep2_slice(score_p, tau, off, size, maxpb,
+                                     interpret)
+        ck_parts.append(ck)
+        ci_parts.append(ci)
+        ok_parts.append(ok_b)
+        a_parts.append(a_p)
+        if dgc:
+            mom_parts.append(mom_p)
+    a = a_parts[0] if len(bounds) == 1 else jnp.concatenate(a_parts)
+    mom_out = None
+    if dgc:
+        mom_out = (mom_parts[0] if len(bounds) == 1
+                   else jnp.concatenate(mom_parts))
+    return a, mom_out, ck_parts, ci_parts, ok_parts
+
+
+def _seg_candidates_xla(kind, g, err_prev, c, *, provs, slack, momentum,
+                        mom, bounds):
+    """Per-SEGMENT XLA candidate compaction for allocation != "global":
+    sweep 1 stays one fused elementwise pass; each segment's per-row
+    top-W compaction is provisioned for ITS budget (provs[l] over the
+    segment length — per-segment density, not global): the static
+    counts for proportional (the realized selection, same 4x slack as
+    the global path), the cap for adaptive (an adaptive segment may
+    hold up to cap_l of the budget however the other segments score —
+    at reduced slack, since the cap already embeds the clip headroom).
+    Candidate parts stay separate; per-segment (full_cover, row_min)
+    witnesses are checked against the segment's OWN realized threshold
+    in the trim."""
+    a, score, mom_out = _sweep1_xla(kind, g, err_prev, c,
+                                    momentum=momentum, mom=mom)
+    if kind != "dgc":
+        mom_out = None
+    keys = jnp.abs(score)
+    ck_parts, ci_parts, wit_parts = [], [], []
+    for pos, (off, size) in enumerate(bounds):
+        kb = px.pad_keys(keys[off:off + size])
+        cv, ci, row_min, full_cover = px.candidates_xla(kb, provs[pos],
+                                                        slack=slack)
+        ck_parts.append(cv)
+        ci_parts.append(ci + jnp.uint32(off))
+        wit_parts.append((full_cover, row_min))
+    return a, mom_out, ck_parts, ci_parts, wit_parts
+
+
+def _fused_allocated(kind, g, err_prev, step, *, k: int, omega, mu, Q,
+                     momentum, mom, idx_prev, a_prev_sel, g_prev_sel,
+                     want_ghat: bool, strategy: str, allocation: str,
+                     seg_bounds, ef_dtype) -> dict:
+    """Fused compress step with per-segment budget allocation
+    (allocation in {"proportional", "adaptive"}, DESIGN.md §2.6).
+
+    Same two-sweep structure and O(k) state tail as the global exact
+    path; what changes is the trim: the global O(cand) exact-k trim is
+    replaced by PER-SEGMENT trims (top-cap_l candidates ranked, leading
+    k_l live) plus one O(sum(caps)) pack that keeps the output at
+    exactly k (values, indices) pairs — sum(k_l) == k, so the packed
+    wire format (and sparse-comm bytes) is unchanged. Adaptive k_l
+    comes from per-segment top-mass statistics of the CORRECTED ranked
+    candidate pool (support corrections applied first, so the sums
+    equal allocate.dense_segment_moments bitwise when the covers hold;
+    O(segments * cap log cap), no extra O(J) traversal — audit-gated at
+    2.0 sweeps). Exactness witnesses are per segment (coverage vs the
+    segment's own realized threshold — and, for adaptive, vs the ranked
+    top-cap the statistics were summed over — REGTOP-k boundary-tie
+    ambiguity, candidate-capacity overflow); any failure takes the
+    lax.cond fallback to dense per-segment selection with identical
+    semantics, INCLUDING densely recomputed adaptive counts — the
+    fallback branch IS the reference pipeline's allocated selector
+    (allocate.reference_allocated_select), which is what
+    tests/test_allocate.py::TestAllocatedParity (incl. the regtopk
+    stress seeds) pins."""
+    from repro.core import allocate, bigvec
+    j = g.shape[0]
+    bounds = seg_bounds or allocate.segment_bounds(
+        j, allocate.DEFAULT_SEGMENTS)
+    sizes = [sz for _, sz in bounds]
+    caps = allocate.segment_caps(k, sizes)
+    # candidate provisioning per segment: proportional realizes its
+    # STATIC counts, so provision exactly those at the global path's 4x
+    # row slack; adaptive may tilt any segment up to its cap, so
+    # provision the cap — at 2x slack, since the cap already embeds the
+    # ADAPTIVE_CLIP**2 headroom over the typically-realized count (the
+    # row_min witness + fallback still guard adversarial concentration)
+    if allocation == "proportional":
+        counts_static = allocate.proportional_counts(k, sizes)
+        provs = [max(1, ci) for ci in counts_static]
+        trim_caps = provs
+        slack = 4.0
+    else:
+        counts_static = None
+        provs = caps
+        trim_caps = caps
+        slack = 2.0
+    regtopk = kind == "regtopk"
+    if regtopk:
+        c = jnp.where(step == 0, jnp.float32(1.0),
+                      jnp.tanh(jnp.abs(1.0 + jnp.float32(Q)) / mu))
+    else:
+        c = jnp.float32(1.0)
+
+    if strategy in ("pallas", "pallas_interpret"):
+        interpret = strategy == "pallas_interpret" or auto_interpret()
+        a, mom_out, ck_parts, ci_parts, ok_parts = _seg_candidates_pallas(
+            kind, g, err_prev, c, step, provs=provs, k=k, regtopk=regtopk,
+            momentum=momentum, mom=mom, interpret=interpret, bounds=bounds)
+        wit_parts = None
+        ok = ok_parts[0]
+        for ok_b in ok_parts[1:]:
+            ok = jnp.logical_and(ok, ok_b)
+    else:
+        a, mom_out, ck_parts, ci_parts, wit_parts = _seg_candidates_xla(
+            kind, g, err_prev, c, provs=provs, slack=slack,
+            momentum=momentum, mom=mom, bounds=bounds)
+        ok = jnp.asarray(True)
+
+    # REGTOP-k support corrections, candidate space, routed per segment:
+    # disable support members' uncorrected candidate keys everywhere;
+    # append every support entry to ITS segment with the corrected key
+    # (masked -inf elsewhere). Done BEFORE the adaptive statistics —
+    # they must see the CORRECTED pool, exactly like the dense oracle
+    # (allocate.dense_segment_moments over the corrected score).
+    skey = None
+    if regtopk:
+        skey = _posterior_keys(bigvec.gather(a, idx_prev), a_prev_sel,
+                               g_prev_sel, step, omega=omega, mu=mu)
+        idx_sorted = jnp.sort(idx_prev.astype(jnp.uint32))
+        for pos in range(len(bounds)):
+            ci_l = ci_parts[pos]
+            p = jnp.minimum(jnp.searchsorted(idx_sorted, ci_l),
+                            idx_sorted.shape[0] - 1)
+            hit = (idx_sorted[p] == ci_l) & (step > 0)
+            ck_parts[pos] = jnp.where(hit, -jnp.inf, ck_parts[pos])
+
+    # phase A, per segment: corrected candidate pool, rank the
+    # top-trim_cap_l (counts-independent), gather the signed a-values
+    # BEFORE the cond (in-place err scatter), and — for adaptive — the
+    # top-cap mass moments from the RANKED CORRECTED keys, which equal
+    # allocate.dense_segment_moments bitwise whenever the cover holds
+    # (same sorted values, same summation order)
+    seg_trims, ms = [], []
+    for pos, ((off, size), cap) in enumerate(zip(bounds, trim_caps)):
+        allk, alli = ck_parts[pos], ci_parts[pos]
+        if regtopk:
+            in_seg = ((idx_prev >= jnp.uint32(off))
+                      & (idx_prev < jnp.uint32(off + size)))
+            allk = jnp.concatenate([allk,
+                                    jnp.where(in_seg, skey, -jnp.inf)])
+            alli = jnp.concatenate([alli, idx_prev.astype(jnp.uint32)])
+        eff = max(1, int(min(cap, allk.shape[0])))
+        tv, tsel = jax.lax.top_k(allk, eff)
+        allv = bigvec.gather(a, jnp.minimum(alli, jnp.uint32(j - 1)))
+        seg_trims.append((allk, tv, alli[tsel], allv[tsel], eff))
+        if allocation == "adaptive":
+            ms.append(jnp.sum(jnp.where(tv > -jnp.inf, tv * tv, 0.0)))
+            if eff < cap:
+                # ranked pool shorter than the statistic's window: the
+                # top-cap mass cannot be complete — route to fallback
+                ok = ok & jnp.asarray(False)
+    if allocation == "adaptive":
+        counts = allocate.adaptive_counts(k, sizes, jnp.stack(ms),
+                                          caps=caps)
+    else:
+        counts = jnp.asarray(counts_static, jnp.int32)
+
+    # phase B, per segment: leading counts[l] of the ranking are live;
+    # witnesses guard the selection cover AND (adaptive) the statistic's
+    # top-cap cover, so a truncated cover can never silently shift k_l
+    pk_parts, pi_parts, pv_parts = [], [], []
+    for pos, (allk, tv, isel, vsel, eff) in enumerate(seg_trims):
+        kl = counts[pos]
+        has = kl > 0
+        live = jnp.arange(eff, dtype=jnp.int32) < kl
+        kth = tv[jnp.clip(kl - 1, 0, eff - 1)]
+        ok = ok & jnp.where(has, kth > -jnp.inf, True) & (kl <= eff)
+        if wit_parts is not None:
+            full_cover, row_min = wit_parts[pos]
+            tau_l = jnp.where(has, kth, jnp.inf)
+            if allocation == "adaptive":
+                # stricter: no row may hide an entry that belongs in the
+                # ranked top-eff the moments were summed over
+                tau_l = jnp.minimum(tau_l, tv[eff - 1])
+            ok = ok & (full_cover | (jnp.max(row_min) < tau_l))
+        if regtopk:
+            # boundary tie involving a corrected support key (appended
+            # out of index order): same ambiguity rule as the global
+            # exact trim, per segment
+            n_gt = jnp.sum((allk > kth).astype(jnp.int32))
+            n_eq = jnp.sum((allk == kth).astype(jnp.int32))
+            support_tie = jnp.any(allk[-idx_prev.shape[0]:] == kth)
+            ok = ok & jnp.where(has, (n_eq == (kl - n_gt)) | ~support_tie,
+                                True)
+        pk_parts.append(jnp.where(live, tv, -jnp.inf))
+        pi_parts.append(isel)
+        pv_parts.append(vsel)
+    # pack: one O(sum(caps)) top-k over the live-masked union -> exactly
+    # the sum(k_l) == k live entries, ordered by key desc (ties resolve
+    # segment-major then index asc — allocated_select_dense's order)
+    packk = jnp.concatenate(pk_parts)
+    packi = jnp.concatenate(pi_parts)
+    packv = jnp.concatenate(pv_parts)
+    _tvg, sel = jax.lax.top_k(packk, k)
+    idx_fast = packi[sel]
+    val_fast = packv[sel]
+
+    def _gather_inputs(idx):
+        # fallback-only: recompute a[idx] from the function parameters
+        # (bitwise identical; keeps `a` read-complete before the cond)
+        gi = bigvec.gather(g, idx).astype(jnp.float32)
+        ei = bigvec.gather(err_prev, idx).astype(jnp.float32)
+        if kind == "dgc":
+            return ei + (momentum * bigvec.gather(mom, idx).astype(
+                jnp.float32) + gi)
+        return ei + gi
+
+    def _fast(_):
+        return idx_fast, val_fast
+
+    def _fallback(_):
+        a2, score2, _ = _sweep1_xla(kind, g, err_prev, c,
+                                    momentum=momentum, mom=mom)
+        keys_d = jnp.abs(score2)
+        if regtopk:
+            base = bigvec.gather(keys_d, idx_prev)
+            fix = jnp.where(step > 0, skey, base)
+            keys_d = bigvec.scatter_set(keys_d, idx_prev, fix, mode="drop")
+        if allocation == "adaptive":
+            # dense statistics, not the (witness-failed) candidate ones:
+            # this branch IS the reference allocated selector, so fused
+            # output equals the reference pipeline's even when covers
+            # fail (tests/test_allocate.py::TestAllocatedParity stress)
+            counts_d = allocate.adaptive_counts(
+                k, sizes,
+                allocate.dense_segment_moments(keys_d, bounds, caps),
+                caps=caps)
+        else:
+            counts_d = counts
+        idx_d, _kv = allocate.allocated_select_dense(keys_d, bounds, caps,
+                                                     counts_d, k)
+        return idx_d, _gather_inputs(idx_d)
+
+    idx_k, values = jax.lax.cond(ok, _fast, _fallback, operand=None)
+    # O(k) state tail, identical to the global exact path
+    dt = jnp.dtype(ef_dtype)
+    err = bigvec.scatter_set(a.astype(dt), idx_k, 0.0, mode="drop")
+    if kind == "dgc":
+        mom_out = bigvec.scatter_set(mom_out.astype(dt), idx_k, 0.0,
+                                     mode="drop")
+    ghat = None
+    if want_ghat:
+        ghat = bigvec.scatter_set(jnp.zeros((j,), jnp.float32),
+                                  idx_k, values)
+    return {"err": err, "values": values,
+            "indices": idx_k.astype(jnp.uint32), "ghat": ghat,
+            "mom": mom_out, "count": jnp.asarray(k, jnp.int32),
+            "tau": None}
+
+
 def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
                           omega=1.0, mu: float = 0.1, Q: float = 0.0,
                           momentum: float = 0.9, mom=None,
@@ -241,7 +572,9 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
                           nsel_prev=None, want_ghat: bool = True,
                           strategy: Optional[str] = None,
                           num_buckets: int = 1, selector: str = "exact",
-                          ef_dtype="float32", key=None) -> dict:
+                          ef_dtype="float32", key=None,
+                          allocation: str = "global",
+                          seg_bounds=None) -> dict:
     """One fused compression step. kind in {"topk", "dgc", "regtopk",
     "randk", "thresholdk"} (thresholdk shares the plain-score path with
     topk; randk needs ``key`` and ignores ``selector``).
@@ -274,6 +607,13 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
       hist_capacity(k, j)-sized; ``count`` in [k, capacity] entries are
       live, the tail is inert (value 0.0 at index 0). ``tau`` is the
       realized threshold.
+    - allocation in {"proportional", "adaptive"} (DESIGN.md §2.6,
+      exact selector only — allocate.check_allocation): the budget
+      splits sum(k_l) == k over ``seg_bounds`` (static [(offset, size),
+      ...]; near-equal DEFAULT_SEGMENTS cut when None) and the global
+      trim becomes per-segment trims + one O(sum(caps)) pack — output
+      shapes, the O(k) state tail, and the wire format are unchanged
+      (still exactly k pairs).
     """
     from repro.core import bigvec
     strategy = strategy or default_strategy()
@@ -281,7 +621,17 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
     k = int(min(k, j))
     if kind == "randk":
         return _fused_randk(g, err_prev, k=k, key=key,
-                            want_ghat=want_ghat, ef_dtype=ef_dtype)
+                            want_ghat=want_ghat, ef_dtype=ef_dtype,
+                            allocation=allocation, seg_bounds=seg_bounds)
+    if allocation != "global":
+        # exact-count selection only (check_allocation gates upstream)
+        assert selector == "exact", (allocation, selector)
+        return _fused_allocated(
+            kind, g, err_prev, step, k=k, omega=omega, mu=mu, Q=Q,
+            momentum=momentum, mom=mom, idx_prev=idx_prev,
+            a_prev_sel=a_prev_sel, g_prev_sel=g_prev_sel,
+            want_ghat=want_ghat, strategy=strategy, allocation=allocation,
+            seg_bounds=seg_bounds, ef_dtype=ef_dtype)
     hist = selector == "histogram"
     # static packed capacity; also the candidate-provisioning budget —
     # for exact selection kcap == k and everything below degenerates to

@@ -29,8 +29,15 @@ import jax.numpy as jnp
 CHUNK = 8192
 
 
-def row_shape(j_pad: int, k: int, density_len: int = 0) -> tuple:
+def row_shape(j_pad: int, k: int, density_len: int = 0,
+              slack: float = 4.0) -> tuple:
     """(rows, chunk, W) for the candidate sweep over a padded length.
+
+    ``slack`` scales W relative to the expected per-row share (default
+    4x — the historical provisioning; the allocated adaptive path passes
+    2x, since its per-segment cap already embeds the ADAPTIVE_CLIP**2
+    headroom over the typically-realized count and the row_min witness
+    + fallback guard the tail).
 
     ``density_len`` (default: j_pad) is the length the selection density
     k/density_len is measured over. The bucketed pipeline passes the
@@ -38,6 +45,12 @@ def row_shape(j_pad: int, k: int, density_len: int = 0) -> tuple:
     flat path's rows (4x the global-density share), so bucketing costs
     no extra candidate slots — row-level concentration beyond W is
     caught by the row_min witness and falls back, identically to flat.
+    The allocated per-segment path (DESIGN.md §2.6) instead passes its
+    per-segment cap as ``k`` with density_len=0: an adaptive segment may
+    hold up to cap_l of the budget regardless of global density, so its
+    rows are provisioned for the segment's own worst case (caps are
+    clipped to ~ADAPTIVE_CLIP**2 x the proportional share, keeping total
+    slots O(k)).
     """
     chunk = min(CHUNK, j_pad)
     rows = j_pad // chunk
@@ -48,7 +61,9 @@ def row_shape(j_pad: int, k: int, density_len: int = 0) -> tuple:
         w = min(chunk, k + 8)
     else:
         mean = k * chunk / dl
-        w = int(max(16, min(chunk, 8 * round(mean / 2))))   # ~4x mean, mult of 8
+        # ~slack x mean, multiple of 8 (slack=4 == the original
+        # 8 * round(mean / 2))
+        w = int(max(16, min(chunk, 8 * round(slack * mean / 8))))
         w = min(chunk, max(w, 16))      # tiny buckets: chunk itself can be < 16
     return rows, chunk, w
 
@@ -74,7 +89,8 @@ def pad_keys(keys: jnp.ndarray) -> jnp.ndarray:
         [keys, jnp.full((j_pad - j,), -jnp.inf, jnp.float32)])
 
 
-def candidates_xla(keys: jnp.ndarray, k: int, density_len: int = 0):
+def candidates_xla(keys: jnp.ndarray, k: int, density_len: int = 0,
+                   slack: float = 4.0):
     """Per-row top-W compaction of a padded key vector.
 
     keys: (j_pad,) non-negative scores (padding must be -inf or smaller
@@ -86,7 +102,7 @@ def candidates_xla(keys: jnp.ndarray, k: int, density_len: int = 0):
     ``density_len``: see row_shape (bucketed callers pass the global J).
     """
     j_pad = keys.shape[0]
-    rows, chunk, w = row_shape(j_pad, k, density_len)
+    rows, chunk, w = row_shape(j_pad, k, density_len, slack)
     cv, ci = jax.lax.top_k(keys.reshape(rows, chunk), w)
     gi = (jnp.arange(rows, dtype=jnp.uint32)[:, None] * jnp.uint32(chunk)
           + ci.astype(jnp.uint32))

@@ -1,6 +1,12 @@
 """Jit-friendly wrappers for the fused error-feedback Pallas kernels:
 padding to block multiples + interpret-mode selection (CPU validation runs
 the kernel body under interpret=True; on TPU it compiles natively).
+
+NB: these kernels fuse the score chain of the REFERENCE pipeline's
+DENSE REGTOP-k layout (a_prev / s_prev / g_agg_prev J-vectors,
+state_format="dense") — they are NOT part of the two-sweep fused
+pipeline, whose state retired those vectors for err_prev + the O(k)
+posterior (kernels/compress, DESIGN.md §2.2).
 """
 from __future__ import annotations
 

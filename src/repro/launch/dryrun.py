@@ -178,7 +178,8 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
                sparsity=0.001, comm="sparse", verbose=True,
                variant="", state_format="dense", ef_dtype="float32",
                pipeline="reference", num_buckets=1, selector="exact",
-               wire_dtype="float32", **cfg_overrides) -> dict:
+               wire_dtype="float32", allocation="global", num_segments=0,
+               **cfg_overrides) -> dict:
     shape = SHAPES[shape_name]
     cfg = get_config(arch)
     moe_over = {k[4:]: v for k, v in cfg_overrides.items()
@@ -200,6 +201,8 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
                                     mu=0.5, state_format=state_format,
                                     ef_dtype=ef_dtype, pipeline=pipeline,
                                     num_buckets=num_buckets,
+                                    allocation=allocation,
+                                    num_segments=num_segments,
                                     wire_dtype=wire_dtype),
         optimizer=OptimizerConfig(kind="adam", lr=1e-4),
         attn_override=attn_override,
@@ -245,6 +248,7 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
         "kind": kind, "attn_override": attn_override,
         "num_buckets": num_buckets_resolved,
         "num_buckets_requested": num_buckets,
+        "allocation": allocation,
         "params": int(n_params), "active_params": int(n_active),
         "flops": float(cost.get("flops", -1)),
         "bytes_accessed": float(cost.get("bytes accessed", -1)),
@@ -302,6 +306,16 @@ def main():
                          "the resolved value)")
     ap.add_argument("--selector", default="exact",
                     choices=["exact", "histogram"])
+    ap.add_argument("--allocation", default="global",
+                    choices=["global", "proportional", "adaptive"],
+                    help="density allocation (DESIGN.md §2.6): split of "
+                         "the budget k across segments before selection; "
+                         "sum(k_l) == k so sparse wire bytes (and the "
+                         "record's sparse_gather_wire_bytes) are "
+                         "allocation-invariant")
+    ap.add_argument("--num-segments", type=int, default=0,
+                    help="segment count for --allocation != global "
+                         "(0: follow --num-buckets, else 8)")
     ap.add_argument("--wire-dtype", default="float32",
                     choices=["float32", "bfloat16"],
                     help="wire dtype of the packed VALUES in "
@@ -347,7 +361,8 @@ def main():
                     variant=args.variant, state_format=args.state_format,
                     ef_dtype=args.ef_dtype, pipeline=args.pipeline,
                     num_buckets=args.num_buckets, selector=args.selector,
-                    wire_dtype=args.wire_dtype, **overrides))
+                    wire_dtype=args.wire_dtype, allocation=args.allocation,
+                    num_segments=args.num_segments, **overrides))
             except Exception as e:  # noqa: BLE001 — report every combo
                 import traceback
                 traceback.print_exc()

@@ -38,6 +38,22 @@ def parse_args(argv=None):
                          "1 disables bucketing; 0 auto-tunes the count from "
                          "the sparse-collective payload vs the interconnect "
                          "latency floor (roofline.analysis.auto_num_buckets)")
+    ap.add_argument("--allocation", default="global",
+                    choices=["global", "proportional", "adaptive"],
+                    help="density allocation (DESIGN.md §2.6): how the "
+                         "global budget k splits across layer-aligned "
+                         "segments of the flat gradient before selection. "
+                         "global = one flat top-k (the paper, default); "
+                         "proportional = k_l ~ segment size; adaptive = "
+                         "k_l from per-segment second-moment statistics "
+                         "(Adaptive Top-K style). Every mode conserves "
+                         "sum(k_l) == k, so sparse-comm bytes are "
+                         "unchanged. Requires --selector exact")
+    ap.add_argument("--num-segments", type=int, default=0,
+                    help="segment count for --allocation != global: 0 "
+                         "follows --num-buckets (or 8 for the flat "
+                         "schedule); the train step aligns the cut to "
+                         "parameter-leaf boundaries")
     ap.add_argument("--selector", default="exact",
                     choices=["exact", "histogram"],
                     help="top-k selection rule: exact lax.top_k semantics, "
@@ -95,6 +111,8 @@ def main(argv=None):
                                     pipeline=args.pipeline,
                                     selector=args.selector,
                                     num_buckets=args.num_buckets,
+                                    allocation=args.allocation,
+                                    num_segments=args.num_segments,
                                     wire_dtype=args.wire_dtype),
         optimizer=OptimizerConfig(kind=args.optimizer, lr=args.lr),
         seed=args.seed, steps=args.steps,

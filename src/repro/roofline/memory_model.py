@@ -65,7 +65,14 @@ def per_device_memory(run: RunConfig, *, tp=16, dp=16, kind="train",
     rewrites (err_prev, DGC's mom, the reference layouts' err/a_prev/
     s_prev) are then transiently double-buffered
     (MemoryBreakdown.state_double_buffer). launch/train.py donates
-    (params, opt, ef), so the default matches production."""
+    (params, opt, ef), so the default matches production.
+
+    Density allocation (DESIGN.md §2.6) is memory-invariant at this
+    model's resolution: every mode keeps the same J-sized state and
+    k-sized packed pairs (sum(k_l) == k), adding only O(num_segments)
+    counts and O(sum(caps)) ~ O(k) trim transients — both below the
+    J-scale terms modeled here, so no ``sp.allocation`` branch exists
+    on purpose."""
     cfg = run.model
     sp = run.sparsifier
     state_format = state_format or sp.state_format

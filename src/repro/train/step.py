@@ -181,6 +181,18 @@ def build_train_step(run: RunConfig, mesh, pal: Parallel):
     dpaxes = pal.data_axes
     window = cfg.window if run.attn_override == "sliding" else 0
 
+    # density allocation (DESIGN.md §2.6): the train step owns the leaf
+    # layout, so it pins LAYER-ALIGNED segment bounds (grouped leaves,
+    # never cutting inside a parameter) instead of the near-equal
+    # default cut sync_gradient would fall back to. Static python ints
+    # — safe to close over under shard_map/jit.
+    seg_bounds = None
+    if sp.allocation != "global":
+        from repro.core import allocate
+        allocate.check_allocation(sp)      # fail at build, not at trace
+        seg_bounds = allocate.layer_segments(
+            flat.layer_bounds(), allocate.resolve_num_segments(sp, flat.total))
+
     # duplicate-weights: replicated leaves appear in every model-rank's flat
     # vector; weight 1/tp in global-norm computations.
     dup = jnp.concatenate([
@@ -211,7 +223,8 @@ def build_train_step(run: RunConfig, mesh, pal: Parallel):
         g = flat.flatten(grads)
 
         key = jax.random.fold_in(key, _dp_index(dpaxes))
-        g_agg, ef_new = agg.sync_gradient(sp, ef_state, g, dpaxes, key=key)
+        g_agg, ef_new = agg.sync_gradient(sp, ef_state, g, dpaxes, key=key,
+                                          seg_bounds=seg_bounds)
 
         # ZeRO-1 slice update
         r = _dp_index(dpaxes)

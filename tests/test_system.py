@@ -35,6 +35,20 @@ def test_train_launcher_smoke(tmp_path):
     assert any(f.endswith(".params.npz") for f in os.listdir(tmp_path / "ck"))
 
 
+def test_train_launcher_allocation_smoke(tmp_path):
+    """Convergence smoke for density allocation (DESIGN.md §2.6): the
+    fused pipeline with per-layer adaptive budgets must still overfit
+    the fixed batch, and the launcher must thread --allocation through."""
+    out = run_cmd(["-m", "repro.launch.train", "--arch", "stablelm-3b",
+                   "--smoke", "--steps", "8", "--data", "2", "--model", "1",
+                   "--devices", "2", "--sparsifier", "regtopk",
+                   "--comm", "sparse", "--pipeline", "fused",
+                   "--allocation", "adaptive", "--num-segments", "6",
+                   "--log-every", "4", "--fixed-batch"])
+    losses = [float(m) for m in re.findall(r"loss (\d+\.\d+)", out)]
+    assert losses and losses[-1] < losses[0]
+
+
 def test_dryrun_tiny_mesh(tmp_path):
     out_json = str(tmp_path / "dr.json")
     out = run_cmd(["-m", "repro.launch.dryrun", "--arch", "xlstm-125m",
