@@ -67,9 +67,43 @@ def _migrate_ef_leaf(data, pstr: str):
         "(a_prev, s_prev) pair to migrate it from")
 
 
+def _fit_ef_worker_dims(leaf, want_shape, pstr: str):
+    """Fit a saved EF leaf to the CURRENT worker layout (DESIGN.md §2.7).
+
+    EF vectors are stored globally as (DP, TP, J_local). An elastic
+    restart may resume with a different data-parallel extent (workers
+    lost permanently, or replacements joined): when only the leading
+    worker dims disagree and the trailing per-rank dims match, surviving
+    workers keep their rows and REJOINED workers start with zero
+    error-feedback memory — the same semantics as a fresh worker (it
+    observed nothing while absent; its residual belongs to a dead
+    incarnation). A trailing-dim mismatch means the model itself changed
+    and stays a hard error.
+    """
+    if tuple(leaf.shape) == tuple(want_shape):
+        return leaf
+    if (leaf.ndim == len(want_shape) and leaf.ndim >= 3
+            and tuple(leaf.shape[2:]) == tuple(want_shape[2:])):
+        out = np.zeros(want_shape, leaf.dtype)
+        d = min(leaf.shape[0], want_shape[0])
+        t = min(leaf.shape[1], want_shape[1])
+        out[:d, :t] = leaf[:d, :t]
+        return out
+    raise ValueError(
+        f"checkpoint EF leaf {pstr!r} has shape {tuple(leaf.shape)} but the "
+        f"run wants {tuple(want_shape)}; only the leading (DP, TP) worker "
+        "dims may differ (elastic resume) — trailing per-rank dims must "
+        "match")
+
+
 def restore_checkpoint(ckpt_dir: str, step: int, params, opt_state, ef_state,
                        shardings=None):
-    """Restore into the STRUCTURE of the given trees (values replaced)."""
+    """Restore into the STRUCTURE of the given trees (values replaced).
+
+    The EF tree additionally tolerates a changed data-parallel worker
+    count (``_fit_ef_worker_dims``): rows of vanished workers are
+    dropped, rows of new workers are zero-initialized.
+    """
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
 
     def load(tree, fname, migrate_ef=False):
@@ -78,6 +112,10 @@ def restore_checkpoint(ckpt_dir: str, step: int, params, opt_state, ef_state,
         if migrate_ef:
             leaves = [_migrate_ef_leaf(data, jax.tree_util.keystr(p))
                       for p, _ in flat]
+            leaves = [l if getattr(w, "ndim", 0) < 3 else
+                      _fit_ef_worker_dims(l, np.shape(w),
+                                          jax.tree_util.keystr(p))
+                      for l, (p, w) in zip(leaves, flat)]
         else:
             leaves = [data[jax.tree_util.keystr(p)] for p, _ in flat]
         return jax.tree_util.tree_unflatten(

@@ -219,6 +219,21 @@ class SparsifierConfig:
     # the data-parallel worker count is known, deterministically, so 0 is
     # bit-identical to passing the resolved value manually).
     num_buckets: int = 1
+    # elastic aggregation (DESIGN.md §2.7): EF decay applied to a
+    # worker's err_prev (and dgc momentum) on steps it sits out of the
+    # sync (err' = err_decay * err). 1.0 freezes the state untouched;
+    # < 1.0 bleeds off stale error mass so a rejoining worker does not
+    # inject an exploded correction. Irrelevant (never applied) at full
+    # participation.
+    err_decay: float = 1.0
+    # combine rule for the sparse all-gather under partial
+    # participation: "mean" divides the summed dense vector by
+    # n_active (== today's sum/n at full participation, bit-identical
+    # when the participation mask is None/all-ones); "support" divides
+    # each coordinate by the count of workers that actually SELECTED
+    # it (rTop-k's estimation view), falling back to 0 where no worker
+    # selected.
+    combine: str = "mean"         # mean | support
 
 
 @dataclass(frozen=True)
@@ -271,6 +286,10 @@ class RunConfig:
     attn_override: str = ""       # e.g. "sliding" for long_500k on dense archs
     checkpoint_dir: str = ""
     checkpoint_every: int = 0
+    # fault-injection schedule spec (core/faults.py grammar: "iid:0.3",
+    # "bursty:period=16,outage=4,workers=1+3", "permanent:step=8",
+    # "" = always-on full participation).
+    fault_schedule: str = ""
 
 
 # ---------------------------------------------------------------------------

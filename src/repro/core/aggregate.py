@@ -74,7 +74,9 @@ def simulate_allreduce(ghat: jnp.ndarray, axes: AxisNames) -> jnp.ndarray:
 def sparse_allgather_combine(values: jnp.ndarray, indices: jnp.ndarray,
                              j: int, axes: AxisNames,
                              num_buckets: int = 1,
-                             wire_dtype: str = "float32") -> jnp.ndarray:
+                             wire_dtype: str = "float32",
+                             participate=None, count=None,
+                             combine: str = "mean") -> jnp.ndarray:
     """All-gather (k,) sparse contributions over `axes`; dense-combine locally.
 
     Every worker ends up with g_agg = (1/N) sum_n scatter(values_n, idx_n),
@@ -93,6 +95,17 @@ def sparse_allgather_combine(values: jnp.ndarray, indices: jnp.ndarray,
     indices) right before each chunk's all-gather and upcasts in the
     scatter-add combine: 6 wire bytes per pair instead of 8. Every rank
     applies the same cast, so g_agg stays rank-identical.
+
+    ``participate`` (DESIGN.md §2.7) is this rank's per-step liveness, a
+    traced () bool. The collective stays fixed-shape — a sitting-out
+    worker ships its (inert) payload like everyone else — but its slots
+    are routed out of range and dropped in the combine, and the
+    normalizer becomes the ACTIVE worker count. ``count`` marks the live
+    packed prefix (None = all k slots); one position test
+    ``p_w & (pos < count_w)`` handles histogram-capacity pads and
+    chunk-tail pads uniformly. ``combine="support"`` divides each
+    coordinate by the number of active workers that selected it instead
+    of by n_active (coordinates nobody selected stay 0).
     """
     if isinstance(axes, str):
         axes = (axes,)
@@ -111,19 +124,60 @@ def sparse_allgather_combine(values: jnp.ndarray, indices: jnp.ndarray,
     acc_dtype = values.dtype
     wire_dt = jnp.dtype(wire_dtype)
     dense = jnp.zeros((j,), acc_dtype)
+    if participate is None and combine == "mean":
+        for b in range(num_buckets):
+            vb = values[b * chunk:(b + 1) * chunk].astype(wire_dt)
+            ib = indices[b * chunk:(b + 1) * chunk]
+            for a in axes:
+                vb = jax.lax.all_gather(vb, a)     # stacks leading axis
+                ib = jax.lax.all_gather(ib, a)
+            dense = bigvec.scatter_add(dense, ib.reshape(-1),
+                                       vb.reshape(-1).astype(acc_dtype))
+        return dense / n
+    if combine not in ("mean", "support"):
+        raise ValueError(f"unknown combine={combine!r} (mean | support)")
+    # elastic path: two extra scalars per worker on the wire (liveness
+    # bit + live count) — the payload collectives are unchanged
+    p = (jnp.ones((), jnp.bool_) if participate is None
+         else jnp.asarray(participate, jnp.bool_).reshape(()))
+    cnt = (jnp.asarray(k if count is None else count, jnp.int32)
+           .reshape(()))
+    cnt = jnp.where(p, cnt, 0)
+    pall = p.astype(jnp.float32)
+    call = cnt
+    for a in axes:
+        pall = jax.lax.all_gather(pall, a)
+        call = jax.lax.all_gather(call, a)
+    pall = pall.reshape(-1) > 0.5                  # (n,) worker liveness
+    call = call.reshape(-1)                        # (n,) live prefix length
+    counts = jnp.zeros((j,), jnp.float32) if combine == "support" else None
     for b in range(num_buckets):
         vb = values[b * chunk:(b + 1) * chunk].astype(wire_dt)
         ib = indices[b * chunk:(b + 1) * chunk]
         for a in axes:
-            vb = jax.lax.all_gather(vb, a)     # stacks leading axis
+            vb = jax.lax.all_gather(vb, a)
             ib = jax.lax.all_gather(ib, a)
-        dense = bigvec.scatter_add(dense, ib.reshape(-1),
-                                   vb.reshape(-1).astype(acc_dtype))
-    return dense / n
+        pos = jnp.arange(b * chunk, (b + 1) * chunk, dtype=jnp.int32)
+        live = pall[:, None] & (pos[None, :] < call[:, None])   # (n, chunk)
+        il = bigvec.live_idx(ib.reshape(n, chunk), live, j).reshape(-1)
+        dense = bigvec.scatter_add(dense, il,
+                                   vb.reshape(-1).astype(acc_dtype),
+                                   mode="drop")
+        if counts is not None:
+            counts = bigvec.scatter_add(counts, il,
+                                        jnp.ones(il.shape, jnp.float32),
+                                        mode="drop")
+    if combine == "support":
+        return jnp.where(counts > 0,
+                         dense / jnp.maximum(counts, 1.0).astype(acc_dtype),
+                         jnp.zeros((), acc_dtype))
+    n_active = jnp.sum(pall.astype(jnp.float32))
+    return dense / jnp.maximum(n_active, 1.0).astype(acc_dtype)
 
 
 def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
-                  axes: AxisNames, key=None, seg_bounds=None):
+                  axes: AxisNames, key=None, seg_bounds=None,
+                  participate=None, with_stats: bool = False):
     """Full per-step gradient sync for one worker shard (inside shard_map).
 
     Returns (g_agg, new_state). `g` is this rank's flat local gradient
@@ -145,14 +199,45 @@ def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     same N*k*(4+wire_value_bytes) bytes in every mode
     (tests/test_allocate.py::TestSyncGradient). Unsupported combos
     raise here at trace time, never degrade silently.
+
+    ``participate`` (DESIGN.md §2.7) is this rank's per-step liveness, a
+    traced () bool — when False the rank ships an inert payload, its EF
+    memory decays by cfg.err_decay, and the combine averages over the
+    active set only. A rank whose packed payload turns non-finite
+    (NaN/Inf) is demoted to non-participant for the step BEFORE the
+    combine, so one poisoned worker cannot corrupt g_agg. With
+    ``with_stats=True`` a third return carries the realized health
+    counters {"n_active", "dropped_nonfinite"} (rank-identical psums).
     """
     if cfg.allocation != "global":
         from repro.core import allocate
         allocate.check_allocation(cfg)     # explicit trace-time error
-    if cfg.kind == "none":
-        g_agg = dense_allreduce(g.astype(jnp.dtype(cfg.ef_dtype)), axes)
-        return g_agg, {"step": state["step"] + 1}
+    p = None if participate is None else (
+        jnp.asarray(participate, jnp.bool_).reshape(()))
     n = _axis_size(axes)
+    zero = jnp.zeros((), jnp.float32)
+
+    def _ret(g_agg, new_state, p_eff, dropped_local):
+        if not with_stats:
+            return g_agg, new_state
+        if p_eff is None:
+            stats = {"n_active": jnp.float32(n), "dropped_nonfinite": zero}
+        else:
+            stats = {"n_active": jax.lax.psum(p_eff.astype(jnp.float32),
+                                              axes),
+                     "dropped_nonfinite": jax.lax.psum(dropped_local, axes)}
+        return g_agg, new_state, stats
+
+    if cfg.kind == "none":
+        gd = g.astype(jnp.dtype(cfg.ef_dtype))
+        if p is None:
+            g_agg = dense_allreduce(gd, axes)
+        else:
+            dsum = jax.lax.psum(jnp.where(p, gd, jnp.zeros((), gd.dtype)),
+                                axes)
+            na = jax.lax.psum(p.astype(jnp.float32), axes)
+            g_agg = dsum / jnp.maximum(na, 1.0).astype(gd.dtype)
+        return _ret(g_agg, {"step": state["step"] + 1}, p, zero)
     if cfg.num_buckets == 0:
         # auto-tune (DESIGN.md §2.4): resolved here, where the real
         # data-parallel axis size is known, so the compress sweeps and
@@ -163,29 +248,82 @@ def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     if cfg.kind == "globaltopk":
         # genie baseline: TOP-k on the true aggregated accumulated gradient
         from repro.core import select as _select
-        a_agg = dense_allreduce(g.astype(jnp.float32), axes)
+        gf = g.astype(jnp.float32)
+        if p is None:
+            a_agg = dense_allreduce(gf, axes)
+        else:
+            a_agg = jax.lax.psum(jnp.where(p, gf, 0.0), axes)
+            na = jax.lax.psum(p.astype(jnp.float32), axes)
+            a_agg = a_agg / jnp.maximum(na, 1.0)
         k = sparsify.resolve_k(cfg, g.shape[0])
         mask = _select.topk_mask(a_agg, k, cfg.selector)
-        return mask * a_agg, {"step": state["step"] + 1}
+        return _ret(mask * a_agg, {"step": state["step"] + 1}, p, zero)
     if cfg.kind == "sketchtopk":
-        return _sketch_sync(cfg, state, g, axes)
+        if p is not None:
+            # the shared sketch-coordinated mask has no per-worker
+            # sit-out semantics yet — refuse at trace time, never
+            # silently average a stale sketch in
+            raise NotImplementedError(
+                "participation masks are not supported for kind='sketchtopk'")
+        g_agg, new_state = _sketch_sync(cfg, state, g, axes)
+        return _ret(g_agg, new_state, None, zero)
 
     out = sparsify.compress(cfg, state, g, key=key, omega=omega,
-                            seg_bounds=seg_bounds)
+                            seg_bounds=seg_bounds, participate=p)
+    p_eff, dropped = p, zero
+    if p is not None and out.values is not None:
+        # non-finite payload guard: a worker whose packed values went
+        # NaN/Inf is dropped for this step (its EF state already updated
+        # under plain participation — one-step posterior skew, §2.7)
+        finite = jnp.all(jnp.isfinite(out.values.astype(jnp.float32)))
+        p_eff = p & finite
+        dropped = (p & ~finite).astype(jnp.float32)
+    elastic = p is not None or cfg.combine != "mean"
     if cfg.comm_mode == "sparse" and out.values is not None:
-        g_agg = sparse_allgather_combine(out.values, out.indices,
-                                         g.shape[0], axes,
-                                         num_buckets=cfg.num_buckets,
-                                         wire_dtype=cfg.wire_dtype)
+        if elastic:
+            g_agg = sparse_allgather_combine(out.values, out.indices,
+                                             g.shape[0], axes,
+                                             num_buckets=cfg.num_buckets,
+                                             wire_dtype=cfg.wire_dtype,
+                                             participate=p_eff,
+                                             count=out.count,
+                                             combine=cfg.combine)
+        else:
+            g_agg = sparse_allgather_combine(out.values, out.indices,
+                                             g.shape[0], axes,
+                                             num_buckets=cfg.num_buckets,
+                                             wire_dtype=cfg.wire_dtype)
     else:
         if cfg.comm_mode == "sparse":
             # explicit, not silent: this config emits no packed pairs, so
             # the sparse path cannot run — warn once (trace time) and
             # surface the realized mode via effective_comm_mode(cfg)
             _warn_sparse_degrade(cfg)
-        g_agg = simulate_allreduce(sparsify.dense_ghat(out, g.shape[0]), axes)
-    new_state = sparsify.observe_aggregate(cfg, out.state, g_agg)
-    return g_agg, new_state
+        ghat = sparsify.dense_ghat(out, g.shape[0])
+        if p is not None and out.values is None:
+            finite = jnp.all(jnp.isfinite(ghat.astype(jnp.float32)))
+            p_eff = p & finite
+            dropped = (p & ~finite).astype(jnp.float32)
+        if not elastic:
+            g_agg = simulate_allreduce(ghat, axes)
+        else:
+            pe = jnp.ones((), jnp.bool_) if p_eff is None else p_eff
+            dsum = jax.lax.psum(
+                jnp.where(pe, ghat, jnp.zeros((), ghat.dtype)), axes)
+            if cfg.combine == "support":
+                m = sparsify.dense_mask(out, g.shape[0])
+                cnts = jax.lax.psum(
+                    jnp.where(pe, m, jnp.zeros((), m.dtype)), axes)
+                g_agg = jnp.where(
+                    cnts > 0,
+                    dsum / jnp.maximum(cnts, 1.0).astype(ghat.dtype),
+                    jnp.zeros((), ghat.dtype))
+            else:
+                na = jax.lax.psum(pe.astype(jnp.float32), axes)
+                g_agg = dsum / jnp.maximum(na, 1.0).astype(ghat.dtype)
+    new_state = sparsify.observe_aggregate(cfg, out.state, g_agg,
+                                           participate=p_eff)
+    return _ret(g_agg, new_state, p_eff, dropped)
 
 
 def _sketch_sync(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
@@ -219,7 +357,8 @@ def _sketch_sync(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     return g_agg, new_state
 
 
-def comm_bytes_per_step(cfg: SparsifierConfig, j: int, n_workers: int) -> dict:
+def comm_bytes_per_step(cfg: SparsifierConfig, j: int, n_workers: int,
+                        n_active=None) -> dict:
     """Analytic communication volume per worker per step (benchmarks).
 
     Uses the EFFECTIVE comm mode (DESIGN.md §2.5): configs whose
@@ -230,13 +369,26 @@ def comm_bytes_per_step(cfg: SparsifierConfig, j: int, n_workers: int) -> dict:
     allocation mode conserves sum(k_l) == k and packs exactly
     packed_len pairs; the returned dict carries ``allocation`` so
     benchmark rows can still distinguish the modes.
+
+    ``n_active`` (DESIGN.md §2.7): expected live worker count under a
+    fault schedule (may be fractional). Models the idealized elastic
+    wire — absent workers transmit nothing — which is what a
+    participation-aware transport would realize; the in-simulation
+    fixed-shape collectives ship inert payloads instead. The ratio
+    denominator stays the FULL-fleet dense all-reduce so fault rows
+    remain comparable to fault-free ones.
     """
     k = sparsify.resolve_k(cfg, j)
     dense_ar = 2 * j * 4 * (n_workers - 1) / n_workers     # ring all-reduce fp32
+    na = n_workers if n_active is None else min(float(n_active),
+                                                float(n_workers))
+    extra = {} if n_active is None else {"n_active": na}
     eff = effective_comm_mode(cfg)
     if cfg.kind == "none" or eff in ("dense", "simulate"):
-        return {"bytes": dense_ar, "k": k, "ratio": 1.0,
-                "effective_comm_mode": eff, "allocation": cfg.allocation}
+        b = dense_ar if na <= 1 else 2 * j * 4 * (na - 1) / na
+        return {"bytes": b, "k": k, "ratio": b / dense_ar,
+                "effective_comm_mode": eff, "allocation": cfg.allocation,
+                **extra}
     if cfg.kind == "sketchtopk":
         from repro.core import sketch as _sketch
         width = _sketch.resolve_width(k, cfg.sketch_width)
@@ -249,10 +401,11 @@ def comm_bytes_per_step(cfg: SparsifierConfig, j: int, n_workers: int) -> dict:
     from repro.kernels.compress.dispatch import packed_len
     kp = packed_len(cfg, j)                 # k, or hist_capacity (fused hist)
     vb = _wire_value_bytes(cfg)             # 4, or 2 for wire_dtype=bf16
-    sparse = n_workers * kp * (vb + 4)      # allgather vals+idx
+    sparse = na * kp * (vb + 4)             # allgather vals+idx, live ranks
     return {"bytes": sparse, "k": k, "packed_len": kp,
             "wire_value_bytes": vb, "ratio": sparse / dense_ar,
-            "effective_comm_mode": eff, "allocation": cfg.allocation}
+            "effective_comm_mode": eff, "allocation": cfg.allocation,
+            **extra}
 
 
 def _wire_value_bytes(cfg: SparsifierConfig) -> int:
@@ -262,7 +415,7 @@ def _wire_value_bytes(cfg: SparsifierConfig) -> int:
 
 
 def sparse_gather_wire_bytes(cfg: SparsifierConfig, j: int,
-                             n_workers: int):
+                             n_workers: int, n_active=None):
     """Per-device wire bytes of the sparse gradient all-gather, or None
     when the config's EFFECTIVE comm mode is not sparse. This is the
     chunked-collective share the roofline's ``collective_exposed_s``
@@ -275,4 +428,6 @@ def sparse_gather_wire_bytes(cfg: SparsifierConfig, j: int,
     if effective_comm_mode(cfg) != "sparse" or cfg.kind == "sketchtopk":
         return None
     from repro.kernels.compress.dispatch import packed_len
-    return n_workers * packed_len(cfg, j) * (_wire_value_bytes(cfg) + 4)
+    na = n_workers if n_active is None else min(float(n_active),
+                                                float(n_workers))
+    return na * packed_len(cfg, j) * (_wire_value_bytes(cfg) + 4)

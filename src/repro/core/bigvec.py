@@ -49,12 +49,14 @@ def scatter_set(a: jnp.ndarray, idx: jnp.ndarray, vals,
     return a2.at[r, c].set(vals, mode=mode).reshape(-1)[:j]
 
 
-def scatter_add(a: jnp.ndarray, idx: jnp.ndarray, vals) -> jnp.ndarray:
+def scatter_add(a: jnp.ndarray, idx: jnp.ndarray, vals,
+                mode: str | None = None) -> jnp.ndarray:
+    """Same ``mode="drop"`` sentinel contract as :func:`scatter_set`."""
     if not _needs_big(a.shape[0]):
-        return a.at[idx.astype(jnp.int32)].add(vals)
+        return a.at[idx.astype(jnp.int32)].add(vals, mode=mode)
     a2, j = _pad2d(a, COLS)
     r, c = _rc(idx, COLS)
-    return a2.at[r, c].add(vals).reshape(-1)[:j]
+    return a2.at[r, c].add(vals, mode=mode).reshape(-1)[:j]
 
 
 def mask_from_indices(j: int, idx: jnp.ndarray, dtype) -> jnp.ndarray:

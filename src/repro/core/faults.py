@@ -1,0 +1,167 @@
+"""Deterministic fault-injection schedules for elastic aggregation.
+
+A :class:`FaultSchedule` decides, per (step, worker), whether that
+worker participates in the sparsified gradient sync (DESIGN.md §2.7).
+The decision function is a pure, seeded function of ``(schedule, step,
+worker)`` — traced-safe, so it runs INSIDE the shard_map'd train step
+from the per-rank step counter and data-parallel axis index, and the
+same schedule replays bit-identically across processes, restarts, and
+the host-side analysis helpers below.
+
+Three schedule kinds (the spec strings the ``--fault-schedule`` flag
+parses):
+
+- ``iid:<p>[,seed=<s>]``             — every worker independently drops
+  each step with probability p (seeded PRNG, deterministic per
+  (seed, step, worker)).
+- ``bursty:period=<P>,outage=<O>[,workers=<i+j+...>]`` — the listed
+  workers (default: worker 0) sit out the first O steps of every
+  P-step window: a correlated, recurring outage (rack reboot, shared
+  network partition).
+- ``permanent:step=<t>[,workers=<i+j+...>]`` — the listed workers
+  (default: worker 0) drop at step t and never return: permanent loss.
+
+"Participation" composes downstream: ``train/step.py`` evaluates the
+schedule per rank per step, ``core/aggregate.sync_gradient`` masks that
+worker's packed payload inert and decays its error-feedback state
+(``SparsifierConfig.err_decay``), and the non-finite payload guard can
+force a scheduled-in worker out for one step (a dropped-for-health
+worker is treated exactly like a scheduled absence).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("iid", "bursty", "permanent")
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    kind: str                   # "iid" | "bursty" | "permanent"
+    drop_prob: float = 0.0      # iid: per-(step, worker) drop probability
+    period: int = 0             # bursty: window length in steps
+    outage: int = 0             # bursty: down-steps per window
+    fail_step: int = 0          # permanent: first dead step
+    workers: tuple = (0,)       # bursty/permanent: affected worker indices
+    seed: int = 0               # iid: PRNG stream seed
+
+
+def parse_schedule(spec: str) -> Optional[FaultSchedule]:
+    """Parse a ``--fault-schedule`` spec string; "" / "none" -> None.
+
+    Grammar: ``<kind>:<args>`` with comma-separated ``key=value`` args
+    (worker lists are ``+``-joined: ``workers=1+3``). The iid kind also
+    accepts a bare leading probability: ``iid:0.3``.
+    """
+    spec = (spec or "").strip()
+    if not spec or spec == "none":
+        return None
+    kind, _, rest = spec.partition(":")
+    if kind not in KINDS:
+        raise ValueError(
+            f"unknown fault schedule kind {kind!r} in {spec!r}; "
+            f"expected one of {KINDS}")
+    kv = {}
+    for i, part in enumerate(p for p in rest.split(",") if p):
+        if "=" not in part:
+            if kind == "iid" and i == 0:
+                kv["p"] = part
+                continue
+            raise ValueError(f"malformed fault schedule arg {part!r} "
+                             f"in {spec!r} (want key=value)")
+        k, v = part.split("=", 1)
+        kv[k.strip()] = v.strip()
+    workers = tuple(int(w) for w in kv.get("workers", "0").split("+"))
+    if kind == "iid":
+        p = float(kv.get("p", kv.get("drop_prob", "0")))
+        if not 0.0 <= p < 1.0:
+            raise ValueError(f"iid drop probability must be in [0, 1): {p}")
+        return FaultSchedule("iid", drop_prob=p, seed=int(kv.get("seed", 0)))
+    if kind == "bursty":
+        period = int(kv.get("period", 0))
+        outage = int(kv.get("outage", 0))
+        if period <= 0 or not 0 <= outage <= period:
+            raise ValueError(
+                f"bursty schedule needs period > 0 and 0 <= outage <= "
+                f"period: {spec!r}")
+        return FaultSchedule("bursty", period=period, outage=outage,
+                             workers=workers)
+    fail_step = int(kv.get("step", kv.get("fail_step", 0)))
+    return FaultSchedule("permanent", fail_step=fail_step, workers=workers)
+
+
+def format_schedule(sched: Optional[FaultSchedule]) -> str:
+    """Inverse of :func:`parse_schedule` (round-trips through it)."""
+    if sched is None:
+        return ""
+    w = "+".join(str(i) for i in sched.workers)
+    if sched.kind == "iid":
+        return f"iid:{sched.drop_prob},seed={sched.seed}"
+    if sched.kind == "bursty":
+        return f"bursty:period={sched.period},outage={sched.outage},workers={w}"
+    return f"permanent:step={sched.fail_step},workers={w}"
+
+
+def participates(sched: Optional[FaultSchedule], step, worker):
+    """Does ``worker`` participate in the sync at ``step``? Traced-safe
+    () bool — ``step``/``worker`` may be traced int32 scalars (the
+    shard_map'd train step passes its state counter and data-parallel
+    axis index), or concrete ints (the host-side helpers below).
+
+    Deterministic in (schedule, step, worker): every rank evaluating its
+    own bit agrees with every analysis replay of the same schedule.
+    """
+    if sched is None:
+        return jnp.asarray(True)
+    step = jnp.asarray(step, jnp.int32)
+    worker = jnp.asarray(worker, jnp.int32)
+    if sched.kind == "iid":
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(sched.seed), step), worker)
+        return jax.random.uniform(key) >= sched.drop_prob
+    affected = jnp.any(worker == jnp.asarray(sched.workers, jnp.int32))
+    if sched.kind == "bursty":
+        in_outage = (step % sched.period) < sched.outage
+        return ~(affected & in_outage)
+    return ~(affected & (step >= sched.fail_step))       # permanent
+
+
+def participation_matrix(sched: Optional[FaultSchedule], steps: int,
+                         n_workers: int):
+    """Host-side replay: (steps, n_workers) bool numpy array of the
+    schedule's participation bits (analysis / test oracles)."""
+    import numpy as np
+    out = np.ones((steps, n_workers), bool)
+    for t in range(steps):
+        for w in range(n_workers):
+            out[t, w] = bool(participates(sched, t, w))
+    return out
+
+
+def expected_active(sched: Optional[FaultSchedule], n_workers: int) -> float:
+    """Steady-state expected participating worker count — the
+    ``n_active`` dimension of the analytic cost models
+    (``core.aggregate.comm_bytes_per_step`` and the roofline's
+    straggler-exposed collective term)."""
+    n = float(n_workers)
+    if sched is None:
+        return n
+    if sched.kind == "iid":
+        return n * (1.0 - sched.drop_prob)
+    naff = float(len([w for w in sched.workers if 0 <= w < n_workers]))
+    if sched.kind == "bursty":
+        return n - naff * (sched.outage / float(sched.period))
+    return n - naff                                      # permanent
+
+
+def describe(sched: Optional[FaultSchedule], n_workers: int) -> dict:
+    """JSON-serializable record of the fault config (dryrun records)."""
+    if sched is None:
+        return {"schedule": "", "n_active_expected": float(n_workers)}
+    return {"schedule": format_schedule(sched),
+            "kind": sched.kind,
+            "n_active_expected": expected_active(sched, n_workers)}

@@ -244,7 +244,7 @@ def _reference_select(cfg: SparsifierConfig, a: jnp.ndarray,
 
 def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
              key: Optional[jax.Array] = None, omega: float = 1.0,
-             seg_bounds=None) -> CompressOut:
+             seg_bounds=None, participate=None) -> CompressOut:
     """Sparsify one worker's flat gradient. omega = this worker's weight w_n.
 
     Inputs: ``g`` (J,) fp gradient (cast to cfg.ef_dtype); ``state`` the
@@ -267,11 +267,24 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     allocate.resolve_num_segments cut. Unsupported allocation combos
     raise ValueError here (allocate.check_allocation), never degrade
     silently.
+
+    ``participate`` (DESIGN.md §2.7): optional traced () bool — this
+    worker's elastic participation bit for the step. None (default) is
+    literally the pre-elastic code path. With a bit, a sitting-out
+    worker returns an inert payload (zero values/mask/ghat, count 0),
+    its error feedback decays in place (err' = cfg.err_decay * err, DGC
+    mom' = cfg.momentum * mom), and REGTOP-k's posterior freezes;
+    ``participate=True`` is a bitwise pass-through. Both pipelines share
+    the masked-input helper (kernels.compress.ops.masked_inputs), so
+    their post-step states stay bit-comparable under any mask.
     """
     j = g.shape[0]
     k = resolve_k(cfg, j)
     dt = jnp.dtype(cfg.ef_dtype)
     g = g.astype(dt)
+    pf = None
+    if participate is not None:
+        pf = jnp.asarray(participate, jnp.bool_)
     if cfg.num_buckets == 0:
         cfg = dataclasses.replace(cfg, num_buckets=resolve_num_buckets(
             cfg, j, _workers_from_omega(omega)))
@@ -285,10 +298,24 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
                 j, allocate.resolve_num_segments(cfg, j))
 
     if _fused_supported(cfg):
-        return _compress_fused(cfg, state, g, k, omega, key, seg_bounds)
+        return _compress_fused(cfg, state, g, k, omega, key, seg_bounds,
+                               participate=pf)
+
+    if pf is not None and "err" in state:
+        # reference oracle under elastic participation: the SAME masked
+        # effective inputs as the fused pipeline (g_eff = where(p, g, 0),
+        # err_eff = where(p, err, err_decay * err)), so both pipelines'
+        # post-step states stay bit-comparable under any mask
+        from repro.kernels.compress import ops as _cops
+        g, err_eff, pf = _cops.masked_inputs(g, state["err"], pf,
+                                             cfg.err_decay)
+        state = dict(state, err=err_eff)
 
     if cfg.kind == "none":
         ones = jnp.ones((j,), dt)
+        if pf is not None:
+            g = jnp.where(pf, g, jnp.zeros_like(g))
+            ones = jnp.where(pf, ones, jnp.zeros_like(ones))
         return CompressOut(g, ones, {"step": state["step"] + 1})
 
     if cfg.kind == "globaltopk":
@@ -300,9 +327,10 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     if cfg.kind == "topk":
         a = state["err"] + g
         mask, vals, idx = _reference_select(cfg, a, a, k, seg_bounds)
+        mask, vals, idx, count = _mask_elastic(pf, mask, vals, idx, k)
         ghat = mask * a
         new = {"err": a - ghat, "step": state["step"] + 1}
-        return CompressOut(ghat, mask, new, vals, idx)
+        return CompressOut(ghat, mask, new, vals, idx, count)
 
     if cfg.kind == "randk":
         a = state["err"] + g
@@ -322,9 +350,12 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         else:
             idx = select.randk_indices(key, j, k)
         mask = bigvec.mask_from_indices(j, idx, dt)
+        vals = bigvec.gather(a, idx)
+        mask, vals, idx, count = _mask_elastic(pf, mask, vals, idx, k)
         ghat = mask * a
-        return CompressOut(ghat, mask, {"err": a - ghat, "step": state["step"] + 1},
-                           bigvec.gather(a, idx), idx)
+        return CompressOut(ghat, mask,
+                           {"err": a - ghat, "step": state["step"] + 1},
+                           vals, idx, count)
 
     if cfg.kind == "thresholdk":
         # Strom'15-style magnitude thresholding, ADAPTIVE per step: the
@@ -336,22 +367,28 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         # exists as the threshold-family baseline.
         a = state["err"] + g
         mask, vals, idx = _reference_select(cfg, a, a, k, seg_bounds)
+        mask, vals, idx, count = _mask_elastic(pf, mask, vals, idx, k)
         ghat = mask * a
         new = {"err": a - ghat, "step": state["step"] + 1}
-        return CompressOut(ghat, mask, new, vals, idx)
+        return CompressOut(ghat, mask, new, vals, idx, count)
 
     if cfg.kind == "dgc":
         # Deep Gradient Compression [Lin et al. '18]: momentum correction.
         mom = cfg.momentum * state["mom"] + g
-        a = state["err"] + mom
+        # elastic gate, same select as the fused sweep: a sitting-out
+        # worker's a excludes the momentum stream (so err decays in
+        # place) while mom still advances to cfg.momentum * mom
+        am = mom if pf is None else jnp.where(pf, mom, 0.0)
+        a = state["err"] + am
         mask, vals, idx = _reference_select(cfg, a, a, k, seg_bounds)
+        mask, vals, idx, count = _mask_elastic(pf, mask, vals, idx, k)
         ghat = mask * a
         new = {"err": a - ghat, "mom": mom * (1.0 - mask), "step": state["step"] + 1}
-        return CompressOut(ghat, mask, new, vals, idx)
+        return CompressOut(ghat, mask, new, vals, idx, count)
 
     if cfg.kind == "regtopk":
         if cfg.state_format == "sparse":
-            return _compress_regtopk_sparse(cfg, state, g, k, omega)
+            return _compress_regtopk_sparse(cfg, state, g, k, omega, pf)
         a = state["err"] + g
         # posterior distortion (Algorithm 1, line 5); safe-divide where a ~ 0
         safe = safe_denom(omega * a)
@@ -362,6 +399,7 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         is_first = state["step"] == 0
         score = jnp.where(is_first, a, score)   # t=0: plain TOP-k
         mask, vals, idx = _reference_select(cfg, a, score, k, seg_bounds)
+        mask, vals, idx, count = _mask_elastic(pf, mask, vals, idx, k)
         ghat = mask * a
         new = {
             "err": a - ghat,
@@ -370,13 +408,36 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
             "g_agg_prev": state["g_agg_prev"],  # replaced by observe_aggregate
             "step": state["step"] + 1,
         }
-        return CompressOut(ghat, mask, new, vals, idx)
+        if pf is not None:
+            # posterior freeze: a sitting-out worker neither sent nor
+            # observed anything, so Algorithm 1's t-1 quantities stay
+            # those of its LAST participating step
+            new["a_prev"] = jnp.where(pf, a, state["a_prev"])
+            new["s_prev"] = jnp.where(pf, mask, state["s_prev"])
+        return CompressOut(ghat, mask, new, vals, idx, count)
 
     raise ValueError(f"unknown sparsifier {cfg.kind!r}")
 
 
+def _mask_elastic(pf, mask, vals, idx, k: int):
+    """Reference-path elastic payload masking (DESIGN.md §2.7): a
+    sitting-out worker's dense mask and packed pairs come back inert
+    (mask 0, values 0.0, indices 0, count 0). pf=None (or a True bit)
+    passes everything through bitwise; count is None when all slots are
+    unconditionally live (the pre-elastic contract)."""
+    if pf is None:
+        return mask, vals, idx, None
+    mask = jnp.where(pf, mask, jnp.zeros_like(mask))
+    count = jnp.where(pf, jnp.asarray(k, jnp.int32), 0)
+    if vals is not None:
+        vals = jnp.where(pf, vals, jnp.zeros_like(vals))
+        idx = jnp.where(pf, idx, jnp.zeros_like(idx))
+    return mask, vals, idx, count
+
+
 def _compress_regtopk_sparse(cfg: SparsifierConfig, state: dict,
-                             g: jnp.ndarray, k: int, omega: float) -> CompressOut:
+                             g: jnp.ndarray, k: int, omega: float,
+                             pf=None) -> CompressOut:
     """REGTOP-k with O(k) posterior state (state_format="sparse").
 
     Algorithm 1 line 5 reads a^{t-1} and g^{t-1} ONLY at the support of
@@ -401,21 +462,38 @@ def _compress_regtopk_sparse(cfg: SparsifierConfig, state: dict,
     from repro.core import select as _select
     idx = _select.topk_indices(score, k)
     vals = bigvec.gather(a, idx)
+    if pf is None:
+        err_new = bigvec.scatter_set(a, idx, 0.0)
+        mask = bigvec.mask_from_indices(a.shape[0], idx, a.dtype)
+        count = None
+        idx_prev_new, a_prev_new = idx.astype(jnp.uint32), vals
+    else:
+        # elastic sit-out: skip the scatter-zero (err keeps the decayed
+        # a), freeze the O(k) posterior, ship an inert payload
+        err_new = bigvec.scatter_set(
+            a, bigvec.live_idx(idx, pf, a.shape[0]), 0.0, mode="drop")
+        idx_prev_new = jnp.where(pf, idx.astype(jnp.uint32),
+                                 state["idx_prev"])
+        a_prev_new = jnp.where(pf, vals, state["a_prev_sel"])
+        vals = jnp.where(pf, vals, jnp.zeros_like(vals))
+        idx = jnp.where(pf, idx, jnp.zeros_like(idx))
+        count = jnp.where(pf, jnp.asarray(k, jnp.int32), 0)
+        mask = jnp.where(pf, bigvec.mask_from_indices(a.shape[0], idx, a.dtype),
+                         jnp.zeros_like(a))
     ghat = bigvec.scatter_set(jnp.zeros_like(a), idx, vals)
     new = {
-        "err": bigvec.scatter_set(a, idx, 0.0),
-        "idx_prev": idx.astype(jnp.uint32),
-        "a_prev_sel": vals,
+        "err": err_new,
+        "idx_prev": idx_prev_new,
+        "a_prev_sel": a_prev_new,
         "g_prev_sel": state["g_prev_sel"],   # filled by observe_aggregate
         "step": state["step"] + 1,
     }
-    mask = bigvec.mask_from_indices(a.shape[0], idx, a.dtype)
-    return CompressOut(ghat, mask, new, vals, idx)
+    return CompressOut(ghat, mask, new, vals, idx, count)
 
 
 def _compress_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
                     k: int, omega: float, key=None,
-                    seg_bounds=None) -> CompressOut:
+                    seg_bounds=None, participate=None) -> CompressOut:
     """Two-sweep fused pipeline (repro.kernels.compress, DESIGN.md §2.2).
 
     selector="exact": reference-parity top-k semantics;
@@ -450,6 +528,7 @@ def _compress_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         want_ghat=cfg.comm_mode != "sparse", selector=cfg.selector,
         ef_dtype=cfg.ef_dtype, key=key, num_buckets=cfg.num_buckets,
         allocation=cfg.allocation, seg_bounds=seg_bounds,
+        participate=participate, err_decay=cfg.err_decay,
         **kwargs)
     dt = jnp.dtype(cfg.ef_dtype)
     new = {"err_prev": out["err"], "step": state["step"] + 1}
@@ -461,25 +540,50 @@ def _compress_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         new["g_prev_sel"] = jnp.zeros_like(state["g_prev_sel"])  # observe_aggregate
         if hist:
             new["nsel"] = out["count"]
+        if participate is not None:
+            # posterior freeze (O(k) selects): a sitting-out worker's
+            # t-1 support/values stay those of its last participating
+            # step — observe_aggregate applies the matching freeze to
+            # g_prev_sel
+            pf = jnp.asarray(participate, jnp.bool_)
+            new["idx_prev"] = jnp.where(pf, out["indices"],
+                                        state["idx_prev"])
+            new["a_prev_sel"] = jnp.where(pf, out["values"].astype(dt),
+                                          state["a_prev_sel"])
+            new["g_prev_sel"] = jnp.where(pf, new["g_prev_sel"],
+                                          state["g_prev_sel"])
+            if hist:
+                new["nsel"] = jnp.where(pf, out["count"], state["nsel"])
     return CompressOut(out["ghat"], None, new,
                        out["values"], out["indices"], out["count"])
 
 
-def observe_aggregate(cfg: SparsifierConfig, state: dict, g_agg: jnp.ndarray) -> dict:
+def observe_aggregate(cfg: SparsifierConfig, state: dict, g_agg: jnp.ndarray,
+                      participate=None) -> dict:
     """Store the aggregated gradient g^t the server 'broadcasts'
     (footnote 1). No-op except for REGTOP-k, where it is O(k) on the
     fused/sparse layouts (one gather at the support) and one O(J) cast
     on the dense reference layout. g_agg: (J,) — must be rank-identical
-    (the sparse combine guarantees it; DESIGN.md §2.1)."""
+    (the sparse combine guarantees it; DESIGN.md §2.1).
+
+    ``participate`` (DESIGN.md §2.7): a sitting-out worker observed
+    nothing, so its posterior keeps the g^{t-1} of its last
+    participating step (matching the compress-side posterior freeze)."""
     if cfg.kind == "regtopk":
         state = dict(state)
+        pf = None if participate is None else jnp.asarray(participate,
+                                                          jnp.bool_)
         if _fused_supported(cfg) or cfg.state_format == "sparse":
             # O(k) posterior: g^{t-1} is read only at the support of s^{t-1}
             from repro.core import bigvec
-            state["g_prev_sel"] = bigvec.gather(g_agg, state["idx_prev"]).astype(
+            gsel = bigvec.gather(g_agg, state["idx_prev"]).astype(
                 jnp.dtype(cfg.ef_dtype))
+            state["g_prev_sel"] = gsel if pf is None else jnp.where(
+                pf, gsel, state["g_prev_sel"])
         else:
-            state["g_agg_prev"] = g_agg.astype(jnp.dtype(cfg.ef_dtype))
+            gobs = g_agg.astype(jnp.dtype(cfg.ef_dtype))
+            state["g_agg_prev"] = gobs if pf is None else jnp.where(
+                pf, gobs, state["g_agg_prev"])
     return state
 
 
@@ -582,16 +686,28 @@ def stack_states(states: list):
 
 
 def sparsified_round(cfg: SparsifierConfig, states: list, grads: list,
-                     omegas: Optional[list] = None, key=None):
+                     omegas: Optional[list] = None, key=None,
+                     participate: Optional[list] = None):
     """One aggregation round over N in-process workers (validation path).
 
     Returns (g_agg, new_states). Used by the paper-experiment benchmarks
     and tests; the production path is core/aggregate.sync_gradient under
     shard_map (train/step.py stage 4).
+
+    ``participate`` (DESIGN.md §2.7): optional per-worker participation
+    bits. Sitting-out workers contribute nothing; the combine divides by
+    n_active (cfg.combine="mean") or per-coordinate selection counts
+    (cfg.combine="support"), mirroring sync_gradient's elastic paths.
     """
     n = len(grads)
     omegas = omegas or [1.0 / n] * n
     j = grads[0].shape[0]
+    if participate is not None:
+        if cfg.kind in ("sketchtopk", "globaltopk"):
+            raise NotImplementedError(
+                f"elastic participation is not defined for the "
+                f"coordinated baseline kind={cfg.kind!r}")
+        return _elastic_round(cfg, states, grads, participate, key)
     if cfg.kind == "sketchtopk":
         from repro.core import select as _select
         from repro.core import sketch as _sketch
@@ -621,4 +737,33 @@ def sparsified_round(cfg: SparsifierConfig, states: list, grads: list,
         outs.append(compress(cfg, states[i], grads[i], key=ki, omega=omegas[i]))
     g_agg = sum(w * dense_ghat(o, j) for w, o in zip(omegas, outs))
     new_states = [observe_aggregate(cfg, o.state, g_agg) for o in outs]
+    return g_agg, new_states
+
+
+def _elastic_round(cfg: SparsifierConfig, states: list, grads: list,
+                   participate: list, key):
+    """sparsified_round under a per-worker participation mask — the
+    in-process mirror of sync_gradient's elastic combine (DESIGN.md
+    §2.7): inert payloads from sitting-out workers, equal weights over
+    the ACTIVE set ("mean") or per-coordinate support counts
+    ("support"). An all-absent round yields g_agg = 0 and every state
+    decays."""
+    n = len(grads)
+    j = grads[0].shape[0]
+    pfs = [jnp.asarray(p, jnp.bool_) for p in participate]
+    outs = []
+    for i in range(n):
+        ki = None if key is None else jax.random.fold_in(key, i)
+        outs.append(compress(cfg, states[i], grads[i], key=ki,
+                             omega=1.0 / n, participate=pfs[i]))
+    ghats = [dense_ghat(o, j) for o in outs]           # inert when absent
+    dense = sum(ghats)
+    if cfg.combine == "support":
+        counts = sum(dense_mask(o, j) for o in outs)   # inert masks too
+        g_agg = jnp.where(counts > 0, dense / jnp.maximum(counts, 1.0), 0.0)
+    else:
+        n_active = sum(p.astype(jnp.float32) for p in pfs)
+        g_agg = dense / jnp.maximum(n_active, 1.0)
+    new_states = [observe_aggregate(cfg, o.state, g_agg, participate=p)
+                  for o, p in zip(outs, pfs)]
     return g_agg, new_states

@@ -75,9 +75,14 @@ def key_bin_edge(x: jnp.ndarray) -> jnp.ndarray:
 # Sweep 1
 # ---------------------------------------------------------------------------
 
-def _sweep1_kernel(c_ref, *refs, mode: str, momentum: float, bins: int):
+def _sweep1_kernel(c_ref, *refs, mode: str, momentum: float, bins: int,
+                   gated: bool = False):
     # dgc mode threads the momentum buffer; plain mode omits it entirely
-    # (no dead O(J) passthrough streams on the non-dgc path)
+    # (no dead O(J) passthrough streams on the non-dgc path). gated dgc
+    # (elastic participation, DESIGN.md §2.7) prepends one more (1, 1)
+    # scalar operand: the worker's participation gate.
+    if gated:
+        gate_ref, *refs = refs
     if mode == "dgc":
         (g_ref, err_ref, mom_ref,
          a_ref, score_ref, mom_out_ref, amax_ref, hist_ref) = refs
@@ -95,7 +100,15 @@ def _sweep1_kernel(c_ref, *refs, mode: str, momentum: float, bins: int):
     if mode == "dgc":
         mom = momentum * mom_ref[...].astype(jnp.float32) + g
         mom_out_ref[...] = mom
-        a = err + mom
+        if gated:
+            # sitting-out worker: a = err (pre-decayed by the caller's
+            # input masking) while mom_out still advances to
+            # momentum * mom (g arrives pre-masked to zero). The select
+            # — not a multiply — keeps 0 * inf from minting NaNs and is
+            # a bitwise pass-through when the gate is on.
+            a = err + jnp.where(gate_ref[0, 0] > 0.5, mom, 0.0)
+        else:
+            a = err + mom
     else:
         a = err + g
     score = a * c_ref[0, 0]
@@ -110,7 +123,7 @@ def _sweep1_kernel(c_ref, *refs, mode: str, momentum: float, bins: int):
 
 
 def sweep1_pallas(g, err_prev, c, *, mode: str = "plain",
-                  momentum: float = 0.0, mom=None,
+                  momentum: float = 0.0, mom=None, gate=None,
                   bins: int = BINS, interpret: bool = True):
     """All dense inputs (J,) with J % BLOCK == 0 (caller pads).
 
@@ -120,6 +133,10 @@ def sweep1_pallas(g, err_prev, c, *, mode: str = "plain",
     EF invariant err = a * (1 - s) without a dense mask).
     ``c`` is the (traced) off-support score factor: the REGTOP-k
     regularizer constant tanh(|1+Q|/mu), or 1 for TOP-k / DGC / step 0.
+    ``gate`` (mode="dgc" only) is the traced elastic-participation
+    scalar (DESIGN.md §2.7): when given, a = err + where(gate, mom, 0)
+    so a sitting-out worker's ``a`` excludes the momentum stream while
+    ``mom_out`` still advances; None keeps the ungated kernel verbatim.
     Returns (a, score, mom_out, block_amax (rows,), hist (bins,));
     mom_out is None unless mode="dgc" (which requires ``mom``).
     """
@@ -129,14 +146,20 @@ def sweep1_pallas(g, err_prev, c, *, mode: str = "plain",
     rs = lambda x: x.astype(jnp.float32).reshape(rows, BLOCK)
     spec = pl.BlockSpec((1, BLOCK), lambda i: (i, 0))
     dgc = mode == "dgc"
+    gated = gate is not None
+    assert not gated or dgc, "gate is a dgc-mode operand"
     vec_out = jax.ShapeDtypeStruct((rows, BLOCK), jnp.float32)
-    inputs = [jnp.asarray(c, jnp.float32).reshape(1, 1), rs(g),
-              rs(err_prev)] + ([rs(mom)] if dgc else [])
+    inputs = ([jnp.asarray(c, jnp.float32).reshape(1, 1)]
+              + ([jnp.asarray(gate, jnp.float32).reshape(1, 1)]
+                 if gated else [])
+              + [rs(g), rs(err_prev)] + ([rs(mom)] if dgc else []))
     outs = pl.pallas_call(
         functools.partial(_sweep1_kernel, mode=mode,
-                          momentum=float(momentum), bins=bins),
+                          momentum=float(momentum), bins=bins,
+                          gated=gated),
         grid=(rows,),
         in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0))]      # factor c
+                 * (2 if gated else 1)                         # (+ gate)
                  + [spec] * (3 if dgc else 2),
         out_specs=[spec] * (3 if dgc else 2) + [
             pl.BlockSpec((1, 1), lambda i: (i, 0)),        # per-block amax

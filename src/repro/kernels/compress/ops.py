@@ -113,24 +113,72 @@ def _posterior_keys(a_sel, a_prev_sel, g_prev_sel, step, *,
     return skey
 
 
-def _sweep1_xla(kind, g, err_prev, c, *, momentum, mom):
+def _scalar_select(pred, x, y):
+    """``where(pred, x, y)`` for a SCALAR predicate, emitted as a plain
+    ``select_n`` over an explicit broadcast. ``jnp.where`` traces as a
+    nested pjit call, and the traversal audit (audit.py) breaks fusion
+    groups at call boundaries — a where on a J-sized array would bill a
+    spurious traversal + escape write. lax primitives stay inline and
+    fuse into the surrounding elementwise group."""
+    x = jnp.asarray(x)
+    y = jnp.asarray(y, x.dtype)
+    if y.shape != x.shape:
+        y = jax.lax.broadcast_in_dim(y, x.shape, ())
+    p = jax.lax.broadcast_in_dim(
+        jnp.asarray(pred, jnp.bool_).reshape(()), x.shape, ())
+    return jax.lax.select(p, x, y)
+
+
+def masked_inputs(g, err_prev, participate, err_decay):
+    """Effective sweep-1 inputs under elastic participation (DESIGN.md
+    §2.7): ``g_eff = where(p, g, 0)`` and ``err_eff = where(p, err,
+    err_decay * err)``. With these as the step's inputs, a sitting-out
+    worker's accumulator is ``a = err_decay * err`` — which the skipped
+    (sentinel-routed) err scatter-zero then stores verbatim as the next
+    err_prev, implementing the EF decay WITHOUT a third traversal: the
+    wheres are elementwise with a scalar predicate, so they fuse into
+    sweep 1's existing read group, and for a participating worker
+    (p=True) both selects pass the original arrays through bitwise.
+    The decay multiply is fp32 in-register (bf16 EF state rounds once,
+    like every other sweep write). Shared verbatim by the fused pipeline
+    and the reference oracle so their post-step states stay
+    bit-comparable. Returns (g_eff, err_eff, p_bool)."""
+    pf = jnp.asarray(participate, jnp.bool_)
+    g_eff = _scalar_select(pf, g, jnp.zeros_like(g))
+    err_eff = _scalar_select(
+        pf, err_prev,
+        (jnp.float32(err_decay) * err_prev.astype(jnp.float32)
+         ).astype(err_prev.dtype))
+    return g_eff, err_eff, pf
+
+
+def _sweep1_xla(kind, g, err_prev, c, *, momentum, mom, gate=None):
     err = err_prev.astype(jnp.float32)               # ONE state read
     g = g.astype(jnp.float32)
     mom_out = mom
     if kind == "dgc":
         mom_out = momentum * mom.astype(jnp.float32) + g
-        a = err + mom_out
+        # elastic gate (DESIGN.md §2.7): a sitting-out worker must keep
+        # a = err_eff (so err decays in place) while mom_out still
+        # advances to momentum * mom (its g contribution is already
+        # masked to zero) — input masking alone cannot remove the
+        # momentum term from ``a``, hence the scalar select (fuses into
+        # the same elementwise group; gate=True is a bitwise pass-through)
+        am = mom_out if gate is None else _scalar_select(gate, mom_out, 0.0)
+        a = err + am
     else:
         a = err + g
     return a, a * c, mom_out
 
 
 def _sweep1_slice(kind, g, err_prev, c, off, size, *, momentum, mom,
-                  interpret):
+                  interpret, gate=None):
     """One padded-slice sweep-1 launch, shared by the bucketed global
     path and the allocated per-segment path. Returns (a (size,),
     score_padded, mom (size,)|None, hist) with the bin-0 padding
-    contribution already corrected out of the histogram."""
+    contribution already corrected out of the histogram. ``gate`` is
+    the elastic participation scalar for mode="dgc" (kernel-side
+    a = err + gate * mom select; None for the ungated kernel)."""
     dgc = kind == "dgc"
     j_pad = -(-size // pk.BLOCK) * pk.BLOCK
     pad = lambda x: jnp.pad(
@@ -138,7 +186,8 @@ def _sweep1_slice(kind, g, err_prev, c, off, size, *, momentum, mom,
     a_p, score_p, mom_p, _amax, hist = pk.sweep1_pallas(
         pad(g), pad(err_prev), c,
         mode=("dgc" if dgc else "plain"), momentum=momentum,
-        mom=None if mom is None else pad(mom), interpret=interpret)
+        mom=None if mom is None else pad(mom),
+        gate=gate if dgc else None, interpret=interpret)
     # padding contributed (j_pad - size) zero keys to bin 0
     return (a_p[:size], score_p, mom_p[:size] if dgc else None,
             hist.at[0].add(-(j_pad - size)))
@@ -158,7 +207,7 @@ def _sweep2_slice(score_p, tau, off, size, maxpb: int, interpret):
 
 def _candidates_pallas(kind, g, err_prev, c, step, *, k: int,
                        regtopk: bool, momentum: float, mom, interpret: bool,
-                       bounds):
+                       bounds, gate=None):
     """Per-bucket Pallas sweeps + histogram-merge global threshold.
 
     Sweep 1 runs once per bucket and emits that bucket's 2048-bin
@@ -173,7 +222,7 @@ def _candidates_pallas(kind, g, err_prev, c, step, *, k: int,
     for off, size in bounds:
         a_p, score_p, mom_p, hist = _sweep1_slice(
             kind, g, err_prev, c, off, size, momentum=momentum, mom=mom,
-            interpret=interpret)
+            interpret=interpret, gate=gate)
         hists.append(hist)
         a_parts.append(a_p)
         score_parts.append(score_p)
@@ -207,7 +256,7 @@ def _candidates_pallas(kind, g, err_prev, c, step, *, k: int,
 
 
 def _candidates_xla(kind, g, err_prev, c, *, k: int, momentum: float,
-                    mom, bounds):
+                    mom, bounds, gate=None):
     """Per-bucket XLA candidate compaction.
 
     Sweep 1 is one fused elementwise pass over the whole vector (XLA
@@ -220,7 +269,7 @@ def _candidates_xla(kind, g, err_prev, c, *, k: int, momentum: float,
     """
     j = g.shape[0]
     a, score, mom_out = _sweep1_xla(kind, g, err_prev, c,
-                                    momentum=momentum, mom=mom)
+                                    momentum=momentum, mom=mom, gate=gate)
     if kind != "dgc":
         mom_out = None
     keys = jnp.abs(score)
@@ -242,7 +291,7 @@ def _candidates_xla(kind, g, err_prev, c, *, k: int, momentum: float,
 
 def _fused_randk(g, err_prev, *, k: int, key, want_ghat: bool,
                  ef_dtype, allocation: str = "global",
-                 seg_bounds=None) -> dict:
+                 seg_bounds=None, pf=None) -> dict:
     """Fused RANDOM-k: selection is score-free, so the whole step is ONE
     elementwise sweep (the err_prev + g stream) plus O(k) random gathers
     and the O(k) scatter-zero state write — no sweep 2, no histogram, no
@@ -271,18 +320,29 @@ def _fused_randk(g, err_prev, *, k: int, key, want_ghat: bool,
     # gather before the scatter-zero: a's buffer is read-complete when
     # the O(k) state write runs, so it updates in place
     values = bigvec.gather(a, idx)
-    err = bigvec.scatter_set(a.astype(jnp.dtype(ef_dtype)), idx, 0.0)
+    count = jnp.asarray(k, jnp.int32)
+    if pf is None:
+        err = bigvec.scatter_set(a.astype(jnp.dtype(ef_dtype)), idx, 0.0)
+    else:
+        # elastic: a sitting-out worker keeps err = a (= decayed err —
+        # inputs are pre-masked) and ships an inert payload
+        err = bigvec.scatter_set(a.astype(jnp.dtype(ef_dtype)),
+                                 bigvec.live_idx(idx, pf, j), 0.0,
+                                 mode="drop")
+        values = jnp.where(pf, values, 0.0)
+        idx = jnp.where(pf, idx, jnp.zeros_like(idx))
+        count = jnp.where(pf, count, 0)
     ghat = None
     if want_ghat:
         ghat = bigvec.scatter_set(jnp.zeros((j,), jnp.float32), idx, values)
     return {"err": err, "values": values, "indices": idx,
-            "ghat": ghat, "mom": None, "count": jnp.asarray(k, jnp.int32),
+            "ghat": ghat, "mom": None, "count": count,
             "tau": None}
 
 
 def _seg_candidates_pallas(kind, g, err_prev, c, step, *, provs, k: int,
                            regtopk: bool, momentum: float, mom,
-                           interpret: bool, bounds):
+                           interpret: bool, bounds, gate=None):
     """Per-SEGMENT Pallas sweeps for allocation != "global" (DESIGN.md
     §2.6): unlike the bucketed global path (one merged-histogram tau),
     each segment's sweep-1 histogram picks its OWN threshold at target
@@ -299,7 +359,7 @@ def _seg_candidates_pallas(kind, g, err_prev, c, step, *, provs, k: int,
     for pos, (off, size) in enumerate(bounds):
         a_p, score_p, mom_p, hist = _sweep1_slice(
             kind, g, err_prev, c, off, size, momentum=momentum, mom=mom,
-            interpret=interpret)
+            interpret=interpret, gate=gate)
         # support corrections may drop <= min(k, size) in-segment entries
         # below tau without breaking coverage of the segment's top-prov
         target = provs[pos] + jnp.where(
@@ -324,7 +384,7 @@ def _seg_candidates_pallas(kind, g, err_prev, c, step, *, provs, k: int,
 
 
 def _seg_candidates_xla(kind, g, err_prev, c, *, provs, slack, momentum,
-                        mom, bounds):
+                        mom, bounds, gate=None):
     """Per-SEGMENT XLA candidate compaction for allocation != "global":
     sweep 1 stays one fused elementwise pass; each segment's per-row
     top-W compaction is provisioned for ITS budget (provs[l] over the
@@ -337,7 +397,7 @@ def _seg_candidates_xla(kind, g, err_prev, c, *, provs, slack, momentum,
     witnesses are checked against the segment's OWN realized threshold
     in the trim."""
     a, score, mom_out = _sweep1_xla(kind, g, err_prev, c,
-                                    momentum=momentum, mom=mom)
+                                    momentum=momentum, mom=mom, gate=gate)
     if kind != "dgc":
         mom_out = None
     keys = jnp.abs(score)
@@ -355,7 +415,7 @@ def _seg_candidates_xla(kind, g, err_prev, c, *, provs, slack, momentum,
 def _fused_allocated(kind, g, err_prev, step, *, k: int, omega, mu, Q,
                      momentum, mom, idx_prev, a_prev_sel, g_prev_sel,
                      want_ghat: bool, strategy: str, allocation: str,
-                     seg_bounds, ef_dtype) -> dict:
+                     seg_bounds, ef_dtype, gate=None, pf=None) -> dict:
     """Fused compress step with per-segment budget allocation
     (allocation in {"proportional", "adaptive"}, DESIGN.md §2.6).
 
@@ -412,7 +472,8 @@ def _fused_allocated(kind, g, err_prev, step, *, k: int, omega, mu, Q,
         interpret = strategy == "pallas_interpret" or auto_interpret()
         a, mom_out, ck_parts, ci_parts, ok_parts = _seg_candidates_pallas(
             kind, g, err_prev, c, step, provs=provs, k=k, regtopk=regtopk,
-            momentum=momentum, mom=mom, interpret=interpret, bounds=bounds)
+            momentum=momentum, mom=mom, interpret=interpret, bounds=bounds,
+            gate=gate)
         wit_parts = None
         ok = ok_parts[0]
         for ok_b in ok_parts[1:]:
@@ -420,7 +481,7 @@ def _fused_allocated(kind, g, err_prev, step, *, k: int, omega, mu, Q,
     else:
         a, mom_out, ck_parts, ci_parts, wit_parts = _seg_candidates_xla(
             kind, g, err_prev, c, provs=provs, slack=slack,
-            momentum=momentum, mom=mom, bounds=bounds)
+            momentum=momentum, mom=mom, bounds=bounds, gate=gate)
         ok = jnp.asarray(True)
 
     # REGTOP-k support corrections, candidate space, routed per segment:
@@ -518,8 +579,8 @@ def _fused_allocated(kind, g, err_prev, step, *, k: int, omega, mu, Q,
         gi = bigvec.gather(g, idx).astype(jnp.float32)
         ei = bigvec.gather(err_prev, idx).astype(jnp.float32)
         if kind == "dgc":
-            return ei + (momentum * bigvec.gather(mom, idx).astype(
-                jnp.float32) + gi)
+            mi = momentum * bigvec.gather(mom, idx).astype(jnp.float32) + gi
+            return ei + (mi if gate is None else jnp.where(gate, mi, 0.0))
         return ei + gi
 
     def _fast(_):
@@ -527,7 +588,7 @@ def _fused_allocated(kind, g, err_prev, step, *, k: int, omega, mu, Q,
 
     def _fallback(_):
         a2, score2, _ = _sweep1_xla(kind, g, err_prev, c,
-                                    momentum=momentum, mom=mom)
+                                    momentum=momentum, mom=mom, gate=gate)
         keys_d = jnp.abs(score2)
         if regtopk:
             base = bigvec.gather(keys_d, idx_prev)
@@ -549,11 +610,21 @@ def _fused_allocated(kind, g, err_prev, step, *, k: int, omega, mu, Q,
         return idx_d, _gather_inputs(idx_d)
 
     idx_k, values = jax.lax.cond(ok, _fast, _fallback, operand=None)
-    # O(k) state tail, identical to the global exact path
+    # O(k) state tail, identical to the global exact path; under elastic
+    # participation a sitting-out worker skips the scatter-zero (sentinel
+    # + drop) so err/mom keep their decayed values, and the packed
+    # payload is masked inert
+    count = jnp.asarray(k, jnp.int32)
+    idx_w = idx_k
+    if pf is not None:
+        idx_w = bigvec.live_idx(idx_k, pf, j)
+        values = jnp.where(pf, values, 0.0)
+        idx_k = jnp.where(pf, idx_k, jnp.zeros_like(idx_k))
+        count = jnp.where(pf, count, 0)
     dt = jnp.dtype(ef_dtype)
-    err = bigvec.scatter_set(a.astype(dt), idx_k, 0.0, mode="drop")
+    err = bigvec.scatter_set(a.astype(dt), idx_w, 0.0, mode="drop")
     if kind == "dgc":
-        mom_out = bigvec.scatter_set(mom_out.astype(dt), idx_k, 0.0,
+        mom_out = bigvec.scatter_set(mom_out.astype(dt), idx_w, 0.0,
                                      mode="drop")
     ghat = None
     if want_ghat:
@@ -561,7 +632,7 @@ def _fused_allocated(kind, g, err_prev, step, *, k: int, omega, mu, Q,
                                   idx_k, values)
     return {"err": err, "values": values,
             "indices": idx_k.astype(jnp.uint32), "ghat": ghat,
-            "mom": mom_out, "count": jnp.asarray(k, jnp.int32),
+            "mom": mom_out, "count": count,
             "tau": None}
 
 
@@ -574,7 +645,8 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
                           num_buckets: int = 1, selector: str = "exact",
                           ef_dtype="float32", key=None,
                           allocation: str = "global",
-                          seg_bounds=None) -> dict:
+                          seg_bounds=None, participate=None,
+                          err_decay: float = 1.0) -> dict:
     """One fused compression step. kind in {"topk", "dgc", "regtopk",
     "randk", "thresholdk"} (thresholdk shares the plain-score path with
     topk; randk needs ``key`` and ignores ``selector``).
@@ -614,15 +686,34 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
       trim becomes per-segment trims + one O(sum(caps)) pack — output
       shapes, the O(k) state tail, and the wire format are unchanged
       (still exactly k pairs).
+    - participate (DESIGN.md §2.7): optional traced () bool — this
+      worker's elastic participation bit. None (the default) is
+      literally today's code path. With a mask, sweep 1 reads the
+      masked effective inputs (g_eff = where(p, g, 0), err_eff =
+      where(p, err, err_decay * err) — the wheres fuse, no extra
+      traversal), a sitting-out worker's O(k) state scatters are
+      sentinel-skipped (so err' = err_decay * err in place; DGC's
+      mom' = momentum * mom via the kernel gate), and its packed
+      payload comes back inert (values 0.0, indices 0, count 0).
+      p=True is a bitwise pass-through of the unmasked path.
     """
     from repro.core import bigvec
     strategy = strategy or default_strategy()
     j = g.shape[0]
     k = int(min(k, j))
+    # raw FUNCTION PARAMETERS, kept for the trim's lax.cond fallback:
+    # the cond must consume these (not the produced masked arrays) or the
+    # audit bills the masked intermediates as escaped cond-operand writes
+    g_raw, err_raw = g, err_prev
+    pf = gate = None
+    if participate is not None:
+        g, err_prev, pf = masked_inputs(g, err_prev, participate, err_decay)
+        gate = pf                      # dgc: a = err_eff + where(p, mom, 0)
     if kind == "randk":
         return _fused_randk(g, err_prev, k=k, key=key,
                             want_ghat=want_ghat, ef_dtype=ef_dtype,
-                            allocation=allocation, seg_bounds=seg_bounds)
+                            allocation=allocation, seg_bounds=seg_bounds,
+                            pf=pf)
     if allocation != "global":
         # exact-count selection only (check_allocation gates upstream)
         assert selector == "exact", (allocation, selector)
@@ -631,7 +722,7 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
             momentum=momentum, mom=mom, idx_prev=idx_prev,
             a_prev_sel=a_prev_sel, g_prev_sel=g_prev_sel,
             want_ghat=want_ghat, strategy=strategy, allocation=allocation,
-            seg_bounds=seg_bounds, ef_dtype=ef_dtype)
+            seg_bounds=seg_bounds, ef_dtype=ef_dtype, gate=gate, pf=pf)
     hist = selector == "histogram"
     # static packed capacity; also the candidate-provisioning budget —
     # for exact selection kcap == k and everything below degenerates to
@@ -649,12 +740,13 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
         interpret = strategy == "pallas_interpret" or auto_interpret()
         a, mom_out, cand_k, cand_i, producer_ok = _candidates_pallas(
             kind, g, err_prev, c, step, k=kcap, regtopk=regtopk,
-            momentum=momentum, mom=mom, interpret=interpret, bounds=bounds)
+            momentum=momentum, mom=mom, interpret=interpret, bounds=bounds,
+            gate=gate)
         witnesses = None
     else:
         a, mom_out, cand_k, cand_i, witnesses = _candidates_xla(
             kind, g, err_prev, c, k=kcap, momentum=momentum, mom=mom,
-            bounds=bounds)
+            bounds=bounds, gate=gate)
         producer_ok = None                   # needs tau; checked below
 
     # --- O(candidates) fixed-capacity trim ------------------------------
@@ -664,12 +756,23 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
         inside the lax.cond fallback branch, whose operands are already
         the function parameters — gathering from the dense ``a`` there
         would extend a's liveness past the cond and force the err
-        scatter-zero to copy the whole buffer."""
-        gi = bigvec.gather(g, idx).astype(jnp.float32)
-        ei = bigvec.gather(err_prev, idx).astype(jnp.float32)
+        scatter-zero to copy the whole buffer. Elastic masking is
+        re-applied to the gathered O(k) values (a scalar-predicate
+        select commutes with the gather, so this matches
+        ``masked_inputs`` bitwise without touching the masked J-sized
+        intermediates)."""
+        gi = bigvec.gather(g_raw, idx).astype(jnp.float32)
+        ei = bigvec.gather(err_raw, idx).astype(jnp.float32)
+        if pf is not None:
+            gi = _scalar_select(pf, gi, 0.0)
+            ei = _scalar_select(
+                pf, ei,
+                (jnp.float32(err_decay) * ei).astype(err_raw.dtype)
+                .astype(jnp.float32))
         if kind == "dgc":
-            return ei + (momentum * bigvec.gather(mom, idx).astype(
-                jnp.float32) + gi)
+            mi = momentum * bigvec.gather(mom, idx).astype(jnp.float32) + gi
+            return ei + (mi if gate is None else
+                         _scalar_select(gate, mi, 0.0))
         return ei + gi
 
     support_valid = None
@@ -743,9 +846,14 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
         # adversarial-input escape hatch: recompute (a, keys) from the
         # *function parameters* rather than capturing the intermediate
         # `a` — XLA CPU copies non-parameter conditional operands, which
-        # would tax the fast path with an O(J) copy
-        a2, score2, _ = _sweep1_xla(kind, g, err_prev, c,
-                                    momentum=momentum, mom=mom)
+        # would tax the fast path with an O(J) copy. The elastic masking
+        # is likewise re-derived INSIDE the branch from the raw params
+        # (the masked J-sized arrays must not become cond operands).
+        gg, ee = g_raw, err_raw
+        if pf is not None:
+            gg, ee, _ = masked_inputs(g_raw, err_raw, pf, err_decay)
+        a2, score2, _ = _sweep1_xla(kind, gg, ee, c,
+                                    momentum=momentum, mom=mom, gate=gate)
         keys_d = jnp.abs(score2)
         if regtopk:
             base = bigvec.gather(keys_d, idx_prev)
@@ -775,6 +883,12 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
 
         idx_k, vraw, valid_sel, tau = jax.lax.cond(ok, _fast, _fallback,
                                                    operand=None)
+        if pf is not None:
+            # elastic: a sitting-out worker's payload is wholly inert —
+            # masking valid_sel itself routes the state scatters to the
+            # sentinel (err keeps its decayed value) AND zeroes
+            # values/indices/count through the pad-slot handling below
+            valid_sel = valid_sel & pf
         values = jnp.where(valid_sel, vraw, 0.0)
         idx_k = jnp.where(valid_sel, idx_k, 0).astype(jnp.uint32)
         count = jnp.sum(valid_sel.astype(jnp.int32))
@@ -799,6 +913,13 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
         count = jnp.asarray(k, jnp.int32)
         tau = None
         idx_w = idx_k                        # exact: all k slots live
+        if pf is not None:
+            # elastic: sentinel-skip the state scatters and mask the
+            # packed payload inert for a sitting-out worker
+            idx_w = bigvec.live_idx(idx_k, pf, j)
+            values = jnp.where(pf, values, 0.0)
+            idx_k = jnp.where(pf, idx_k, jnp.zeros_like(idx_k))
+            count = jnp.where(pf, count, 0)
         ghat = None
         if want_ghat:
             ghat = bigvec.scatter_set(jnp.zeros((j,), jnp.float32),

@@ -179,6 +179,7 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
                variant="", state_format="dense", ef_dtype="float32",
                pipeline="reference", num_buckets=1, selector="exact",
                wire_dtype="float32", allocation="global", num_segments=0,
+               fault_schedule="", err_decay=1.0, combine="mean",
                **cfg_overrides) -> dict:
     shape = SHAPES[shape_name]
     cfg = get_config(arch)
@@ -203,13 +204,16 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
                                     num_buckets=num_buckets,
                                     allocation=allocation,
                                     num_segments=num_segments,
-                                    wire_dtype=wire_dtype),
+                                    wire_dtype=wire_dtype,
+                                    err_decay=err_decay, combine=combine),
         optimizer=OptimizerConfig(kind="adam", lr=1e-4),
         attn_override=attn_override,
+        fault_schedule=fault_schedule,
     )
     kind = shape.kind
     num_buckets_resolved = num_buckets
     gather_wire = None
+    fault_rec = None
     if kind == "train":
         # the trace resolves num_buckets inside sync_gradient; the shared
         # helper mirrors it exactly (same flattened per-rank J, same dp
@@ -224,6 +228,20 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
         if num_buckets == 0:
             num_buckets_resolved = nb_auto
         gather_wire = sparse_gather_wire_bytes(run.sparsifier, j_local, dp)
+        if fault_schedule:
+            # fault config rides in the record (DESIGN.md §2.7) so the
+            # roofline can expose the straggler-scaled collective share;
+            # the _active volume is the idealized elastic wire (absent
+            # workers transmit nothing), NOT what the fixed-shape
+            # compiled collectives move
+            from repro.core import faults
+            sched = faults.parse_schedule(fault_schedule)
+            fault_rec = faults.describe(sched, dp)
+            gw_act = sparse_gather_wire_bytes(
+                run.sparsifier, j_local, dp,
+                n_active=fault_rec["n_active_expected"])
+            if gw_act is not None:
+                fault_rec["sparse_gather_wire_bytes_active"] = float(gw_act)
     t0 = time.time()
     step, abs_args, pal = build_step(run, mesh, kind)
     with mesh:
@@ -272,6 +290,8 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
     }
     if gather_wire is not None:
         rec["sparse_gather_wire_bytes"] = int(gather_wire)
+    if fault_rec is not None:
+        rec["fault"] = fault_rec
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} mesh={rec['mesh']}: "
               f"lower {t_lower:.0f}s compile {t_compile:.0f}s", flush=True)
@@ -322,6 +342,16 @@ def main():
                          "comm_mode='sparse' (indices stay uint32); "
                          "bfloat16 cuts sparse wire bytes 25%% and the "
                          "record's sparse_gather_wire_bytes reflects it")
+    ap.add_argument("--fault-schedule", default="",
+                    help="fault-injection spec (DESIGN.md §2.7, e.g. "
+                         "'iid:0.3'); the record then carries the parsed "
+                         "schedule + expected active-worker count and "
+                         "sparse_gather_wire_bytes scales to E[n_active]")
+    ap.add_argument("--err-decay", type=float, default=1.0,
+                    help="EF memory decay on sat-out steps (DESIGN.md §2.7)")
+    ap.add_argument("--combine", default="mean",
+                    choices=["mean", "support"],
+                    help="elastic combine rule (DESIGN.md §2.7)")
     ap.add_argument("--out", default="")
     ap.add_argument("--variant", default="", help="perf-variant tag for the record")
     ap.add_argument("--state-format", default="dense")
@@ -362,7 +392,10 @@ def main():
                     ef_dtype=args.ef_dtype, pipeline=args.pipeline,
                     num_buckets=args.num_buckets, selector=args.selector,
                     wire_dtype=args.wire_dtype, allocation=args.allocation,
-                    num_segments=args.num_segments, **overrides))
+                    num_segments=args.num_segments,
+                    fault_schedule=args.fault_schedule,
+                    err_decay=args.err_decay, combine=args.combine,
+                    **overrides))
             except Exception as e:  # noqa: BLE001 — report every combo
                 import traceback
                 traceback.print_exc()

@@ -68,6 +68,29 @@ def parse_args(argv=None):
                          "bfloat16 cuts sparse comm bytes by 25%% with "
                          "bf16 rounding of the combined gradient "
                          "(upcast in the scatter-add combine)")
+    ap.add_argument("--err-decay", type=float, default=1.0,
+                    help="per-step decay of a sitting-out worker's "
+                         "error-feedback memory (DESIGN.md §2.7): "
+                         "err' = err_decay * err on non-participating "
+                         "steps; 1.0 holds the memory, <1 forgets stale "
+                         "residuals a straggler accumulated while absent")
+    ap.add_argument("--combine", default="mean",
+                    choices=["mean", "support"],
+                    help="elastic combine rule (DESIGN.md §2.7): mean = "
+                         "sum over active workers / n_active; support = "
+                         "each coordinate divided by the number of active "
+                         "workers that SELECTED it")
+    ap.add_argument("--fault-schedule", default="",
+                    help="fault-injection spec (DESIGN.md §2.7): "
+                         "'iid:P[,seed=S]' drops each worker each step "
+                         "with prob P; 'bursty:period=P,outage=O"
+                         "[,workers=i+j]' sits listed workers out for the "
+                         "first O of every P steps; 'permanent:step=T"
+                         "[,workers=i]' kills them from step T on. Empty "
+                         "= full participation (byte-identical program "
+                         "to the fault-free build)")
+    ap.add_argument("--drop-prob", type=float, default=0.0,
+                    help="shorthand for --fault-schedule iid:<p>")
     ap.add_argument("--optimizer", default="adam")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--data", type=int, default=1)
@@ -84,6 +107,23 @@ def parse_args(argv=None):
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     return ap.parse_args(argv)
+
+
+def resolve_fault_spec(args) -> str:
+    """--drop-prob is sugar for --fault-schedule iid:<p>. Validates the
+    spec at launch time (argparse surface) instead of deep in trace."""
+    spec = args.fault_schedule.strip()
+    drop = getattr(args, "drop_prob", 0.0)
+    if drop:
+        if spec:
+            raise SystemExit("--drop-prob is shorthand for --fault-schedule "
+                             f"iid:<p>; it conflicts with --fault-schedule "
+                             f"{spec!r} — pass one of them")
+        spec = f"iid:{drop}"
+    if spec:
+        from repro.core import faults
+        faults.parse_schedule(spec)
+    return spec
 
 
 def main(argv=None):
@@ -103,6 +143,7 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced_config(cfg)
+    fault_spec = resolve_fault_spec(args)
     run = RunConfig(
         model=cfg, shape=SHAPES["train_4k"],
         sparsifier=SparsifierConfig(kind=args.sparsifier,
@@ -113,11 +154,14 @@ def main(argv=None):
                                     num_buckets=args.num_buckets,
                                     allocation=args.allocation,
                                     num_segments=args.num_segments,
-                                    wire_dtype=args.wire_dtype),
+                                    wire_dtype=args.wire_dtype,
+                                    err_decay=args.err_decay,
+                                    combine=args.combine),
         optimizer=OptimizerConfig(kind=args.optimizer, lr=args.lr),
         seed=args.seed, steps=args.steps,
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every,
+        fault_schedule=fault_spec,
     )
     mesh = make_mesh(args.data, args.model, args.pods)
     pal = build_parallel(mesh)
@@ -141,6 +185,13 @@ def main(argv=None):
             print(f"[train] num_buckets=0 -> auto-tuned {nb} "
                   f"(J_local={j_local:,}, dp={dp})")
         print(f"[train] effective comm mode: {effective_comm_mode(sp)}")
+        if run.fault_schedule:
+            from repro.core import faults as _faults
+            sched = _faults.parse_schedule(run.fault_schedule)
+            ndp = args.data * args.pods
+            print(f"[train] fault schedule: {_faults.format_schedule(sched)}"
+                  f" (E[n_active]={_faults.expected_active(sched, ndp):.2f}"
+                  f"/{ndp}, err_decay={sp.err_decay}, combine={sp.combine})")
         import time
         t0 = time.time()
         for t in range(args.steps):
@@ -150,10 +201,12 @@ def main(argv=None):
                 params, opt_state, ef_state, batch, key)
             if t % args.log_every == 0 or t == args.steps - 1:
                 m = {k: float(v) for k, v in metrics.items()}
+                health = (f"active {m['n_active']:.0f} "
+                          if "n_active" in m else "")
                 print(f"step {t:5d} loss {m['loss']:.4f} "
                       f"gnorm {m['gnorm_local']:.3f} "
                       f"nz {m['agg_nonzero']:.4f} "
-                      f"({time.time()-t0:.1f}s)")
+                      f"{health}({time.time()-t0:.1f}s)")
             if (run.checkpoint_every and run.checkpoint_dir
                     and t and t % run.checkpoint_every == 0):
                 from repro.checkpoint import save_checkpoint

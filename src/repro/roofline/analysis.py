@@ -164,6 +164,23 @@ def roofline_terms(rec: dict, hw: Hardware = HW_V5E) -> dict:
         terms["collective_exposed_s"] = (t_coll - t_gather) + \
             pipelined_overlap_s(t_gather, t_combine, num_buckets)
         terms["num_buckets"] = num_buckets
+    fault = rec.get("fault")
+    if fault:
+        # straggler-exposed view (DESIGN.md §2.7): with an elastic
+        # transport, absent workers transmit nothing, so the sparse
+        # gradient all-gather share shrinks to the record's idealized
+        # E[n_active] volume; everything else (param gathers, TP psums)
+        # is participation-invariant. The compiled fixed-shape program
+        # does NOT realize this gain — inert payloads still move — which
+        # is exactly the gap this term quantifies.
+        gw = rec.get("sparse_gather_wire_bytes")
+        gw_act = fault.get("sparse_gather_wire_bytes_active")
+        terms["n_active_expected"] = fault.get("n_active_expected")
+        if gw is not None and gw_act is not None:
+            t_gather = gw / hw.ici_bw
+            t_gather_act = gw_act / hw.ici_bw
+            terms["collective_elastic_s"] = t_coll - t_gather + t_gather_act
+            terms["straggler_wire_gain_s"] = t_gather - t_gather_act
     return terms
 
 

@@ -173,6 +173,12 @@ def build_train_step(run: RunConfig, mesh, pal: Parallel):
     cfg = resolve_model_cfg(run)
     sp = run.sparsifier
     opt = run.optimizer
+    # fault injection (DESIGN.md §2.7): parsed ONCE at build time — the
+    # schedule is static config; only the per-(step, worker) liveness
+    # bit is traced. None (no/empty spec) keeps the sync call and the
+    # metrics tree byte-identical to the fault-free build.
+    from repro.core import faults
+    sched = faults.parse_schedule(run.fault_schedule)
     tmpl, pspecs, ospecs, especs = train_state_specs(run, mesh, pal)
     repl = replicated_mask(tmpl)
     flat = TreeFlattener(tmpl)
@@ -223,8 +229,16 @@ def build_train_step(run: RunConfig, mesh, pal: Parallel):
         g = flat.flatten(grads)
 
         key = jax.random.fold_in(key, _dp_index(dpaxes))
-        g_agg, ef_new = agg.sync_gradient(sp, ef_state, g, dpaxes, key=key,
-                                          seg_bounds=seg_bounds)
+        fstats = None
+        if sched is None:
+            g_agg, ef_new = agg.sync_gradient(sp, ef_state, g, dpaxes,
+                                              key=key, seg_bounds=seg_bounds)
+        else:
+            part = faults.participates(sched, ef_state["step"],
+                                       _dp_index(dpaxes))
+            g_agg, ef_new, fstats = agg.sync_gradient(
+                sp, ef_state, g, dpaxes, key=key, seg_bounds=seg_bounds,
+                participate=part, with_stats=True)
 
         # ZeRO-1 slice update
         r = _dp_index(dpaxes)
@@ -249,6 +263,10 @@ def build_train_step(run: RunConfig, mesh, pal: Parallel):
         all_axes = dpaxes + (("model",) if pal.tp_on else ())
         metrics = {k_: jax.lax.pmean(v, dpaxes if k_ == "loss" else all_axes)
                    for k_, v in metrics.items()}
+        if fstats is not None:
+            # already rank-identical psums from sync_gradient — no pmean
+            metrics["n_active"] = fstats["n_active"]
+            metrics["dropped_nonfinite"] = fstats["dropped_nonfinite"]
         return params_new, exp(opt_new), exp(ef_new), metrics
 
     batch_specs = {k: P(dpaxes, None) for k in ("tokens", "targets")}
@@ -256,8 +274,11 @@ def build_train_step(run: RunConfig, mesh, pal: Parallel):
         batch_specs["patches"] = P(dpaxes, None, None)
     elif cfg.frontend == "audio_stub":
         batch_specs["frames"] = P(dpaxes, None, None)
-    mspecs = {k: P() for k in ("loss", "gnorm_local", "agg_nonzero",
-                               "lb_loss", "z_loss", "drop_frac")}
+    mkeys = ["loss", "gnorm_local", "agg_nonzero",
+             "lb_loss", "z_loss", "drop_frac"]
+    if sched is not None:
+        mkeys += ["n_active", "dropped_nonfinite"]
+    mspecs = {k: P() for k in mkeys}
     in_specs = (pspecs, ospecs, especs, batch_specs, P())
     out_specs = (pspecs, ospecs, especs, mspecs)
     wrapped = jax.shard_map(step_fn, mesh=mesh, in_specs=in_specs,

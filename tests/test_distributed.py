@@ -264,3 +264,119 @@ assert min(losses[5:]) < losses[0], losses
 print("OK", losses)
 """)
     assert "OK" in out
+
+
+def test_elastic_fault_injection_trains():
+    """30% iid worker drop (decayed EF) still overfits the fixed batch,
+    within tolerance of the full-participation run, and the step metrics
+    report the fluctuating active count."""
+    out = run_py(COMMON + """
+import math
+run = make_run("stablelm-3b", sp_kind="regtopk", comm="sparse", sparsity=0.05)
+run = dataclasses.replace(run, sparsifier=dataclasses.replace(
+    run.sparsifier, err_decay=0.9))
+run_f = dataclasses.replace(run, fault_schedule="iid:0.3,seed=0")
+l_full, _ = train(run, (4, 2), steps=12, fixed_batch=True)
+l_drop, m = train(run_f, (4, 2), steps=12, fixed_batch=True)
+assert all(math.isfinite(l) for l in l_drop), l_drop
+assert l_drop[-1] < l_drop[0], l_drop
+# convergence contract: the faulted run's progress stays within 35% of
+# the full-participation run's progress on the same overfit batch
+prog_full = l_full[0] - l_full[-1]
+prog_drop = l_drop[0] - l_drop[-1]
+assert prog_full > 0, l_full
+assert prog_drop > 0.65 * prog_full, (l_full, l_drop)
+assert 0 < float(m["n_active"]) <= 4
+print("OK", prog_full, prog_drop)
+""")
+    assert "OK" in out
+
+
+def test_elastic_nonfinite_payload_guard():
+    """A worker whose gradient goes NaN is dropped for the step by the
+    payload guard: the aggregate stays finite, n_active excludes it, and
+    the health counter reports exactly one drop."""
+    out = run_py(COMMON + """
+from jax.sharding import PartitionSpec as P
+from repro.core import aggregate as agg
+from repro.core import sparsify
+cfg = SparsifierConfig(kind="topk", sparsity=0.02, comm_mode="sparse",
+                       selector="exact", pipeline="fused")
+j = 4096
+mesh = jax.make_mesh((8,), ("data",))
+g = jax.random.normal(jax.random.PRNGKey(0), (8, j), jnp.float32)
+g = g.at[3].set(jnp.nan)                       # worker 3 poisoned
+def body(gw):
+    gw = gw.reshape(-1)
+    state = sparsify.init_state(cfg, j)
+    g_agg, _, stats = agg.sync_gradient(
+        cfg, state, gw, ("data",), participate=jnp.ones((), jnp.bool_),
+        with_stats=True)
+    return g_agg, stats["n_active"], stats["dropped_nonfinite"]
+with mesh:
+    g_agg, na, dr = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(P("data"),), out_specs=(P(), P(), P()),
+        check_vma=False))(g)
+assert np.isfinite(np.array(g_agg)).all()
+assert float(np.ravel(na)[0]) == 7.0, na
+assert float(np.ravel(dr)[0]) == 1.0, dr
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_elastic_combine_bucket_invariant_8dev():
+    """Partial participation on a REAL 8-way axis: the chunked elastic
+    all-gather combine (num_buckets 1 vs 4) and both combine modes are
+    bucketing-invariant."""
+    out = run_py(COMMON + """
+from jax.sharding import PartitionSpec as P
+from repro.core import aggregate as agg
+from repro.core import sparsify
+j = 4096
+mesh = jax.make_mesh((8,), ("data",))
+g = jax.random.normal(jax.random.PRNGKey(0), (8, j), jnp.float32)
+absent = np.array([0, 0, 1, 0, 0, 1, 0, 0], bool)      # workers 2,5 out
+def make(combine, nb):
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.02, mu=0.5,
+                           comm_mode="sparse", selector="exact",
+                           pipeline="fused", num_buckets=nb,
+                           combine=combine, err_decay=0.9)
+    def body(gw, pw):
+        state = sparsify.init_state(cfg, j)
+        g_agg, _ = agg.sync_gradient(cfg, state, gw.reshape(-1), ("data",),
+                                     participate=pw.reshape(()))
+        return g_agg
+    return jax.jit(jax.shard_map(body, mesh=mesh,
+                                 in_specs=(P("data"), P("data")),
+                                 out_specs=P(), check_vma=False))
+p = jnp.asarray(~absent)
+with mesh:
+    for combine in ("mean", "support"):
+        a1 = np.array(make(combine, 1)(g, p))
+        a4 = np.array(make(combine, 4)(g, p))
+        np.testing.assert_array_equal(a1, a4)
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_long_horizon_convergence():
+    """Long-horizon fault-injection contract (CI fault-injection job):
+    40 fixed-batch steps under 30% iid drop land within 25% of the
+    full-participation loss."""
+    out = run_py(COMMON + """
+run = make_run("stablelm-3b", sp_kind="regtopk", comm="sparse", sparsity=0.05)
+run = dataclasses.replace(run, sparsifier=dataclasses.replace(
+    run.sparsifier, err_decay=0.9))
+run_f = dataclasses.replace(run, fault_schedule="iid:0.3,seed=1")
+l_full, _ = train(run, (4, 2), steps=40, fixed_batch=True)
+l_drop, _ = train(run_f, (4, 2), steps=40, fixed_batch=True)
+prog_full = l_full[0] - l_full[-1]
+prog_drop = l_drop[0] - l_drop[-1]
+assert prog_full > 0, l_full
+assert prog_drop > 0.75 * prog_full, (l_full[-1], l_drop[-1])
+print("OK", l_full[-1], l_drop[-1])
+""", timeout=1800)
+    assert "OK" in out
