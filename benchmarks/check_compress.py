@@ -19,6 +19,11 @@ Compares a freshly produced BENCH_compress.json (``benchmarks.run --json
   creeping back in is a regression even if a stale baseline row also
   had it. Dense/simulate fused rows are exempt — their extra ghat
   write is by design (ops.sweep_plan);
+- any streaming row (``overlap == "backward"``, the fused_stream
+  variant, DESIGN.md §2.8) is missing its analytic exposed-comm pair or
+  reports ``exposed_comm_stream_s`` above ``exposed_comm_serial_s`` —
+  streaming must hide collective time behind the backward pass, never
+  add any (its sweep budget is gated by the absolute rule above);
 - in any benchmark group (``group`` field: the exact-selector REGTOP-k
   path, the histogram-selector path, ...) at the largest J where the
   group has BOTH a reference and a fused row, no fused variant's
@@ -65,6 +70,22 @@ def check(baseline: dict, fresh: dict) -> list:
                 failures.append(
                     f"{name}: sweeps_per_step {sw} exceeds the absolute "
                     f"sparse-path fused budget {FUSED_MAX_TRAVERSALS}")
+            if row.get("overlap") == "backward":
+                # streaming gate (DESIGN.md §2.8): the comm-behind-
+                # backward exposed term must never exceed the serialized
+                # one, and streaming must not cost a sweep (the absolute
+                # budget above already covers the latter; this pins the
+                # claim the fused_stream rows exist to make)
+                ser = row.get("exposed_comm_serial_s")
+                stm = row.get("exposed_comm_stream_s")
+                if ser is None or stm is None:
+                    failures.append(
+                        f"{name}: overlap='backward' row lacks the "
+                        "exposed_comm_serial_s/exposed_comm_stream_s pair")
+                elif stm > ser + EPS:
+                    failures.append(
+                        f"{name}: streaming exposed comm {stm} exceeds "
+                        f"the serialized term {ser}")
             ref_row = base.get(name)
             if ref_row is None:
                 print(f"[check_compress] new row (not gated): {name}")

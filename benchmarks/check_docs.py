@@ -29,7 +29,7 @@ import re
 import sys
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-DEFAULT_DOCS = ("README.md", "DESIGN.md")
+DEFAULT_DOCS = ("README.md", "DESIGN.md", "EXPERIMENTS.md")
 FLAG_RE = re.compile(r"(?<![\w-])(--[a-z][a-z0-9_-]+)")
 ADD_ARG_RE = re.compile(r"add_argument\(\s*['\"](--[a-z0-9_-]+)['\"]")
 SPARSIFIER_FIELD_RE = re.compile(r"SparsifierConfig\.([a-z_]+)")

@@ -105,6 +105,33 @@ def roofline_table(recs):
     return "\n".join(rows)
 
 
+def streaming_table(path):
+    """§Streaming overlap (DESIGN.md §2.8): exposed-communication view of
+    overlap="backward" records — the serialized collective term next to
+    the comm-behind-backward exposed term (strictly smaller whenever the
+    record streams >= 2 segments and the gather share is positive)."""
+    try:
+        results = json.load(open(path)).get("results", [])
+    except FileNotFoundError:
+        return ""
+    recs = [r for r in results if r.get("overlap") == "backward"]
+    if not recs:
+        return ""
+    rows = ["| arch | shape | segments | collective (ms) | "
+            "exposed serial (ms) | exposed streamed (ms) | hidden (ms) |",
+            "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        t = roofline_terms(r, HW_V5E)
+        gather = r.get("sparse_gather_wire_bytes",
+                       r.get("hlo_collective_wire_bytes", 0)) / HW_V5E.ici_bw
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t.get('num_stream_segments', 1)}"
+            f" | {t['collective_s']*1e3:.2f} | {gather*1e3:.2f} | "
+            f"{(t['collective_exposed_backward_s'] - (t['collective_s'] - gather))*1e3:.2f}"
+            f" | {t['backward_overlap_s']*1e3:.2f} |")
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--single", default="results/dryrun_single.json")
@@ -119,6 +146,10 @@ def main():
     print(fits_table())
     print("\n## Roofline (single-pod)\n")
     print(roofline_table(recs_s))
+    st = streaming_table(args.single)
+    if st:
+        print("\n## Streaming overlap (overlap=backward, DESIGN.md §2.8)\n")
+        print(st)
     if recs_m:
         print("\n## Multi-pod (2x16x16 = 512 chips) — lowering proof\n")
         print(dryrun_table(recs_m))

@@ -125,7 +125,10 @@ def bench_compress(quick):
       variants (§2.4), and the density-allocation variants (§2.6:
       fused_prop / fused_adapt — per-segment budget split; every row
       carries an ``allocation`` column and the allocated rows must hold
-      the same absolute 2-sweep / 2-write-unit fused budget);
+      the same absolute 2-sweep / 2-write-unit fused budget), and the
+      streaming variant (§2.8: fused_stream — overlap="backward" per-
+      segment sweeps; same 2-sweep budget, plus the analytic
+      exposed-comm pair the check_compress streaming gate compares);
     - group "topk_hist": the histogram-selector path — fused since the
       capability-dispatch PR (reference-pipeline histogram packs no
       pairs and degrades sparse comm, so its row times the simulate
@@ -160,6 +163,8 @@ def bench_compress(quick):
                     cfg_fus, allocation="proportional")),
                 ("fused_adapt", dataclasses.replace(
                     cfg_fus, allocation="adaptive")),
+                ("fused_stream", dataclasses.replace(
+                    cfg_fus, overlap="backward")),
             )),
             ("topk_hist", "topk_hist", (
                 ("reference", cfg_hr),
@@ -224,7 +229,7 @@ def _bench_compress_one(cfg, g, j, repeats) -> dict:
         best = min(best, time.perf_counter() - t0)
     aud = audit_fn(f, state, g, j=j, donate_argnums=(0,))
     row = {"j": j, "num_buckets": cfg.num_buckets,
-           "allocation": cfg.allocation,
+           "allocation": cfg.allocation, "overlap": cfg.overlap,
            "us_per_call": round(best * 1e6, 1),
            "sweeps_per_step": aud["traversals"],
            "read_units": round(aud["read_units"], 2),
@@ -232,6 +237,24 @@ def _bench_compress_one(cfg, g, j, repeats) -> dict:
     if cfg.num_buckets == 0:
         row["num_buckets_resolved"] = sparsify.resolve_num_buckets(
             cfg, j, N_WORKERS)
+    if cfg.overlap == "backward":
+        # analytic exposed-comm model (roofline.comm_behind_backward_s,
+        # DESIGN.md §2.8): the sparse gather either serializes after the
+        # backward pass (serial) or streams behind it per segment
+        # (stream). t_backward is LOWER-bounded by one fp32 re-read of
+        # the gradient, so the streamed term is a conservative claim;
+        # check_compress gates stream <= serial.
+        from repro.core import allocate
+        from repro.core.aggregate import sparse_gather_wire_bytes
+        from repro.roofline.analysis import HW_V5E, comm_behind_backward_s
+        gw = sparse_gather_wire_bytes(cfg, j, N_WORKERS)
+        t_gather = (gw or 0) / HW_V5E.ici_bw
+        t_bwd = j * 4 / HW_V5E.hbm_bw
+        nseg = allocate.resolve_num_segments(cfg, j)
+        row["num_stream_segments"] = nseg
+        row["exposed_comm_serial_s"] = t_gather
+        row["exposed_comm_stream_s"] = comm_behind_backward_s(
+            t_gather, t_bwd, nseg)
     return row
 
 

@@ -234,6 +234,20 @@ class SparsifierConfig:
     # it (rTop-k's estimation view), falling back to 0 where no worker
     # selected.
     combine: str = "mean"         # mean | support
+    # backward-overlapped streaming compression (DESIGN.md §2.8):
+    # "backward" feeds the gradient into the fused pipeline per
+    # layer-aligned segment as the VJP emits it — each segment's sweep-1
+    # (+ EF fold + adaptive-allocation statistics) depends only on that
+    # segment's leaves, so XLA schedules it behind the remaining
+    # backward work; the global trim/pack and the sparse collective are
+    # the only tail barrier. Selection, packed order, and err_prev are
+    # bit-identical to "none" (streaming reorders WHEN sweeps run, not
+    # how many — the 2-traversal / 2-write-unit audit budget is
+    # unchanged). Requires pipeline="fused" and a fused-dispatch config
+    # (kernels.compress.dispatch.check_overlap raises otherwise, never
+    # silent); segment granularity follows SparsifierConfig.num_segments
+    # via the layer-aligned bounds the train step already builds.
+    overlap: str = "none"         # none | backward
 
 
 @dataclass(frozen=True)

@@ -4,8 +4,8 @@ from repro.core.sparsify import (
     sparsified_round,
 )
 from repro.core.aggregate import (
-    comm_bytes_per_step, dense_allreduce, sparse_allgather_combine,
-    sync_gradient,
+    GradientSync, comm_bytes_per_step, dense_allreduce,
+    sparse_allgather_combine, sync_gradient,
 )
 from repro.core.select import topk_mask, topk_mask_exact, histogram_threshold
 from repro.core.flatten import TreeFlattener, tree_size

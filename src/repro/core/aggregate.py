@@ -175,155 +175,433 @@ def sparse_allgather_combine(values: jnp.ndarray, indices: jnp.ndarray,
     return dense / jnp.maximum(n_active, 1.0).astype(acc_dtype)
 
 
+class GradientSync:
+    """Per-run gradient-sync surface: static fields bound once, per-step
+    work through ``__call__`` or the ``begin()/feed_segment()/finish()``
+    streaming interface (DESIGN.md §2.8).
+
+    ``sync_gradient`` had accreted eight positional/keyword parameters,
+    most of them static per run (cfg, axes, seg_bounds) — and streaming
+    adds more. GradientSync splits the two lifetimes: construction takes
+    the static fields and validates them ONCE (allocation combos,
+    ``cfg.overlap`` capability, optional bucket auto-resolution when the
+    problem size + worker count are known), per-step calls take only the
+    traced values.
+
+    Per-step surfaces (inside ``shard_map``; ``axes`` required):
+
+    - ``sync(state, g, key=..., participate=...)`` — flat-gradient step,
+      the exact ``sync_gradient`` semantics (returns ``(g_agg,
+      new_state)``, plus stats with ``with_stats=True``).
+    - ``begin(state, ...)`` → stream; ``stream.feed_segment(g_seg)`` per
+      layer-aligned segment as the backward pass emits it;
+      ``stream.finish()`` runs the global trim/pack, the sparse
+      collective, and ``observe_aggregate`` — the only tail barrier.
+      Requires ``cfg.overlap == "backward"``; output is BIT-identical to
+      the flat call (selection is partition-invariant, DESIGN.md §2.8).
+
+    In-process simulation surfaces (``axes=None`` is fine — the combine
+    runs locally): :meth:`round` over lists of per-worker states/grads
+    and :meth:`make_round_fn` for the jitted vmapped variant. These
+    absorb the former ``sparsify.sparsified_round`` / ``_elastic_round``
+    / ``make_round_fn`` trio so the tests, the paper-experiment
+    benchmarks, and the production train step exercise one code path.
+
+    Semantics carried over verbatim from ``sync_gradient`` (that name
+    remains as a deprecated shim):
+
+    - pipeline/fused dispatch, chunked bucket collectives (§2.4), density
+      allocation with layer-aligned ``seg_bounds`` (§2.6) — wire format
+      allocation-invariant.
+    - ``participate`` elastic liveness (§2.7): inert payloads, EF decay,
+      active-set normalization, non-finite payload demotion,
+      ``with_stats`` health counters as rank-identical psums.
+    """
+
+    def __init__(self, cfg: SparsifierConfig, axes,
+                 *, j: int = None, n_workers: int = None, seg_bounds=None):
+        if cfg.allocation != "global":
+            from repro.core import allocate
+            allocate.check_allocation(cfg)     # explicit build-time error
+        from repro.kernels.compress.dispatch import check_overlap
+        check_overlap(cfg)                     # overlap="backward" capability
+        if (cfg.num_buckets == 0 and j is not None and n_workers is not None
+                and cfg.kind != "none"):
+            # bucket auto-tune resolved at build time when the problem
+            # size and fleet size are concrete; otherwise deferred to the
+            # per-step call where the mesh axis size is known
+            cfg = dataclasses.replace(
+                cfg, num_buckets=sparsify.resolve_num_buckets(cfg, j,
+                                                              n_workers))
+        self.cfg = cfg
+        self.axes = axes
+        self.j = j
+        self.n_workers = n_workers
+        self.seg_bounds = seg_bounds
+
+    def __call__(self, state: dict, g: jnp.ndarray, *, key=None,
+                 participate=None, with_stats: bool = False):
+        """One flat-gradient sync step: returns (g_agg, new_state[, stats])."""
+        return self._sync(state, g=g, key=key, participate=participate,
+                          with_stats=with_stats)
+
+    def begin(self, state: dict, *, key=None, participate=None):
+        """Open a streaming step (cfg.overlap='backward' only): feed
+        gradient segments in layer order as the backward pass emits
+        them, then ``finish()``."""
+        if getattr(self.cfg, "overlap", "none") != "backward":
+            raise ValueError(
+                "begin()/feed_segment streaming needs overlap='backward' "
+                f"(got overlap={getattr(self.cfg, 'overlap', 'none')!r})")
+        return _GradientStream(self, state, key, participate)
+
+    # -- per-step core (refactored sync_gradient body) ------------------
+
+    def _sync(self, state: dict, g=None, g_segments=None, key=None,
+              participate=None, with_stats: bool = False):
+        cfg, axes = self.cfg, self.axes
+        if axes is None:
+            raise ValueError(
+                "this GradientSync was built without mesh axes (in-process "
+                "simulation only); per-step sync runs inside shard_map and "
+                "needs the data-parallel axis name(s) — use round() / "
+                "make_round_fn() for axis-free aggregation rounds")
+        streaming = g_segments is not None
+        j = (int(sum(gs.shape[0] for gs in g_segments)) if streaming
+             else g.shape[0])
+        p = None if participate is None else (
+            jnp.asarray(participate, jnp.bool_).reshape(()))
+        n = _axis_size(axes)
+        zero = jnp.zeros((), jnp.float32)
+
+        def _ret(g_agg, new_state, p_eff, dropped_local):
+            if not with_stats:
+                return g_agg, new_state
+            if p_eff is None:
+                stats = {"n_active": jnp.float32(n),
+                         "dropped_nonfinite": zero}
+            else:
+                stats = {"n_active": jax.lax.psum(p_eff.astype(jnp.float32),
+                                                  axes),
+                         "dropped_nonfinite": jax.lax.psum(dropped_local,
+                                                           axes)}
+            return g_agg, new_state, stats
+
+        if cfg.kind == "none":
+            gd = g.astype(jnp.dtype(cfg.ef_dtype))
+            if p is None:
+                g_agg = dense_allreduce(gd, axes)
+            else:
+                dsum = jax.lax.psum(jnp.where(p, gd, jnp.zeros((), gd.dtype)),
+                                    axes)
+                na = jax.lax.psum(p.astype(jnp.float32), axes)
+                g_agg = dsum / jnp.maximum(na, 1.0).astype(gd.dtype)
+            return _ret(g_agg, {"step": state["step"] + 1}, p, zero)
+        if cfg.num_buckets == 0:
+            # auto-tune (DESIGN.md §2.4): resolved here, where the real
+            # data-parallel axis size is known, so the compress sweeps and
+            # the chunked collective share one concrete bucket count
+            cfg = dataclasses.replace(
+                cfg, num_buckets=sparsify.resolve_num_buckets(cfg, j, n))
+        omega = 1.0 / n
+        if cfg.kind == "globaltopk":
+            # genie baseline: TOP-k on the true aggregated accumulated
+            # gradient
+            from repro.core import select as _select
+            gf = g.astype(jnp.float32)
+            if p is None:
+                a_agg = dense_allreduce(gf, axes)
+            else:
+                a_agg = jax.lax.psum(jnp.where(p, gf, 0.0), axes)
+                na = jax.lax.psum(p.astype(jnp.float32), axes)
+                a_agg = a_agg / jnp.maximum(na, 1.0)
+            k = sparsify.resolve_k(cfg, j)
+            mask = _select.topk_mask(a_agg, k, cfg.selector)
+            return _ret(mask * a_agg, {"step": state["step"] + 1}, p, zero)
+        if cfg.kind == "sketchtopk":
+            if p is not None:
+                # the shared sketch-coordinated mask has no per-worker
+                # sit-out semantics yet — refuse at trace time, never
+                # silently average a stale sketch in
+                raise NotImplementedError(
+                    "participation masks are not supported for "
+                    "kind='sketchtopk'")
+            g_agg, new_state = _sketch_sync(cfg, state, g, axes)
+            return _ret(g_agg, new_state, None, zero)
+
+        out = sparsify.compress(cfg, state, g, key=key, omega=omega,
+                                seg_bounds=self.seg_bounds, participate=p,
+                                g_segments=g_segments)
+        p_eff, dropped = p, zero
+        if p is not None and out.values is not None:
+            # non-finite payload guard: a worker whose packed values went
+            # NaN/Inf is dropped for this step (its EF state already
+            # updated under plain participation — one-step posterior
+            # skew, §2.7)
+            finite = jnp.all(jnp.isfinite(out.values.astype(jnp.float32)))
+            p_eff = p & finite
+            dropped = (p & ~finite).astype(jnp.float32)
+        elastic = p is not None or cfg.combine != "mean"
+        if cfg.comm_mode == "sparse" and out.values is not None:
+            if elastic:
+                g_agg = sparse_allgather_combine(out.values, out.indices,
+                                                 j, axes,
+                                                 num_buckets=cfg.num_buckets,
+                                                 wire_dtype=cfg.wire_dtype,
+                                                 participate=p_eff,
+                                                 count=out.count,
+                                                 combine=cfg.combine)
+            else:
+                g_agg = sparse_allgather_combine(out.values, out.indices,
+                                                 j, axes,
+                                                 num_buckets=cfg.num_buckets,
+                                                 wire_dtype=cfg.wire_dtype)
+        else:
+            if cfg.comm_mode == "sparse":
+                # explicit, not silent: this config emits no packed pairs,
+                # so the sparse path cannot run — warn once (trace time)
+                # and surface the realized mode via effective_comm_mode
+                _warn_sparse_degrade(cfg)
+            ghat = sparsify.dense_ghat(out, j)
+            if p is not None and out.values is None:
+                finite = jnp.all(jnp.isfinite(ghat.astype(jnp.float32)))
+                p_eff = p & finite
+                dropped = (p & ~finite).astype(jnp.float32)
+            if not elastic:
+                g_agg = simulate_allreduce(ghat, axes)
+            else:
+                pe = jnp.ones((), jnp.bool_) if p_eff is None else p_eff
+                dsum = jax.lax.psum(
+                    jnp.where(pe, ghat, jnp.zeros((), ghat.dtype)), axes)
+                if cfg.combine == "support":
+                    m = sparsify.dense_mask(out, j)
+                    cnts = jax.lax.psum(
+                        jnp.where(pe, m, jnp.zeros((), m.dtype)), axes)
+                    g_agg = jnp.where(
+                        cnts > 0,
+                        dsum / jnp.maximum(cnts, 1.0).astype(ghat.dtype),
+                        jnp.zeros((), ghat.dtype))
+                else:
+                    na = jax.lax.psum(pe.astype(jnp.float32), axes)
+                    g_agg = dsum / jnp.maximum(na, 1.0).astype(ghat.dtype)
+        new_state = sparsify.observe_aggregate(cfg, out.state, g_agg,
+                                               participate=p_eff)
+        return _ret(g_agg, new_state, p_eff, dropped)
+
+    # -- in-process simulation surfaces ---------------------------------
+
+    def round(self, states: list, grads: list, omegas=None, key=None,
+              participate=None):
+        """One aggregation round over N in-process workers.
+
+        Returns (g_agg, new_states). The former sparsify.sparsified_round
+        — the combine runs locally, so ``axes`` may be None.
+
+        ``participate`` (DESIGN.md §2.7): optional per-worker
+        participation bits; sitting-out workers contribute nothing and
+        the combine divides by n_active (cfg.combine="mean") or
+        per-coordinate selection counts ("support"), mirroring the
+        per-step elastic paths.
+        """
+        cfg = self.cfg
+        n = len(grads)
+        omegas = omegas or [1.0 / n] * n
+        j = grads[0].shape[0]
+        if participate is not None:
+            if cfg.kind in ("sketchtopk", "globaltopk"):
+                raise NotImplementedError(
+                    f"elastic participation is not defined for the "
+                    f"coordinated baseline kind={cfg.kind!r}")
+            return self._round_elastic(states, grads, participate, key)
+        if cfg.kind == "sketchtopk":
+            from repro.core import select as _select
+            from repro.core import sketch as _sketch
+            k = sparsify.resolve_k(cfg, j)
+            width = _sketch.resolve_width(k, cfg.sketch_width)
+            a_list = [st["err"] + g.astype(jnp.float32)
+                      for st, g in zip(states, grads)]
+            sk_agg = sum(w * _sketch.encode(a, cfg.sketch_rows, width)
+                         for w, a in zip(omegas, a_list))
+            gmag = _sketch.estimate(sk_agg, j)
+            mask = _select.topk_mask(gmag, k, cfg.selector)
+            g_agg = sum(w * (mask * a) for w, a in zip(omegas, a_list))
+            new_states = [{"err": a - mask * a, "step": st["step"] + 1}
+                          for a, st in zip(a_list, states)]
+            return g_agg, new_states
+        if cfg.kind == "globaltopk":
+            # genie: mask from the true aggregated accumulated gradient
+            from repro.core import select as _select
+            a_list = [grads[i].astype(jnp.float32) for i in range(n)]
+            a_agg = sum(w * a for w, a in zip(omegas, a_list))
+            k = sparsify.resolve_k(cfg, j)
+            mask = _select.topk_mask(a_agg, k, cfg.selector)
+            g_agg = mask * a_agg
+            return g_agg, states
+        outs = []
+        for i in range(n):
+            ki = None if key is None else jax.random.fold_in(key, i)
+            outs.append(sparsify.compress(cfg, states[i], grads[i], key=ki,
+                                          omega=omegas[i]))
+        g_agg = sum(w * sparsify.dense_ghat(o, j)
+                    for w, o in zip(omegas, outs))
+        new_states = [sparsify.observe_aggregate(cfg, o.state, g_agg)
+                      for o in outs]
+        return g_agg, new_states
+
+    def _round_elastic(self, states: list, grads: list, participate: list,
+                       key):
+        """round() under a per-worker participation mask — the in-process
+        mirror of the per-step elastic combine (DESIGN.md §2.7): inert
+        payloads from sitting-out workers, equal weights over the ACTIVE
+        set ("mean") or per-coordinate support counts ("support"). An
+        all-absent round yields g_agg = 0 and every state decays."""
+        cfg = self.cfg
+        n = len(grads)
+        j = grads[0].shape[0]
+        pfs = [jnp.asarray(p, jnp.bool_) for p in participate]
+        outs = []
+        for i in range(n):
+            ki = None if key is None else jax.random.fold_in(key, i)
+            outs.append(sparsify.compress(cfg, states[i], grads[i], key=ki,
+                                          omega=1.0 / n,
+                                          participate=pfs[i]))
+        ghats = [sparsify.dense_ghat(o, j) for o in outs]  # inert when absent
+        dense = sum(ghats)
+        if cfg.combine == "support":
+            counts = sum(sparsify.dense_mask(o, j) for o in outs)
+            g_agg = jnp.where(counts > 0,
+                              dense / jnp.maximum(counts, 1.0), 0.0)
+        else:
+            n_active = sum(p.astype(jnp.float32) for p in pfs)
+            g_agg = dense / jnp.maximum(n_active, 1.0)
+        new_states = [sparsify.observe_aggregate(cfg, o.state, g_agg,
+                                                 participate=p)
+                      for o, p in zip(outs, pfs)]
+        return g_agg, new_states
+
+    def make_round_fn(self, n_workers: int = None):
+        """Jitted vmapped aggregation round over stacked worker
+        states/grads (the former sparsify.make_round_fn).
+
+        states_stacked: pytree with leading (N,) axis; grads: (N, J).
+        Returns (g_agg (J,), new_states_stacked). Equal weights
+        w_n = 1/N. The returned function takes an optional trailing PRNG
+        ``key``; each worker i compresses with ``fold_in(key, i)``
+        (matching :meth:`round`) — required for kind="randk", ignored by
+        the deterministic sparsifiers.
+        """
+        cfg = self.cfg
+        if n_workers is None:
+            n_workers = self.n_workers
+        if n_workers is None:
+            raise ValueError("make_round_fn needs n_workers (at "
+                             "construction or per call)")
+        omega = 1.0 / n_workers
+
+        if cfg.kind == "sketchtopk":
+            from repro.core import select as _select
+            from repro.core import sketch as _sketch
+
+            def round_sketch(states, grads):
+                j = grads.shape[1]
+                k = sparsify.resolve_k(cfg, j)
+                width = _sketch.resolve_width(k, cfg.sketch_width)
+                a = states["err"] + grads.astype(jnp.float32)    # (N, J)
+                sk = jnp.sum(jax.vmap(
+                    lambda ai: _sketch.encode(ai, cfg.sketch_rows,
+                                              width))(a), 0) * omega
+                gmag = _sketch.estimate(sk, j)
+                mask = _select.topk_mask(gmag, k, cfg.selector)
+                ghat = mask[None] * a
+                g_agg = jnp.sum(ghat, 0) * omega
+                return g_agg, {"err": a - ghat,
+                               "step": states["step"] + 1}
+
+            return jax.jit(round_sketch)
+
+        def one(state, g, k_i):
+            out = sparsify.compress(cfg, state, g, key=k_i, omega=omega)
+            return sparsify.dense_ghat(out, g.shape[0]), out.state
+
+        def round_fn(states, grads, key=None):
+            if key is None:
+                ghats, new_states = jax.vmap(
+                    lambda s, g: one(s, g, None))(states, grads)
+            else:
+                # per-worker folded key, matching round()'s
+                # fold_in(key, i) stream
+                keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+                    jnp.arange(n_workers))
+                ghats, new_states = jax.vmap(one)(states, grads, keys)
+            g_agg = jnp.sum(ghats, 0) * omega
+            new_states = jax.vmap(
+                lambda s: sparsify.observe_aggregate(cfg, s,
+                                                     g_agg))(new_states)
+            return g_agg, new_states
+
+        return jax.jit(round_fn)
+
+
+class _GradientStream:
+    """Streaming handle from :meth:`GradientSync.begin`: feed
+    layer-aligned gradient segments in emission order as the backward
+    pass produces them; ``finish()`` runs the tail barrier (global
+    trim/pack + sparse collective + ``observe_aggregate``) and returns
+    (g_agg, new_state[, stats]). Single-shot: segments cannot be fed
+    after finish()."""
+
+    def __init__(self, sync: "GradientSync", state: dict, key, participate):
+        self._gs = sync
+        self._state = state
+        self._key = key
+        self._participate = participate
+        self._segments = []
+        self._done = False
+
+    def feed_segment(self, g_seg: jnp.ndarray):
+        """Append one flat gradient segment (layer order, contiguous)."""
+        if self._done:
+            raise RuntimeError("feed_segment() after finish()")
+        self._segments.append(g_seg)
+        return self
+
+    def finish(self, *, with_stats: bool = False):
+        """Tail barrier: trim/pack globally, run the collective, observe."""
+        if self._done:
+            raise RuntimeError("finish() called twice on one stream")
+        if not self._segments:
+            raise ValueError("finish() with no fed segments")
+        self._done = True
+        return self._gs._sync(self._state, g_segments=list(self._segments),
+                              key=self._key, participate=self._participate,
+                              with_stats=with_stats)
+
+
+# one-shot deprecation marker for the sync_gradient shim (tests reset it)
+_shim_warned = False
+
+
 def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
                   axes: AxisNames, key=None, seg_bounds=None,
                   participate=None, with_stats: bool = False):
-    """Full per-step gradient sync for one worker shard (inside shard_map).
+    """DEPRECATED thin shim over :class:`GradientSync`.
 
-    Returns (g_agg, new_state). `g` is this rank's flat local gradient
-    (fp32); `axes` are the data-parallel mesh axis name(s). The
-    compression pipeline (reference vs fused two-sweep) is selected by
-    cfg.pipeline; with pipeline="fused" + comm_mode="sparse" the dense
-    ghat is never materialized and the packed (values, indices) feed the
-    all-gather directly — zero extra O(J) sweeps for the sparse path.
-    cfg.num_buckets > 1 additionally chunks that all-gather into
-    per-bucket collectives interleaved with the local scatter-add
-    combine (DESIGN.md §2.4 overlap schedule).
-
-    cfg.allocation != "global" (DESIGN.md §2.6) splits the selection
-    budget per segment BEFORE compression; ``seg_bounds`` optionally
-    pins the segmentation (the train step passes layer-aligned
-    TreeFlattener bounds — static python ints, safe under shard_map).
-    The wire format is allocation-invariant: compress still packs
-    exactly k pairs (sum(k_l) == k), so the sparse collective moves the
-    same N*k*(4+wire_value_bytes) bytes in every mode
-    (tests/test_allocate.py::TestSyncGradient). Unsupported combos
-    raise here at trace time, never degrade silently.
-
-    ``participate`` (DESIGN.md §2.7) is this rank's per-step liveness, a
-    traced () bool — when False the rank ships an inert payload, its EF
-    memory decays by cfg.err_decay, and the combine averages over the
-    active set only. A rank whose packed payload turns non-finite
-    (NaN/Inf) is demoted to non-participant for the step BEFORE the
-    combine, so one poisoned worker cannot corrupt g_agg. With
-    ``with_stats=True`` a third return carries the realized health
-    counters {"n_active", "dropped_nonfinite"} (rank-identical psums).
+    Bit-identical to ``GradientSync(cfg, axes, seg_bounds=seg_bounds)(
+    state, g, key=key, participate=participate, with_stats=with_stats)``
+    — the per-run object is the supported surface (build it once from
+    the static fields; call it per step). Warns ``DeprecationWarning``
+    exactly once per process.
     """
-    if cfg.allocation != "global":
-        from repro.core import allocate
-        allocate.check_allocation(cfg)     # explicit trace-time error
-    p = None if participate is None else (
-        jnp.asarray(participate, jnp.bool_).reshape(()))
-    n = _axis_size(axes)
-    zero = jnp.zeros((), jnp.float32)
-
-    def _ret(g_agg, new_state, p_eff, dropped_local):
-        if not with_stats:
-            return g_agg, new_state
-        if p_eff is None:
-            stats = {"n_active": jnp.float32(n), "dropped_nonfinite": zero}
-        else:
-            stats = {"n_active": jax.lax.psum(p_eff.astype(jnp.float32),
-                                              axes),
-                     "dropped_nonfinite": jax.lax.psum(dropped_local, axes)}
-        return g_agg, new_state, stats
-
-    if cfg.kind == "none":
-        gd = g.astype(jnp.dtype(cfg.ef_dtype))
-        if p is None:
-            g_agg = dense_allreduce(gd, axes)
-        else:
-            dsum = jax.lax.psum(jnp.where(p, gd, jnp.zeros((), gd.dtype)),
-                                axes)
-            na = jax.lax.psum(p.astype(jnp.float32), axes)
-            g_agg = dsum / jnp.maximum(na, 1.0).astype(gd.dtype)
-        return _ret(g_agg, {"step": state["step"] + 1}, p, zero)
-    if cfg.num_buckets == 0:
-        # auto-tune (DESIGN.md §2.4): resolved here, where the real
-        # data-parallel axis size is known, so the compress sweeps and
-        # the chunked collective share one concrete bucket count
-        cfg = dataclasses.replace(cfg, num_buckets=sparsify.resolve_num_buckets(
-            cfg, g.shape[0], n))
-    omega = 1.0 / n
-    if cfg.kind == "globaltopk":
-        # genie baseline: TOP-k on the true aggregated accumulated gradient
-        from repro.core import select as _select
-        gf = g.astype(jnp.float32)
-        if p is None:
-            a_agg = dense_allreduce(gf, axes)
-        else:
-            a_agg = jax.lax.psum(jnp.where(p, gf, 0.0), axes)
-            na = jax.lax.psum(p.astype(jnp.float32), axes)
-            a_agg = a_agg / jnp.maximum(na, 1.0)
-        k = sparsify.resolve_k(cfg, g.shape[0])
-        mask = _select.topk_mask(a_agg, k, cfg.selector)
-        return _ret(mask * a_agg, {"step": state["step"] + 1}, p, zero)
-    if cfg.kind == "sketchtopk":
-        if p is not None:
-            # the shared sketch-coordinated mask has no per-worker
-            # sit-out semantics yet — refuse at trace time, never
-            # silently average a stale sketch in
-            raise NotImplementedError(
-                "participation masks are not supported for kind='sketchtopk'")
-        g_agg, new_state = _sketch_sync(cfg, state, g, axes)
-        return _ret(g_agg, new_state, None, zero)
-
-    out = sparsify.compress(cfg, state, g, key=key, omega=omega,
-                            seg_bounds=seg_bounds, participate=p)
-    p_eff, dropped = p, zero
-    if p is not None and out.values is not None:
-        # non-finite payload guard: a worker whose packed values went
-        # NaN/Inf is dropped for this step (its EF state already updated
-        # under plain participation — one-step posterior skew, §2.7)
-        finite = jnp.all(jnp.isfinite(out.values.astype(jnp.float32)))
-        p_eff = p & finite
-        dropped = (p & ~finite).astype(jnp.float32)
-    elastic = p is not None or cfg.combine != "mean"
-    if cfg.comm_mode == "sparse" and out.values is not None:
-        if elastic:
-            g_agg = sparse_allgather_combine(out.values, out.indices,
-                                             g.shape[0], axes,
-                                             num_buckets=cfg.num_buckets,
-                                             wire_dtype=cfg.wire_dtype,
-                                             participate=p_eff,
-                                             count=out.count,
-                                             combine=cfg.combine)
-        else:
-            g_agg = sparse_allgather_combine(out.values, out.indices,
-                                             g.shape[0], axes,
-                                             num_buckets=cfg.num_buckets,
-                                             wire_dtype=cfg.wire_dtype)
-    else:
-        if cfg.comm_mode == "sparse":
-            # explicit, not silent: this config emits no packed pairs, so
-            # the sparse path cannot run — warn once (trace time) and
-            # surface the realized mode via effective_comm_mode(cfg)
-            _warn_sparse_degrade(cfg)
-        ghat = sparsify.dense_ghat(out, g.shape[0])
-        if p is not None and out.values is None:
-            finite = jnp.all(jnp.isfinite(ghat.astype(jnp.float32)))
-            p_eff = p & finite
-            dropped = (p & ~finite).astype(jnp.float32)
-        if not elastic:
-            g_agg = simulate_allreduce(ghat, axes)
-        else:
-            pe = jnp.ones((), jnp.bool_) if p_eff is None else p_eff
-            dsum = jax.lax.psum(
-                jnp.where(pe, ghat, jnp.zeros((), ghat.dtype)), axes)
-            if cfg.combine == "support":
-                m = sparsify.dense_mask(out, g.shape[0])
-                cnts = jax.lax.psum(
-                    jnp.where(pe, m, jnp.zeros((), m.dtype)), axes)
-                g_agg = jnp.where(
-                    cnts > 0,
-                    dsum / jnp.maximum(cnts, 1.0).astype(ghat.dtype),
-                    jnp.zeros((), ghat.dtype))
-            else:
-                na = jax.lax.psum(pe.astype(jnp.float32), axes)
-                g_agg = dsum / jnp.maximum(na, 1.0).astype(ghat.dtype)
-    new_state = sparsify.observe_aggregate(cfg, out.state, g_agg,
-                                           participate=p_eff)
-    return _ret(g_agg, new_state, p_eff, dropped)
+    global _shim_warned
+    if not _shim_warned:
+        _shim_warned = True
+        warnings.warn(
+            "aggregate.sync_gradient is deprecated: build an "
+            "aggregate.GradientSync(cfg, axes, ...) once per run and call "
+            "it per step (DESIGN.md §2.8).",
+            DeprecationWarning, stacklevel=2)
+    return GradientSync(cfg, axes, seg_bounds=seg_bounds)(
+        state, g, key=key, participate=participate, with_stats=with_stats)
 
 
 def _sketch_sync(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,

@@ -46,6 +46,39 @@ class TreeFlattener:
                 vec, off, size).reshape(shape).astype(dt))
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
 
+    def flatten_segments(self, tree, bounds) -> list:
+        """Per-segment flats for streaming compression (DESIGN.md §2.8).
+
+        ``bounds`` is a leaf-aligned contiguous partition of [0, total)
+        — (offset, size) pairs such as ``core.allocate.layer_segments``
+        over :meth:`layer_bounds`. Returns one flat array per segment,
+        each built ONLY from that segment's leaves (no global
+        concatenate), so a segment's compression sweep depends on
+        nothing produced after its last leaf's gradient — which is what
+        lets XLA schedule it behind the remaining backward pass under
+        ``overlap="backward"``. ``concatenate(result) == flatten(tree)``
+        bitwise."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        segs, li = [], 0
+        for off, size in bounds:
+            if li >= len(self.offsets) or self.offsets[li] != off:
+                raise ValueError(
+                    f"segment offset {off} is not leaf-aligned "
+                    f"(leaf offsets: {self.offsets[li:li + 2]}...)")
+            parts, have = [], 0
+            while have < size:
+                parts.append(jnp.ravel(leaves[li]).astype(self.dtype))
+                have += self.sizes[li]
+                li += 1
+            if have != size:
+                raise ValueError(
+                    f"segment (off={off}, size={size}) cuts inside a leaf")
+            segs.append(parts[0] if len(parts) == 1
+                        else jnp.concatenate(parts))
+        if li != len(leaves):
+            raise ValueError("bounds do not cover every leaf")
+        return segs
+
     def layer_bounds(self) -> list:
         """Per-leaf (offset, size) metadata of the flat vector — the
         layer-aligned segmentation source for density allocation:

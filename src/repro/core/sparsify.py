@@ -91,13 +91,6 @@ def resolve_k(cfg: SparsifierConfig, j: int) -> int:
 # State
 # ---------------------------------------------------------------------------
 
-def _fused_supported(cfg: SparsifierConfig) -> bool:
-    """The capability/dispatch table lives in kernels.compress.dispatch
-    (DESIGN.md §2.5); this is the sparsify-side shorthand."""
-    from repro.kernels.compress.dispatch import dispatch
-    return dispatch(cfg).path == "fused"
-
-
 def resolve_num_buckets(cfg: SparsifierConfig, j: int,
                         n_workers: int = 1) -> int:
     """cfg.num_buckets, with 0 resolved to the auto-tuned value.
@@ -157,9 +150,10 @@ def init_state(cfg: SparsifierConfig, j: int) -> dict:
     tests/test_checkpoint.py (round-trip + legacy migration). Density
     allocation adds NO state — every mode reuses these layouts.
     """
+    from repro.kernels.compress.dispatch import dispatch
     dt = jnp.dtype(cfg.ef_dtype)
     z = jnp.zeros((j,), dt)
-    if _fused_supported(cfg):
+    if dispatch(cfg).path == "fused":
         # ONE J-sized state vector: err_prev = a^{t-1} * (1 - s^{t-1}),
         # maintained by the O(k) scatter-zero that closes each step (no
         # dense mask exists in the fused layout)
@@ -244,7 +238,8 @@ def _reference_select(cfg: SparsifierConfig, a: jnp.ndarray,
 
 def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
              key: Optional[jax.Array] = None, omega: float = 1.0,
-             seg_bounds=None, participate=None) -> CompressOut:
+             seg_bounds=None, participate=None,
+             g_segments=None) -> CompressOut:
     """Sparsify one worker's flat gradient. omega = this worker's weight w_n.
 
     Inputs: ``g`` (J,) fp gradient (cast to cfg.ef_dtype); ``state`` the
@@ -277,11 +272,29 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
     ``participate=True`` is a bitwise pass-through. Both pipelines share
     the masked-input helper (kernels.compress.ops.masked_inputs), so
     their post-step states stay bit-comparable under any mask.
+
+    cfg.overlap="backward" (DESIGN.md §2.8): the fused sweeps partition
+    by the stream segments so compression can run behind the backward
+    pass. ``g_segments`` feeds the gradient as per-segment arrays (the
+    train step's streaming form; ``g`` must then be None); with a flat
+    ``g`` the vector is sliced into the resolved stream partition
+    internally, so benches and audits see the streaming program without
+    a train loop. Output is BIT-identical to overlap="none" either way
+    (selection is partition-invariant); unsupported configs raise via
+    kernels.compress.dispatch.check_overlap, never degrade silently.
     """
-    j = g.shape[0]
+    if g_segments is not None:
+        if g is not None:
+            raise ValueError("pass g or g_segments, not both")
+        if cfg.overlap != "backward":
+            raise ValueError("g_segments requires overlap='backward'")
+        j = int(sum(gs.shape[0] for gs in g_segments))
+    else:
+        j = g.shape[0]
     k = resolve_k(cfg, j)
     dt = jnp.dtype(cfg.ef_dtype)
-    g = g.astype(dt)
+    if g is not None:
+        g = g.astype(dt)
     pf = None
     if participate is not None:
         pf = jnp.asarray(participate, jnp.bool_)
@@ -293,13 +306,49 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         # RESOLVED bucket count (segments and buckets coincide)
         from repro.core import allocate
         allocate.check_allocation(cfg)
-        if seg_bounds is None:
+        if seg_bounds is None and g_segments is None:
             seg_bounds = allocate.segment_bounds(
                 j, allocate.resolve_num_segments(cfg, j))
 
-    if _fused_supported(cfg):
+    stream_bounds = None
+    if cfg.overlap != "none":
+        from repro.kernels.compress.dispatch import check_overlap
+        check_overlap(cfg)           # fused-dispatch configs only
+        if g_segments is not None:
+            g_segments = [gs.astype(dt) for gs in g_segments]
+            off = 0
+            stream_bounds = []
+            for gs in g_segments:
+                stream_bounds.append((off, gs.shape[0]))
+                off += gs.shape[0]
+            if cfg.allocation != "global":
+                # one partition drives both the stream and the
+                # allocation (the train step builds them from the same
+                # layer-aligned bounds)
+                if seg_bounds is None:
+                    seg_bounds = stream_bounds
+                elif [tuple(b) for b in seg_bounds] != stream_bounds:
+                    raise ValueError(
+                        "streaming with allocation != 'global' needs "
+                        "seg_bounds == the g_segments partition")
+        else:
+            # flat g + overlap="backward": slice into the stream
+            # partition here so the streaming program structure is
+            # exercised (and audited) without a segment-feeding caller
+            if cfg.allocation != "global":
+                stream_bounds = [tuple(b) for b in seg_bounds]
+            else:
+                from repro.core import allocate
+                stream_bounds = allocate.segment_bounds(
+                    j, allocate.resolve_num_segments(cfg, j))
+            g_segments = [g[o:o + sz] for o, sz in stream_bounds]
+            g = None
+
+    from repro.kernels.compress.dispatch import dispatch
+    if dispatch(cfg).path == "fused":
         return _compress_fused(cfg, state, g, k, omega, key, seg_bounds,
-                               participate=pf)
+                               participate=pf, g_segments=g_segments,
+                               stream_bounds=stream_bounds)
 
     if pf is not None and "err" in state:
         # reference oracle under elastic participation: the SAME masked
@@ -493,7 +542,8 @@ def _compress_regtopk_sparse(cfg: SparsifierConfig, state: dict,
 
 def _compress_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
                     k: int, omega: float, key=None,
-                    seg_bounds=None, participate=None) -> CompressOut:
+                    seg_bounds=None, participate=None, g_segments=None,
+                    stream_bounds=None) -> CompressOut:
     """Two-sweep fused pipeline (repro.kernels.compress, DESIGN.md §2.2).
 
     selector="exact": reference-parity top-k semantics;
@@ -529,6 +579,7 @@ def _compress_fused(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         ef_dtype=cfg.ef_dtype, key=key, num_buckets=cfg.num_buckets,
         allocation=cfg.allocation, seg_bounds=seg_bounds,
         participate=participate, err_decay=cfg.err_decay,
+        g_segments=g_segments, stream_bounds=stream_bounds,
         **kwargs)
     dt = jnp.dtype(cfg.ef_dtype)
     new = {"err_prev": out["err"], "step": state["step"] + 1}
@@ -573,7 +624,8 @@ def observe_aggregate(cfg: SparsifierConfig, state: dict, g_agg: jnp.ndarray,
         state = dict(state)
         pf = None if participate is None else jnp.asarray(participate,
                                                           jnp.bool_)
-        if _fused_supported(cfg) or cfg.state_format == "sparse":
+        from repro.kernels.compress.dispatch import dispatch
+        if dispatch(cfg).path == "fused" or cfg.state_format == "sparse":
             # O(k) posterior: g^{t-1} is read only at the support of s^{t-1}
             from repro.core import bigvec
             gsel = bigvec.gather(g_agg, state["idx_prev"]).astype(
@@ -630,55 +682,17 @@ def dense_ghat(out: CompressOut, j: int) -> jnp.ndarray:
 def make_round_fn(cfg: SparsifierConfig, n_workers: int):
     """Jitted vmapped aggregation round over stacked worker states/grads.
 
-    states_stacked: pytree with leading (N,) axis; grads: (N, J).
-    Returns (g_agg (J,), new_states_stacked). Equal weights w_n = 1/N.
-    The returned function takes an optional trailing PRNG ``key``; each
-    worker i compresses with ``fold_in(key, i)`` (matching
-    ``sparsified_round``) — required for kind="randk", ignored by the
-    deterministic sparsifiers.
+    Thin delegate to :meth:`core.aggregate.GradientSync.make_round_fn`
+    (the unified simulation surface — one code path for the train step,
+    the round drivers, and the tests): states_stacked is a pytree with
+    leading (N,) axis, grads (N, J); returns (g_agg (J,),
+    new_states_stacked). Equal weights w_n = 1/N. The returned function
+    takes an optional trailing PRNG ``key``; each worker i compresses
+    with ``fold_in(key, i)`` (matching ``sparsified_round``) — required
+    for kind="randk", ignored by the deterministic sparsifiers.
     """
-    omega = 1.0 / n_workers
-
-    if cfg.kind == "sketchtopk":
-        from repro.core import select as _select
-        from repro.core import sketch as _sketch
-
-        def round_sketch(states, grads):
-            j = grads.shape[1]
-            k = resolve_k(cfg, j)
-            width = _sketch.resolve_width(k, cfg.sketch_width)
-            a = states["err"] + grads.astype(jnp.float32)    # (N, J)
-            sk = jnp.sum(jax.vmap(
-                lambda ai: _sketch.encode(ai, cfg.sketch_rows, width))(a),
-                0) * omega
-            gmag = _sketch.estimate(sk, j)
-            mask = _select.topk_mask(gmag, k, cfg.selector)
-            ghat = mask[None] * a
-            g_agg = jnp.sum(ghat, 0) * omega
-            return g_agg, {"err": a - ghat, "step": states["step"] + 1}
-
-        return jax.jit(round_sketch)
-
-    def one(state, g, k_i):
-        out = compress(cfg, state, g, key=k_i, omega=omega)
-        return dense_ghat(out, g.shape[0]), out.state
-
-    def round_fn(states, grads, key=None):
-        if key is None:
-            ghats, new_states = jax.vmap(
-                lambda s, g: one(s, g, None))(states, grads)
-        else:
-            # per-worker folded key, matching sparsified_round's
-            # fold_in(key, i) stream
-            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
-                jnp.arange(n_workers))
-            ghats, new_states = jax.vmap(one)(states, grads, keys)
-        g_agg = jnp.sum(ghats, 0) * omega
-        new_states = jax.vmap(
-            lambda s: observe_aggregate(cfg, s, g_agg))(new_states)
-        return g_agg, new_states
-
-    return jax.jit(round_fn)
+    from repro.core import aggregate
+    return aggregate.GradientSync(cfg, None).make_round_fn(n_workers)
 
 
 def stack_states(states: list):
@@ -690,80 +704,17 @@ def sparsified_round(cfg: SparsifierConfig, states: list, grads: list,
                      participate: Optional[list] = None):
     """One aggregation round over N in-process workers (validation path).
 
-    Returns (g_agg, new_states). Used by the paper-experiment benchmarks
-    and tests; the production path is core/aggregate.sync_gradient under
-    shard_map (train/step.py stage 4).
+    Thin delegate to :meth:`core.aggregate.GradientSync.round` — the
+    round logic lives on the same GradientSync object the production
+    train step builds (axes=None runs the combine in-process), so tests,
+    the paper-experiment benchmarks, and the train path exercise one
+    code path. Returns (g_agg, new_states).
 
     ``participate`` (DESIGN.md §2.7): optional per-worker participation
     bits. Sitting-out workers contribute nothing; the combine divides by
     n_active (cfg.combine="mean") or per-coordinate selection counts
     (cfg.combine="support"), mirroring sync_gradient's elastic paths.
     """
-    n = len(grads)
-    omegas = omegas or [1.0 / n] * n
-    j = grads[0].shape[0]
-    if participate is not None:
-        if cfg.kind in ("sketchtopk", "globaltopk"):
-            raise NotImplementedError(
-                f"elastic participation is not defined for the "
-                f"coordinated baseline kind={cfg.kind!r}")
-        return _elastic_round(cfg, states, grads, participate, key)
-    if cfg.kind == "sketchtopk":
-        from repro.core import select as _select
-        from repro.core import sketch as _sketch
-        k = resolve_k(cfg, j)
-        width = _sketch.resolve_width(k, cfg.sketch_width)
-        a_list = [st["err"] + g.astype(jnp.float32)
-                  for st, g in zip(states, grads)]
-        sk_agg = sum(w * _sketch.encode(a, cfg.sketch_rows, width)
-                     for w, a in zip(omegas, a_list))
-        gmag = _sketch.estimate(sk_agg, j)
-        mask = _select.topk_mask(gmag, k, cfg.selector)
-        g_agg = sum(w * (mask * a) for w, a in zip(omegas, a_list))
-        new_states = [{"err": a - mask * a, "step": st["step"] + 1}
-                      for a, st in zip(a_list, states)]
-        return g_agg, new_states
-    if cfg.kind == "globaltopk":
-        # genie: mask from the true aggregated accumulated gradient
-        a_list = [grads[i].astype(jnp.float32) for i in range(n)]
-        a_agg = sum(w * a for w, a in zip(omegas, a_list))
-        k = resolve_k(cfg, j)
-        mask = select.topk_mask(a_agg, k, cfg.selector)
-        g_agg = mask * a_agg
-        return g_agg, states
-    outs = []
-    for i in range(n):
-        ki = None if key is None else jax.random.fold_in(key, i)
-        outs.append(compress(cfg, states[i], grads[i], key=ki, omega=omegas[i]))
-    g_agg = sum(w * dense_ghat(o, j) for w, o in zip(omegas, outs))
-    new_states = [observe_aggregate(cfg, o.state, g_agg) for o in outs]
-    return g_agg, new_states
-
-
-def _elastic_round(cfg: SparsifierConfig, states: list, grads: list,
-                   participate: list, key):
-    """sparsified_round under a per-worker participation mask — the
-    in-process mirror of sync_gradient's elastic combine (DESIGN.md
-    §2.7): inert payloads from sitting-out workers, equal weights over
-    the ACTIVE set ("mean") or per-coordinate support counts
-    ("support"). An all-absent round yields g_agg = 0 and every state
-    decays."""
-    n = len(grads)
-    j = grads[0].shape[0]
-    pfs = [jnp.asarray(p, jnp.bool_) for p in participate]
-    outs = []
-    for i in range(n):
-        ki = None if key is None else jax.random.fold_in(key, i)
-        outs.append(compress(cfg, states[i], grads[i], key=ki,
-                             omega=1.0 / n, participate=pfs[i]))
-    ghats = [dense_ghat(o, j) for o in outs]           # inert when absent
-    dense = sum(ghats)
-    if cfg.combine == "support":
-        counts = sum(dense_mask(o, j) for o in outs)   # inert masks too
-        g_agg = jnp.where(counts > 0, dense / jnp.maximum(counts, 1.0), 0.0)
-    else:
-        n_active = sum(p.astype(jnp.float32) for p in pfs)
-        g_agg = dense / jnp.maximum(n_active, 1.0)
-    new_states = [observe_aggregate(cfg, o.state, g_agg, participate=p)
-                  for o, p in zip(outs, pfs)]
-    return g_agg, new_states
+    from repro.core import aggregate
+    return aggregate.GradientSync(cfg, None).round(
+        states, grads, omegas=omegas, key=key, participate=participate)

@@ -132,6 +132,27 @@ def packed_len(cfg, j: int) -> int:
     return k
 
 
+def check_overlap(cfg) -> None:
+    """Validate ``cfg.overlap`` (DESIGN.md §2.8) — raises ValueError,
+    never silently downgrades.
+
+    ``overlap="backward"`` streams the gradient into compression per
+    layer-aligned segment, which only the fused two-sweep pipeline
+    supports (the reference path materializes dense intermediates whose
+    math does not partition). A config the capability table routes to
+    the reference path must therefore not request streaming."""
+    overlap = getattr(cfg, "overlap", "none")
+    if overlap not in ("none", "backward"):
+        raise ValueError(f"overlap={overlap!r} (expected 'none' or "
+                         "'backward')")
+    if overlap == "backward":
+        d = dispatch(cfg)
+        if d.path != "fused":
+            raise ValueError(
+                "overlap='backward' requires the fused pipeline; this "
+                f"config dispatches to the reference path ({d.reason})")
+
+
 def effective_comm_mode(cfg) -> str:
     """The communication mode cfg actually realizes in sync_gradient.
 

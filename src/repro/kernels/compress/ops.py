@@ -37,6 +37,17 @@ becomes per-segment trims + one O(sum(caps)) pack; sum(k_l) == k keeps
 the packed output exactly k pairs. Bucketing continues to govern only
 the comm-side chunking of those pairs (core.aggregate).
 
+With ``g_segments``/``stream_bounds`` (backward-overlapped streaming,
+DESIGN.md §2.8) the gradient arrives as per-segment arrays instead of
+one flat vector, and the sweeps partition by the stream bounds: each
+segment's sweep-1 (EF fold, score, histogram/statistics) depends only
+on its own segment, so XLA schedules it as soon as the backward pass
+emits that segment's leaves; the trim/pack is the only cross-segment
+join. The same partition-invariance that makes bucketing bit-identical
+makes streaming bit-identical — and S partial sweeps of J/S elements
+still audit as the same 2 traversals (the streaming reorders WHEN
+sweeps run, not how many).
+
 The execution strategy is auto-selected from the JAX backend (the
 "interpret or not" decision the old kernels hardcoded): native Pallas
 kernels on TPU, fusion-friendly XLA lowering elsewhere, and
@@ -129,6 +140,17 @@ def _scalar_select(pred, x, y):
     return jax.lax.select(p, x, y)
 
 
+def _decayed_err(err_prev, pf, err_decay):
+    """``where(p, err, err_decay * err)`` — the EF-decay half of
+    ``masked_inputs``, factored out so the streaming path (DESIGN.md
+    §2.8, no flat ``g`` to mask) applies the bitwise-identical select
+    to the flat state while masking ``g`` per segment."""
+    return _scalar_select(
+        pf, err_prev,
+        (jnp.float32(err_decay) * err_prev.astype(jnp.float32)
+         ).astype(err_prev.dtype))
+
+
 def masked_inputs(g, err_prev, participate, err_decay):
     """Effective sweep-1 inputs under elastic participation (DESIGN.md
     §2.7): ``g_eff = where(p, g, 0)`` and ``err_eff = where(p, err,
@@ -145,11 +167,7 @@ def masked_inputs(g, err_prev, participate, err_decay):
     bit-comparable. Returns (g_eff, err_eff, p_bool)."""
     pf = jnp.asarray(participate, jnp.bool_)
     g_eff = _scalar_select(pf, g, jnp.zeros_like(g))
-    err_eff = _scalar_select(
-        pf, err_prev,
-        (jnp.float32(err_decay) * err_prev.astype(jnp.float32)
-         ).astype(err_prev.dtype))
-    return g_eff, err_eff, pf
+    return g_eff, _decayed_err(err_prev, pf, err_decay), pf
 
 
 def _sweep1_xla(kind, g, err_prev, c, *, momentum, mom, gate=None):
@@ -171,22 +189,26 @@ def _sweep1_xla(kind, g, err_prev, c, *, momentum, mom, gate=None):
     return a, a * c, mom_out
 
 
-def _sweep1_slice(kind, g, err_prev, c, off, size, *, momentum, mom,
+def _sweep1_slice(kind, g_s, err_s, c, *, momentum, mom_s,
                   interpret, gate=None):
-    """One padded-slice sweep-1 launch, shared by the bucketed global
-    path and the allocated per-segment path. Returns (a (size,),
-    score_padded, mom (size,)|None, hist) with the bin-0 padding
-    contribution already corrected out of the histogram. ``gate`` is
-    the elastic participation scalar for mode="dgc" (kernel-side
-    a = err + gate * mom select; None for the ungated kernel)."""
+    """One padded-slice sweep-1 launch over PRE-SLICED inputs, shared by
+    the bucketed global path, the allocated per-segment path, and the
+    streaming path (whose ``g_s`` arrives as a standalone segment array
+    rather than a view of a flat vector — slicing happens at the call
+    site so both forms share this launch verbatim). Returns
+    (a (size,), score_padded, mom (size,)|None, hist) with the bin-0
+    padding contribution already corrected out of the histogram.
+    ``gate`` is the elastic participation scalar for mode="dgc"
+    (kernel-side a = err + gate * mom select; None for the ungated
+    kernel)."""
     dgc = kind == "dgc"
+    size = g_s.shape[0]
     j_pad = -(-size // pk.BLOCK) * pk.BLOCK
-    pad = lambda x: jnp.pad(
-        x[off:off + size].astype(jnp.float32), (0, j_pad - size))
+    pad = lambda x: jnp.pad(x.astype(jnp.float32), (0, j_pad - size))
     a_p, score_p, mom_p, _amax, hist = pk.sweep1_pallas(
-        pad(g), pad(err_prev), c,
+        pad(g_s), pad(err_s), c,
         mode=("dgc" if dgc else "plain"), momentum=momentum,
-        mom=None if mom is None else pad(mom),
+        mom=None if mom_s is None else pad(mom_s),
         gate=gate if dgc else None, interpret=interpret)
     # padding contributed (j_pad - size) zero keys to bin 0
     return (a_p[:size], score_p, mom_p[:size] if dgc else None,
@@ -207,7 +229,7 @@ def _sweep2_slice(score_p, tau, off, size, maxpb: int, interpret):
 
 def _candidates_pallas(kind, g, err_prev, c, step, *, k: int,
                        regtopk: bool, momentum: float, mom, interpret: bool,
-                       bounds, gate=None):
+                       bounds, gate=None, g_segments=None):
     """Per-bucket Pallas sweeps + histogram-merge global threshold.
 
     Sweep 1 runs once per bucket and emits that bucket's 2048-bin
@@ -215,13 +237,23 @@ def _candidates_pallas(kind, g, err_prev, c, step, *, k: int,
     tau (count(|score| >= tau) >= k + margin over the WHOLE vector, so
     per-bucket >=tau compaction unions to a global-top-k cover). Sweep 2
     then compacts each bucket independently against that shared tau.
+
+    ``g_segments`` (streaming, DESIGN.md §2.8): per-``bounds`` gradient
+    segments in place of the flat ``g`` — each slot's sweep-1 then
+    depends only on its own segment array (the backward pass can still
+    be producing the others), and the histogram merge is the first
+    cross-segment join. Selection is partition-invariant, so the output
+    is bit-identical either way.
     """
-    j = g.shape[0]
+    j = err_prev.shape[0]
     dgc = kind == "dgc"
     a_parts, score_parts, mom_parts, hists = [], [], [], []
-    for off, size in bounds:
+    for pos, (off, size) in enumerate(bounds):
+        g_s = (g_segments[pos] if g_segments is not None
+               else g[off:off + size])
         a_p, score_p, mom_p, hist = _sweep1_slice(
-            kind, g, err_prev, c, off, size, momentum=momentum, mom=mom,
+            kind, g_s, err_prev[off:off + size], c, momentum=momentum,
+            mom_s=None if mom is None else mom[off:off + size],
             interpret=interpret, gate=gate)
         hists.append(hist)
         a_parts.append(a_p)
@@ -256,7 +288,7 @@ def _candidates_pallas(kind, g, err_prev, c, step, *, k: int,
 
 
 def _candidates_xla(kind, g, err_prev, c, *, k: int, momentum: float,
-                    mom, bounds, gate=None):
+                    mom, bounds, gate=None, g_segments=None):
     """Per-bucket XLA candidate compaction.
 
     Sweep 1 is one fused elementwise pass over the whole vector (XLA
@@ -266,16 +298,43 @@ def _candidates_xla(kind, g, err_prev, c, *, k: int, momentum: float,
     the exactness check needs the global tau_k, known only after the
     trim. Candidate order stays global-index-ascending across buckets,
     preserving the flat path's tie-break semantics bit-for-bit.
+
+    ``g_segments`` (streaming, DESIGN.md §2.8): sweep 1 runs per
+    segment over the standalone segment arrays instead, so the WHOLE
+    per-segment chain (sweep-1 + compaction — no shared threshold on
+    this strategy) depends only on that segment's gradient; the first
+    cross-segment join is the trim. Elementwise math commutes with the
+    partition, so ``a`` (concatenated) and every candidate key are
+    bitwise identical to the flat pass.
     """
-    j = g.shape[0]
-    a, score, mom_out = _sweep1_xla(kind, g, err_prev, c,
-                                    momentum=momentum, mom=mom, gate=gate)
+    j = err_prev.shape[0]
+    if g_segments is None:
+        a, score, mom_out = _sweep1_xla(kind, g, err_prev, c,
+                                        momentum=momentum, mom=mom,
+                                        gate=gate)
+        keys = jnp.abs(score)
+        key_parts = [keys[off:off + size] for off, size in bounds]
+    else:
+        a_parts, key_parts, mom_parts = [], [], []
+        for pos, (off, size) in enumerate(bounds):
+            a_p, score_p, mom_p = _sweep1_xla(
+                kind, g_segments[pos], err_prev[off:off + size], c,
+                momentum=momentum,
+                mom=None if mom is None else mom[off:off + size],
+                gate=gate)
+            a_parts.append(a_p)
+            key_parts.append(jnp.abs(score_p))
+            mom_parts.append(mom_p)
+        a = a_parts[0] if len(bounds) == 1 else jnp.concatenate(a_parts)
+        mom_out = None
+        if kind == "dgc":
+            mom_out = (mom_parts[0] if len(bounds) == 1
+                       else jnp.concatenate(mom_parts))
     if kind != "dgc":
         mom_out = None
-    keys = jnp.abs(score)
     ck_parts, ci_parts, witnesses = [], [], []
-    for off, size in bounds:
-        kb = px.pad_keys(keys[off:off + size])
+    for (off, size), key_s in zip(bounds, key_parts):
+        kb = px.pad_keys(key_s)
         # density over the GLOBAL j: a bucket's rows are provisioned
         # exactly like the flat path's (witness + fallback cover
         # concentration), so bucketing adds no candidate-slot cost
@@ -291,7 +350,8 @@ def _candidates_xla(kind, g, err_prev, c, *, k: int, momentum: float,
 
 def _fused_randk(g, err_prev, *, k: int, key, want_ghat: bool,
                  ef_dtype, allocation: str = "global",
-                 seg_bounds=None, pf=None) -> dict:
+                 seg_bounds=None, pf=None, g_segments=None,
+                 stream_bounds=None) -> dict:
     """Fused RANDOM-k: selection is score-free, so the whole step is ONE
     elementwise sweep (the err_prev + g stream) plus O(k) random gathers
     and the O(k) scatter-zero state write — no sweep 2, no histogram, no
@@ -306,9 +366,21 @@ def _fused_randk(g, err_prev, *, k: int, key, want_ghat: bool,
     from repro.core import bigvec
     from repro.core.select import randk_indices
     assert key is not None, "randk needs a PRNG key"
-    j = g.shape[0]
-    a, _, _ = _sweep1_xla("randk", g, err_prev, jnp.float32(1.0),
-                          momentum=0.0, mom=None)
+    j = err_prev.shape[0]
+    if g_segments is not None:
+        # streaming: the one elementwise sweep runs per segment (err + g
+        # commutes with the partition bitwise); index sampling is
+        # selection-score-free, so nothing else changes
+        a_parts = [
+            _sweep1_xla("randk", g_segments[pos],
+                        err_prev[off:off + size], jnp.float32(1.0),
+                        momentum=0.0, mom=None)[0]
+            for pos, (off, size) in enumerate(stream_bounds)]
+        a = (a_parts[0] if len(a_parts) == 1
+             else jnp.concatenate(a_parts))
+    else:
+        a, _, _ = _sweep1_xla("randk", g, err_prev, jnp.float32(1.0),
+                              momentum=0.0, mom=None)
     if allocation != "global":
         from repro.core import allocate
         bounds = seg_bounds or allocate.segment_bounds(
@@ -342,7 +414,8 @@ def _fused_randk(g, err_prev, *, k: int, key, want_ghat: bool,
 
 def _seg_candidates_pallas(kind, g, err_prev, c, step, *, provs, k: int,
                            regtopk: bool, momentum: float, mom,
-                           interpret: bool, bounds, gate=None):
+                           interpret: bool, bounds, gate=None,
+                           g_segments=None):
     """Per-SEGMENT Pallas sweeps for allocation != "global" (DESIGN.md
     §2.6): unlike the bucketed global path (one merged-histogram tau),
     each segment's sweep-1 histogram picks its OWN threshold at target
@@ -357,8 +430,11 @@ def _seg_candidates_pallas(kind, g, err_prev, c, step, *, provs, k: int,
     a_parts, mom_parts = [], []
     ck_parts, ci_parts, ok_parts = [], [], []
     for pos, (off, size) in enumerate(bounds):
+        g_s = (g_segments[pos] if g_segments is not None
+               else g[off:off + size])
         a_p, score_p, mom_p, hist = _sweep1_slice(
-            kind, g, err_prev, c, off, size, momentum=momentum, mom=mom,
+            kind, g_s, err_prev[off:off + size], c, momentum=momentum,
+            mom_s=None if mom is None else mom[off:off + size],
             interpret=interpret, gate=gate)
         # support corrections may drop <= min(k, size) in-segment entries
         # below tau without breaking coverage of the segment's top-prov
@@ -384,7 +460,7 @@ def _seg_candidates_pallas(kind, g, err_prev, c, step, *, provs, k: int,
 
 
 def _seg_candidates_xla(kind, g, err_prev, c, *, provs, slack, momentum,
-                        mom, bounds, gate=None):
+                        mom, bounds, gate=None, g_segments=None):
     """Per-SEGMENT XLA candidate compaction for allocation != "global":
     sweep 1 stays one fused elementwise pass; each segment's per-row
     top-W compaction is provisioned for ITS budget (provs[l] over the
@@ -396,14 +472,36 @@ def _seg_candidates_xla(kind, g, err_prev, c, *, provs, slack, momentum,
     Candidate parts stay separate; per-segment (full_cover, row_min)
     witnesses are checked against the segment's OWN realized threshold
     in the trim."""
-    a, score, mom_out = _sweep1_xla(kind, g, err_prev, c,
-                                    momentum=momentum, mom=mom, gate=gate)
+    if g_segments is None:
+        a, score, mom_out = _sweep1_xla(kind, g, err_prev, c,
+                                        momentum=momentum, mom=mom,
+                                        gate=gate)
+        keys = jnp.abs(score)
+        key_parts = [keys[off:off + size] for off, size in bounds]
+    else:
+        # streaming: sweep 1 per segment (bitwise — elementwise math
+        # commutes with the partition); the candidate chain below is
+        # already per segment, so each segment's whole compression chain
+        # depends only on its own gradient array
+        a_parts, key_parts, mom_parts = [], [], []
+        for pos, (off, size) in enumerate(bounds):
+            a_p, score_p, mom_p = _sweep1_xla(
+                kind, g_segments[pos], err_prev[off:off + size], c,
+                momentum=momentum,
+                mom=None if mom is None else mom[off:off + size],
+                gate=gate)
+            a_parts.append(a_p)
+            key_parts.append(jnp.abs(score_p))
+            mom_parts.append(mom_p)
+        a = a_parts[0] if len(bounds) == 1 else jnp.concatenate(a_parts)
+        mom_out = (None if kind != "dgc" else
+                   (mom_parts[0] if len(bounds) == 1
+                    else jnp.concatenate(mom_parts)))
     if kind != "dgc":
         mom_out = None
-    keys = jnp.abs(score)
     ck_parts, ci_parts, wit_parts = [], [], []
     for pos, (off, size) in enumerate(bounds):
-        kb = px.pad_keys(keys[off:off + size])
+        kb = px.pad_keys(key_parts[pos])
         cv, ci, row_min, full_cover = px.candidates_xla(kb, provs[pos],
                                                         slack=slack)
         ck_parts.append(cv)
@@ -415,7 +513,8 @@ def _seg_candidates_xla(kind, g, err_prev, c, *, provs, slack, momentum,
 def _fused_allocated(kind, g, err_prev, step, *, k: int, omega, mu, Q,
                      momentum, mom, idx_prev, a_prev_sel, g_prev_sel,
                      want_ghat: bool, strategy: str, allocation: str,
-                     seg_bounds, ef_dtype, gate=None, pf=None) -> dict:
+                     seg_bounds, ef_dtype, gate=None, pf=None,
+                     g_segments=None) -> dict:
     """Fused compress step with per-segment budget allocation
     (allocation in {"proportional", "adaptive"}, DESIGN.md §2.6).
 
@@ -440,9 +539,14 @@ def _fused_allocated(kind, g, err_prev, step, *, k: int, omega, mu, Q,
     tests/test_allocate.py::TestAllocatedParity (incl. the regtopk
     stress seeds) pins."""
     from repro.core import allocate, bigvec
-    j = g.shape[0]
+    j = err_prev.shape[0]
     bounds = seg_bounds or allocate.segment_bounds(
         j, allocate.DEFAULT_SEGMENTS)
+    if g_segments is not None:
+        # streaming requires the stream partition == the allocation
+        # partition (sparsify routes both off the same resolved bounds)
+        assert len(g_segments) == len(bounds), (len(g_segments),
+                                                len(bounds))
     sizes = [sz for _, sz in bounds]
     caps = allocate.segment_caps(k, sizes)
     # candidate provisioning per segment: proportional realizes its
@@ -473,7 +577,7 @@ def _fused_allocated(kind, g, err_prev, step, *, k: int, omega, mu, Q,
         a, mom_out, ck_parts, ci_parts, ok_parts = _seg_candidates_pallas(
             kind, g, err_prev, c, step, provs=provs, k=k, regtopk=regtopk,
             momentum=momentum, mom=mom, interpret=interpret, bounds=bounds,
-            gate=gate)
+            gate=gate, g_segments=g_segments)
         wit_parts = None
         ok = ok_parts[0]
         for ok_b in ok_parts[1:]:
@@ -481,7 +585,8 @@ def _fused_allocated(kind, g, err_prev, step, *, k: int, omega, mu, Q,
     else:
         a, mom_out, ck_parts, ci_parts, wit_parts = _seg_candidates_xla(
             kind, g, err_prev, c, provs=provs, slack=slack,
-            momentum=momentum, mom=mom, bounds=bounds, gate=gate)
+            momentum=momentum, mom=mom, bounds=bounds, gate=gate,
+            g_segments=g_segments)
         ok = jnp.asarray(True)
 
     # REGTOP-k support corrections, candidate space, routed per segment:
@@ -573,10 +678,17 @@ def _fused_allocated(kind, g, err_prev, step, *, k: int, omega, mu, Q,
     idx_fast = packi[sel]
     val_fast = packv[sel]
 
+    def _flat_g():
+        # fallback-only: materialize the flat (effective) gradient — on
+        # the streaming path it exists only as segment arrays, and the
+        # concat must happen INSIDE the cond branch so the fast path
+        # never pays it (cond audits as the min over branches)
+        return g if g_segments is None else jnp.concatenate(g_segments)
+
     def _gather_inputs(idx):
         # fallback-only: recompute a[idx] from the function parameters
         # (bitwise identical; keeps `a` read-complete before the cond)
-        gi = bigvec.gather(g, idx).astype(jnp.float32)
+        gi = bigvec.gather(_flat_g(), idx).astype(jnp.float32)
         ei = bigvec.gather(err_prev, idx).astype(jnp.float32)
         if kind == "dgc":
             mi = momentum * bigvec.gather(mom, idx).astype(jnp.float32) + gi
@@ -587,7 +699,7 @@ def _fused_allocated(kind, g, err_prev, step, *, k: int, omega, mu, Q,
         return idx_fast, val_fast
 
     def _fallback(_):
-        a2, score2, _ = _sweep1_xla(kind, g, err_prev, c,
+        a2, score2, _ = _sweep1_xla(kind, _flat_g(), err_prev, c,
                                     momentum=momentum, mom=mom, gate=gate)
         keys_d = jnp.abs(score2)
         if regtopk:
@@ -646,7 +758,8 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
                           ef_dtype="float32", key=None,
                           allocation: str = "global",
                           seg_bounds=None, participate=None,
-                          err_decay: float = 1.0) -> dict:
+                          err_decay: float = 1.0, g_segments=None,
+                          stream_bounds=None) -> dict:
     """One fused compression step. kind in {"topk", "dgc", "regtopk",
     "randk", "thresholdk"} (thresholdk shares the plain-score path with
     topk; randk needs ``key`` and ignores ``selector``).
@@ -696,24 +809,55 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
       mom' = momentum * mom via the kernel gate), and its packed
       payload comes back inert (values 0.0, indices 0, count 0).
       p=True is a bitwise pass-through of the unmasked path.
+    - g_segments + stream_bounds (DESIGN.md §2.8): the gradient arrives
+      as per-segment arrays (``g`` must be None) partitioned by the
+      static ``stream_bounds`` [(offset, size), ...] — the streaming
+      form the backward-overlapped train step feeds. Sweeps partition by
+      stream_bounds instead of bucket_bounds, so each segment's sweep-1
+      (+ EF fold + allocation statistics) depends only on its own
+      segment array and can run while later segments are still being
+      produced; the trim/pack is the only cross-segment join. Selection
+      is partition-invariant (the bucketed-path theorem), so values/
+      indices/err are BIT-identical to the flat call, and S partial
+      sweeps of J/S elements still audit as 2 traversals. With
+      allocation != "global", stream_bounds must equal the resolved
+      ``seg_bounds``.
     """
     from repro.core import bigvec
     strategy = strategy or default_strategy()
-    j = g.shape[0]
+    streaming = g_segments is not None
+    if streaming:
+        assert g is None, "streaming: pass g_segments, not a flat g"
+        assert stream_bounds is not None and \
+            len(stream_bounds) == len(g_segments)
+        j = err_prev.shape[0]
+    else:
+        j = g.shape[0]
     k = int(min(k, j))
     # raw FUNCTION PARAMETERS, kept for the trim's lax.cond fallback:
     # the cond must consume these (not the produced masked arrays) or the
     # audit bills the masked intermediates as escaped cond-operand writes
     g_raw, err_raw = g, err_prev
+    segs_raw = g_segments
     pf = gate = None
     if participate is not None:
-        g, err_prev, pf = masked_inputs(g, err_prev, participate, err_decay)
+        if streaming:
+            # per-segment masking: a scalar-predicate select commutes
+            # with the partition, so this matches masked_inputs bitwise
+            pf = jnp.asarray(participate, jnp.bool_)
+            g_segments = [_scalar_select(pf, gs, jnp.zeros_like(gs))
+                          for gs in g_segments]
+            err_prev = _decayed_err(err_prev, pf, err_decay)
+        else:
+            g, err_prev, pf = masked_inputs(g, err_prev, participate,
+                                            err_decay)
         gate = pf                      # dgc: a = err_eff + where(p, mom, 0)
     if kind == "randk":
         return _fused_randk(g, err_prev, k=k, key=key,
                             want_ghat=want_ghat, ef_dtype=ef_dtype,
                             allocation=allocation, seg_bounds=seg_bounds,
-                            pf=pf)
+                            pf=pf, g_segments=g_segments,
+                            stream_bounds=stream_bounds)
     if allocation != "global":
         # exact-count selection only (check_allocation gates upstream)
         assert selector == "exact", (allocation, selector)
@@ -722,13 +866,17 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
             momentum=momentum, mom=mom, idx_prev=idx_prev,
             a_prev_sel=a_prev_sel, g_prev_sel=g_prev_sel,
             want_ghat=want_ghat, strategy=strategy, allocation=allocation,
-            seg_bounds=seg_bounds, ef_dtype=ef_dtype, gate=gate, pf=pf)
+            seg_bounds=seg_bounds, ef_dtype=ef_dtype, gate=gate, pf=pf,
+            g_segments=g_segments)
     hist = selector == "histogram"
     # static packed capacity; also the candidate-provisioning budget —
     # for exact selection kcap == k and everything below degenerates to
     # the original exact-k trim
     kcap = hist_capacity(k, j) if hist else k
-    bounds = bucket_bounds(j, num_buckets)
+    # streaming partitions the sweeps by the stream segments; selection
+    # is partition-invariant, and num_buckets keeps governing only the
+    # comm-side chunking of the packed pairs (core.aggregate)
+    bounds = stream_bounds if streaming else bucket_bounds(j, num_buckets)
     regtopk = kind == "regtopk"
     if regtopk:
         c = jnp.where(step == 0, jnp.float32(1.0),
@@ -741,15 +889,21 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
         a, mom_out, cand_k, cand_i, producer_ok = _candidates_pallas(
             kind, g, err_prev, c, step, k=kcap, regtopk=regtopk,
             momentum=momentum, mom=mom, interpret=interpret, bounds=bounds,
-            gate=gate)
+            gate=gate, g_segments=g_segments)
         witnesses = None
     else:
         a, mom_out, cand_k, cand_i, witnesses = _candidates_xla(
             kind, g, err_prev, c, k=kcap, momentum=momentum, mom=mom,
-            bounds=bounds, gate=gate)
+            bounds=bounds, gate=gate, g_segments=g_segments)
         producer_ok = None                   # needs tau; checked below
 
     # --- O(candidates) fixed-capacity trim ------------------------------
+    def _raw_flat_g():
+        # fallback-only: the RAW flat gradient — on the streaming path it
+        # exists only as segment params, and the concat runs INSIDE the
+        # cond branch so the fast path never pays it (min over branches)
+        return g_raw if segs_raw is None else jnp.concatenate(segs_raw)
+
     def _gather_inputs(idx):
         """a[idx] recomputed from the step's INPUT arrays (bitwise
         identical: per-element adds commute with the gather). Used only
@@ -761,7 +915,7 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
         select commutes with the gather, so this matches
         ``masked_inputs`` bitwise without touching the masked J-sized
         intermediates)."""
-        gi = bigvec.gather(g_raw, idx).astype(jnp.float32)
+        gi = bigvec.gather(_raw_flat_g(), idx).astype(jnp.float32)
         ei = bigvec.gather(err_raw, idx).astype(jnp.float32)
         if pf is not None:
             gi = _scalar_select(pf, gi, 0.0)
@@ -849,9 +1003,9 @@ def fused_compress_arrays(kind: str, g, err_prev, step, *, k: int,
         # would tax the fast path with an O(J) copy. The elastic masking
         # is likewise re-derived INSIDE the branch from the raw params
         # (the masked J-sized arrays must not become cond operands).
-        gg, ee = g_raw, err_raw
+        gg, ee = _raw_flat_g(), err_raw
         if pf is not None:
-            gg, ee, _ = masked_inputs(g_raw, err_raw, pf, err_decay)
+            gg, ee, _ = masked_inputs(gg, err_raw, pf, err_decay)
         a2, score2, _ = _sweep1_xla(kind, gg, ee, c,
                                     momentum=momentum, mom=mom, gate=gate)
         keys_d = jnp.abs(score2)

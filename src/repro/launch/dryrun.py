@@ -180,7 +180,7 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
                pipeline="reference", num_buckets=1, selector="exact",
                wire_dtype="float32", allocation="global", num_segments=0,
                fault_schedule="", err_decay=1.0, combine="mean",
-               **cfg_overrides) -> dict:
+               overlap="none", **cfg_overrides) -> dict:
     shape = SHAPES[shape_name]
     cfg = get_config(arch)
     moe_over = {k[4:]: v for k, v in cfg_overrides.items()
@@ -205,7 +205,8 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
                                     allocation=allocation,
                                     num_segments=num_segments,
                                     wire_dtype=wire_dtype,
-                                    err_decay=err_decay, combine=combine),
+                                    err_decay=err_decay, combine=combine,
+                                    overlap=overlap),
         optimizer=OptimizerConfig(kind="adam", lr=1e-4),
         attn_override=attn_override,
         fault_schedule=fault_schedule,
@@ -214,8 +215,9 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
     num_buckets_resolved = num_buckets
     gather_wire = None
     fault_rec = None
+    num_stream_segments = None
     if kind == "train":
-        # the trace resolves num_buckets inside sync_gradient; the shared
+        # the trace resolves num_buckets inside GradientSync; the shared
         # helper mirrors it exactly (same flattened per-rank J, same dp
         # extent) so the record — which the roofline's
         # collective_exposed_s consumes — carries the chunk count the
@@ -228,6 +230,11 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
         if num_buckets == 0:
             num_buckets_resolved = nb_auto
         gather_wire = sparse_gather_wire_bytes(run.sparsifier, j_local, dp)
+        if overlap == "backward":
+            # the streaming partition the compiled step executes — the
+            # roofline's backward-overlap model consumes the count
+            from repro.train.step import stream_bounds_for_run
+            num_stream_segments = len(stream_bounds_for_run(run, mesh))
         if fault_schedule:
             # fault config rides in the record (DESIGN.md §2.7) so the
             # roofline can expose the straggler-scaled collective share;
@@ -281,6 +288,7 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
         "unknown_trip_loops": parsed["unknown_trip_loops"],
         "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
         "wire_dtype": wire_dtype,
+        "overlap": overlap,
         "memory": {
             k: int(getattr(mem, k, -1)) for k in
             ("temp_size_in_bytes", "argument_size_in_bytes",
@@ -290,6 +298,8 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
     }
     if gather_wire is not None:
         rec["sparse_gather_wire_bytes"] = int(gather_wire)
+    if num_stream_segments is not None:
+        rec["num_stream_segments"] = int(num_stream_segments)
     if fault_rec is not None:
         rec["fault"] = fault_rec
     if verbose:
@@ -347,6 +357,14 @@ def main():
                          "'iid:0.3'); the record then carries the parsed "
                          "schedule + expected active-worker count and "
                          "sparse_gather_wire_bytes scales to E[n_active]")
+    ap.add_argument("--overlap", default="none",
+                    choices=["none", "backward"],
+                    help="streaming compression (DESIGN.md §2.8): feed "
+                         "the gradient into the fused pipeline per "
+                         "layer-aligned segment behind the backward "
+                         "pass; the record carries num_stream_segments "
+                         "so the roofline reports the "
+                         "comm-behind-backward exposed term")
     ap.add_argument("--err-decay", type=float, default=1.0,
                     help="EF memory decay on sat-out steps (DESIGN.md §2.7)")
     ap.add_argument("--combine", default="mean",
@@ -395,6 +413,7 @@ def main():
                     num_segments=args.num_segments,
                     fault_schedule=args.fault_schedule,
                     err_decay=args.err_decay, combine=args.combine,
+                    overlap=args.overlap,
                     **overrides))
             except Exception as e:  # noqa: BLE001 — report every combo
                 import traceback

@@ -54,6 +54,16 @@ def parse_args(argv=None):
                          "follows --num-buckets (or 8 for the flat "
                          "schedule); the train step aligns the cut to "
                          "parameter-leaf boundaries")
+    ap.add_argument("--overlap", default="none",
+                    choices=["none", "backward"],
+                    help="streaming compression (DESIGN.md §2.8): "
+                         "backward feeds the gradient into the fused "
+                         "pipeline per layer-aligned segment as the "
+                         "backward pass emits it, so sweep-1 + EF fold "
+                         "run behind the remaining backward work; the "
+                         "global trim/pack + sparse collective are the "
+                         "only tail barrier. Bit-identical selection/EF "
+                         "state to none; requires --pipeline fused")
     ap.add_argument("--selector", default="exact",
                     choices=["exact", "histogram"],
                     help="top-k selection rule: exact lax.top_k semantics, "
@@ -156,7 +166,8 @@ def main(argv=None):
                                     num_segments=args.num_segments,
                                     wire_dtype=args.wire_dtype,
                                     err_decay=args.err_decay,
-                                    combine=args.combine),
+                                    combine=args.combine,
+                                    overlap=args.overlap),
         optimizer=OptimizerConfig(kind=args.optimizer, lr=args.lr),
         seed=args.seed, steps=args.steps,
         checkpoint_dir=args.checkpoint_dir,
@@ -178,13 +189,18 @@ def main(argv=None):
         from repro.core.aggregate import effective_comm_mode
         sp = run.sparsifier
         if sp.num_buckets == 0:
-            # the shared trace-accurate mirror of sync_gradient's
+            # the shared trace-accurate mirror of GradientSync's
             # resolution (train/step.auto_num_buckets_for_run)
             from repro.train.step import auto_num_buckets_for_run
             nb, j_local, dp = auto_num_buckets_for_run(run, mesh, pal)
             print(f"[train] num_buckets=0 -> auto-tuned {nb} "
                   f"(J_local={j_local:,}, dp={dp})")
         print(f"[train] effective comm mode: {effective_comm_mode(sp)}")
+        if sp.overlap == "backward":
+            from repro.train.step import stream_bounds_for_run
+            sb = stream_bounds_for_run(run, mesh, pal)
+            print(f"[train] overlap=backward: {len(sb)} stream segments "
+                  f"(layer-aligned; DESIGN.md §2.8)")
         if run.fault_schedule:
             from repro.core import faults as _faults
             sched = _faults.parse_schedule(run.fault_schedule)

@@ -110,6 +110,30 @@ def pipelined_overlap_s(t_coll: float, t_local: float,
     return max(t_coll, t_local) + min(t_coll, t_local) / b
 
 
+def comm_behind_backward_s(t_gather: float, t_backward: float,
+                           num_segments: int = 1) -> float:
+    """EXPOSED share of the sparse collective under streaming
+    compression (overlap="backward", DESIGN.md §2.8).
+
+    With the gradient fed per layer-aligned segment, segment s's sweep-1
+    + chunked all-gather launch while the backward pass still produces
+    segments s+1..S, so the collective hides behind the remaining
+    backward work instead of starting after it:
+
+        exposed(S) = max(0, t_gather - t_backward)
+                     + min(t_gather, t_backward) / S
+
+    — the same head-of-pipeline bound as :func:`pipelined_overlap_s`,
+    but only the collective's overhang is exposed (the backward pass
+    runs regardless and is already counted in the compute term, so its
+    overhang costs the collective nothing). S = 1 degenerates to the
+    fully serialized t_gather; S >= 2 is strictly smaller whenever both
+    times are positive.
+    """
+    s = max(1, int(num_segments))
+    return max(0.0, t_gather - t_backward) + min(t_gather, t_backward) / s
+
+
 def roofline_terms(rec: dict, hw: Hardware = HW_V5E) -> dict:
     """rec: one dryrun.py record. Returns the three terms + diagnosis.
 
@@ -118,6 +142,15 @@ def roofline_terms(rec: dict, hw: Hardware = HW_V5E) -> dict:
     overlap term: the sparse all-gather wire time pipelined against the
     local scatter-add/compaction share of the memory term instead of
     serialized after it.
+
+    When the record carries ``overlap == "backward"`` (+
+    ``num_stream_segments``), it also reports the comm-behind-backward
+    view (DESIGN.md §2.8): ``backward_overlap_s`` (collective time
+    hidden behind the backward pass) and
+    ``collective_exposed_backward_s`` (whole-step collective term with
+    the sparse gather's exposed share reduced to
+    :func:`comm_behind_backward_s`), with t_backward ~= (2/3) *
+    compute_s per the 6ND train rule (forward 2ND, backward 4ND).
     """
     mesh = rec["mesh"]
     chips = 1
@@ -164,6 +197,19 @@ def roofline_terms(rec: dict, hw: Hardware = HW_V5E) -> dict:
         terms["collective_exposed_s"] = (t_coll - t_gather) + \
             pipelined_overlap_s(t_gather, t_combine, num_buckets)
         terms["num_buckets"] = num_buckets
+    if rec.get("overlap") == "backward" and rec.get("kind") == "train":
+        # streaming view (DESIGN.md §2.8): the sparse gather share of the
+        # collective term launches per layer-aligned segment behind the
+        # remaining backward work; only its overhang past the backward
+        # pass (plus one segment's pipeline head) stays exposed.
+        num_segments = int(rec.get("num_stream_segments", 1))
+        gw = rec.get("sparse_gather_wire_bytes", wire)
+        t_gather = gw / hw.ici_bw
+        t_bwd = (2.0 / 3.0) * t_compute      # 6ND rule: backward = 4ND/6ND
+        exposed = comm_behind_backward_s(t_gather, t_bwd, num_segments)
+        terms["num_stream_segments"] = num_segments
+        terms["backward_overlap_s"] = t_gather - exposed
+        terms["collective_exposed_backward_s"] = (t_coll - t_gather) + exposed
     fault = rec.get("fault")
     if fault:
         # straggler-exposed view (DESIGN.md §2.7): with an elastic

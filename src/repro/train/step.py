@@ -5,8 +5,11 @@ Composition per step (DESIGN.md §2.1):
 1. local microbatch loss + grad (TP collectives inside the model);
 2. psum over model for gradients of REPLICATED leaves (Megatron-SP rule);
 3. flatten to the per-rank J_local fp32 vector;
-4. THE PAPER: sparsified gradient sync over the data axes
-   (core.aggregate.sync_gradient — TOP-k / REGTOP-k / baselines). With
+4. THE PAPER: sparsified gradient sync over the data axes via the
+   per-run core.aggregate.GradientSync object (TOP-k / REGTOP-k /
+   baselines); sparsifier.overlap="backward" feeds stage 4 per
+   layer-aligned segment as stage 1's VJP emits it (DESIGN.md §2.8),
+   leaving the global trim/pack + collective as the only tail barrier. With
    sparsifier.num_buckets > 1 this stage uses the bucketed schedule of
    DESIGN.md §2.4: the fused sweeps run per bucket (histogram-merge
    global threshold), and the sparse all-gather is issued in
@@ -89,7 +92,7 @@ def abstract_params(run: RunConfig, pal: Parallel):
 
 
 def auto_num_buckets_for_run(run: RunConfig, mesh, pal: Parallel = None):
-    """Trace-accurate mirror of sync_gradient's ``num_buckets=0``
+    """Trace-accurate mirror of GradientSync's ``num_buckets=0``
     resolution: the SAME flattened per-rank gradient length (TreeFlattener
     total over the abstract per-rank params — what step_fn's
     ``g.shape[0]`` is) and the same data-parallel extent. The single
@@ -105,6 +108,23 @@ def auto_num_buckets_for_run(run: RunConfig, mesh, pal: Parallel = None):
         dp *= int(mesh.shape[a])
     j_local = tree_size(abstract_params(run, pal))
     return resolve_num_buckets(run.sparsifier, j_local, dp), j_local, dp
+
+
+def stream_bounds_for_run(run: RunConfig, mesh, pal: Parallel = None):
+    """Trace-accurate mirror of build_train_step's streaming partition
+    (DESIGN.md §2.8): the layer-aligned (offset, size) bounds the step
+    feeds per segment under ``sparsifier.overlap="backward"``, or None
+    when streaming is off. Out-of-band consumers (launch log line,
+    dryrun record's ``num_stream_segments``) must use this helper so
+    they can never disagree with the compiled program's cut."""
+    sp = run.sparsifier
+    if getattr(sp, "overlap", "none") != "backward":
+        return None
+    from repro.core import allocate
+    pal = pal or build_parallel(mesh)
+    flat = TreeFlattener(abstract_params(run, pal))
+    return allocate.layer_segments(
+        flat.layer_bounds(), allocate.resolve_num_segments(sp, flat.total))
 
 
 def train_state_specs(run: RunConfig, mesh, pal: Parallel):
@@ -190,7 +210,7 @@ def build_train_step(run: RunConfig, mesh, pal: Parallel):
     # density allocation (DESIGN.md §2.6): the train step owns the leaf
     # layout, so it pins LAYER-ALIGNED segment bounds (grouped leaves,
     # never cutting inside a parameter) instead of the near-equal
-    # default cut sync_gradient would fall back to. Static python ints
+    # default cut GradientSync would fall back to. Static python ints
     # — safe to close over under shard_map/jit.
     seg_bounds = None
     if sp.allocation != "global":
@@ -198,6 +218,26 @@ def build_train_step(run: RunConfig, mesh, pal: Parallel):
         allocate.check_allocation(sp)      # fail at build, not at trace
         seg_bounds = allocate.layer_segments(
             flat.layer_bounds(), allocate.resolve_num_segments(sp, flat.total))
+
+    # streaming compression (DESIGN.md §2.8): with overlap="backward" the
+    # gradient is fed into the fused pipeline per layer-aligned segment
+    # as the VJP emits it, instead of as one flat concatenate. The
+    # partition is pinned at build time (static ints); when allocation
+    # also segments, the SAME bounds drive both, so the per-segment
+    # sweeps and the density budget share one cut.
+    stream_bounds = None
+    if sp.overlap == "backward":
+        from repro.core import allocate
+        stream_bounds = seg_bounds if seg_bounds is not None else \
+            allocate.layer_segments(
+                flat.layer_bounds(),
+                allocate.resolve_num_segments(sp, flat.total))
+
+    # per-run sync object (static fields bound once; validates the
+    # allocation/overlap combos and resolves num_buckets=0 at build time
+    # — same resolution auto_num_buckets_for_run mirrors for logs)
+    gsync = agg.GradientSync(sp, dpaxes, j=flat.total, n_workers=dp,
+                             seg_bounds=seg_bounds)
 
     # duplicate-weights: replicated leaves appear in every model-rank's flat
     # vector; weight 1/tp in global-norm computations.
@@ -226,19 +266,38 @@ def build_train_step(run: RunConfig, mesh, pal: Parallel):
         if pal.tp_on:
             grads = jax.tree_util.tree_map(
                 lambda g, r: jax.lax.psum(g, "model") if r else g, grads, repl)
-        g = flat.flatten(grads)
+        if stream_bounds is not None:
+            # streaming: one flat per segment, each depending only on its
+            # own leaves' gradients — compression runs behind the
+            # remaining backward work (DESIGN.md §2.8)
+            g_segments = flat.flatten_segments(grads, stream_bounds)
+            gnorm_local = jnp.sqrt(sum(
+                jnp.sum(jnp.square(s.astype(jnp.float32)))
+                for s in g_segments))
+        else:
+            g_segments = None
+            g = flat.flatten(grads)
+            gnorm_local = jnp.linalg.norm(g)
 
         key = jax.random.fold_in(key, _dp_index(dpaxes))
         fstats = None
-        if sched is None:
-            g_agg, ef_new = agg.sync_gradient(sp, ef_state, g, dpaxes,
-                                              key=key, seg_bounds=seg_bounds)
-        else:
+        part = None
+        if sched is not None:
             part = faults.participates(sched, ef_state["step"],
                                        _dp_index(dpaxes))
-            g_agg, ef_new, fstats = agg.sync_gradient(
-                sp, ef_state, g, dpaxes, key=key, seg_bounds=seg_bounds,
-                participate=part, with_stats=True)
+        if g_segments is not None:
+            stream = gsync.begin(ef_state, key=key, participate=part)
+            for gseg in g_segments:
+                stream.feed_segment(gseg)
+            if sched is None:
+                g_agg, ef_new = stream.finish()
+            else:
+                g_agg, ef_new, fstats = stream.finish(with_stats=True)
+        elif sched is None:
+            g_agg, ef_new = gsync(ef_state, g, key=key)
+        else:
+            g_agg, ef_new, fstats = gsync(ef_state, g, key=key,
+                                          participate=part, with_stats=True)
 
         # ZeRO-1 slice update
         r = _dp_index(dpaxes)
@@ -256,7 +315,7 @@ def build_train_step(run: RunConfig, mesh, pal: Parallel):
         from repro.models.transformer import global_loss
         metrics = {
             "loss": global_loss(loss, pal),          # psum over model first
-            "gnorm_local": jnp.linalg.norm(g),
+            "gnorm_local": gnorm_local,
             "agg_nonzero": jnp.mean((g_agg != 0).astype(jnp.float32)),
         }
         metrics.update(aux)
@@ -264,7 +323,7 @@ def build_train_step(run: RunConfig, mesh, pal: Parallel):
         metrics = {k_: jax.lax.pmean(v, dpaxes if k_ == "loss" else all_axes)
                    for k_, v in metrics.items()}
         if fstats is not None:
-            # already rank-identical psums from sync_gradient — no pmean
+            # already rank-identical psums from GradientSync — no pmean
             metrics["n_active"] = fstats["n_active"]
             metrics["dropped_nonfinite"] = fstats["dropped_nonfinite"]
         return params_new, exp(opt_new), exp(ef_new), metrics

@@ -274,7 +274,7 @@ class TestBucketedSyncGradient:
             st = sparsify.init_state(cfg, j)
 
             def f(g, st):
-                return agg.sync_gradient(cfg, st, g, ("data",))[0]
+                return agg.GradientSync(cfg, ("data",))(st, g)[0]
 
             with mesh:
                 fn = jax.jit(jax.shard_map(

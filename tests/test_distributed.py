@@ -309,9 +309,8 @@ g = g.at[3].set(jnp.nan)                       # worker 3 poisoned
 def body(gw):
     gw = gw.reshape(-1)
     state = sparsify.init_state(cfg, j)
-    g_agg, _, stats = agg.sync_gradient(
-        cfg, state, gw, ("data",), participate=jnp.ones((), jnp.bool_),
-        with_stats=True)
+    g_agg, _, stats = agg.GradientSync(cfg, ("data",))(
+        state, gw, participate=jnp.ones((), jnp.bool_), with_stats=True)
     return g_agg, stats["n_active"], stats["dropped_nonfinite"]
 with mesh:
     g_agg, na, dr = jax.jit(jax.shard_map(
@@ -344,8 +343,8 @@ def make(combine, nb):
                            combine=combine, err_decay=0.9)
     def body(gw, pw):
         state = sparsify.init_state(cfg, j)
-        g_agg, _ = agg.sync_gradient(cfg, state, gw.reshape(-1), ("data",),
-                                     participate=pw.reshape(()))
+        g_agg, _ = agg.GradientSync(cfg, ("data",))(
+            state, gw.reshape(-1), participate=pw.reshape(()))
         return g_agg
     return jax.jit(jax.shard_map(body, mesh=mesh,
                                  in_specs=(P("data"), P("data")),

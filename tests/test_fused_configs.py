@@ -365,7 +365,7 @@ class TestWireBf16:
         mesh = jax.make_mesh((1,), ("data",))
 
         def f(g_, st_):
-            return agg.sync_gradient(cfg, st_, g_, ("data",))[0]
+            return agg.GradientSync(cfg, ("data",))(st_, g_)[0]
 
         with mesh:
             fn = jax.jit(jax.shard_map(
@@ -474,7 +474,7 @@ class TestFusedRandk:
         mesh = jax.make_mesh((1,), ("data",))
 
         def f(g_, st_, key):
-            return agg.sync_gradient(cfg, st_, g_, ("data",), key=key)[0]
+            return agg.GradientSync(cfg, ("data",))(st_, g_, key=key)[0]
 
         with mesh:
             fn = jax.jit(jax.shard_map(
@@ -536,7 +536,7 @@ class TestAutoNumBuckets:
             st = sparsify.init_state(cfg, j)
 
             def f(g_, st_):
-                return agg.sync_gradient(cfg, st_, g_, ("data",))[0]
+                return agg.GradientSync(cfg, ("data",))(st_, g_)[0]
 
             with mesh:
                 fn = jax.jit(jax.shard_map(
@@ -562,7 +562,7 @@ class TestSparseDegrade:
         g = jax.random.normal(jax.random.PRNGKey(0), (j,))
 
         def f(g_, st_):
-            return agg.sync_gradient(cfg, st_, g_, ("data",))[0]
+            return agg.GradientSync(cfg, ("data",))(st_, g_)[0]
 
         def trace():
             with mesh:
@@ -591,7 +591,7 @@ class TestSparseDegrade:
         st2 = sparsify.init_state(cfg_sim, j)
 
         def f2(g_, st_):
-            return agg.sync_gradient(cfg_sim, st_, g_, ("data",))[0]
+            return agg.GradientSync(cfg_sim, ("data",))(st_, g_)[0]
 
         with mesh:
             fn2 = jax.jit(jax.shard_map(
@@ -614,7 +614,7 @@ class TestSparseDegrade:
         g = jax.random.normal(jax.random.PRNGKey(0), (j,))
 
         def f(g_, st_):
-            return agg.sync_gradient(cfg, st_, g_, ("data",))[0]
+            return agg.GradientSync(cfg, ("data",))(st_, g_)[0]
 
         with warnings.catch_warnings(record=True) as w:
             warnings.simplefilter("always")
@@ -647,7 +647,7 @@ class TestSketchSyncBigvec:
             st = sparsify.init_state(c, j)
 
             def f(g_, st_):
-                return agg.sync_gradient(c, st_, g_, ("data",))[0]
+                return agg.GradientSync(c, ("data",))(st_, g_)[0]
 
             with mesh:
                 fn = jax.jit(jax.shard_map(
