@@ -33,6 +33,11 @@ Compares a freshly produced BENCH_compress.json (``benchmarks.run --json
   failed — but a group the baseline gated must keep a comparable pair,
   so a dropped/renamed reference row cannot silently disarm the gate).
 
+- the fresh results lack any REQUIRED_GROUPS group with a comparable
+  reference/fused pair ("fused_sketch": the sketch-coordinated encode
+  unit, DESIGN.md §2.9) — required independent of the baseline so a
+  stale baseline cannot disarm the gate.
+
 Rows present in only one file are reported but never fail the gate
 (adding a new benchmark row must not need a two-step merge dance).
 """
@@ -49,6 +54,12 @@ EPS = 1e-6
 # (sweep 1 + sweep 2; all state updates are O(k) since the err_prev
 # layout — DESIGN.md §2.2). Dense/simulate fused rows are 3 by design.
 FUSED_MAX_TRAVERSALS = 2.0
+# groups the FRESH results must always carry with a comparable
+# reference/fused pair — independent of the baseline (a baseline that
+# predates the group must not disarm its gate). "fused_sketch" is the
+# sketch-coordinated encode unit (DESIGN.md §2.9): its fused row holds
+# the same absolute sparse-path budget and must beat the legacy encode.
+REQUIRED_GROUPS = ("fused_sketch",)
 
 
 def _rows_by_name(payload: dict) -> dict:
@@ -124,6 +135,11 @@ def check(baseline: dict, fresh: dict) -> list:
     base_gated = {g for g, rows in _by_group(baseline).items()
                   if _comparable_js(rows)[1]}
     groups = _by_group(fresh)
+    for req in REQUIRED_GROUPS:
+        if not _comparable_js(groups.get(req, []))[1]:
+            failures.append(
+                f"required group {req!r} is missing a comparable "
+                "reference/fused pair in the fresh results")
     any_fused = False
     for gname, rows in sorted(groups.items()):
         fused_js, both = _comparable_js(rows)

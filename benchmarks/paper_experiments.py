@@ -53,7 +53,8 @@ def fig1_toy_logistic(iters=100, eta=0.9, mu=0.5, Q=0.0):
 # ---------------------------------------------------------------------------
 
 def fig2_linreg(S_values=(0.4, 0.5, 0.6), iters=3000, eta=1e-2, mu=0.5,
-                n_workers=20, n_points=500, dim=100, seed=0):
+                n_workers=20, n_points=500, dim=100, seed=0,
+                kinds=("none", "topk", "regtopk", "sketchtopk")):
     xs, ys, w_star = linreg_dataset(n_workers, n_points, dim, seed=seed)
 
     def grad_n(w, X, y):
@@ -65,7 +66,7 @@ def fig2_linreg(S_values=(0.4, 0.5, 0.6), iters=3000, eta=1e-2, mu=0.5,
 
     results = {}
     for S in S_values:
-        for kind in ("none", "topk", "regtopk", "sketchtopk"):
+        for kind in kinds:
             cfg = SparsifierConfig(kind=kind, sparsity=S, mu=mu,
                                    selector="exact")
             w = jnp.zeros((dim,))
@@ -90,7 +91,8 @@ def fig2_linreg(S_values=(0.4, 0.5, 0.6), iters=3000, eta=1e-2, mu=0.5,
 # ---------------------------------------------------------------------------
 
 def fig3_nn(iters=400, n_workers=8, batch=20, S=0.001, eta=0.01, mu=0.5,
-            seed=0, eval_every=50, kinds=("topk", "regtopk"), width=16):
+            seed=0, eval_every=50, kinds=("topk", "regtopk"), width=16,
+            sketch_rows=3, sketch_width=0):
     from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
     xtr, ytr, xte, yte = image_dataset(n_train=n_workers * 500, seed=seed)
     # split evenly among workers (paper: data distributed evenly)
@@ -110,7 +112,9 @@ def fig3_nn(iters=400, n_workers=8, batch=20, S=0.001, eta=0.01, mu=0.5,
 
     out = {}
     for kind in kinds:
-        cfg = SparsifierConfig(kind=kind, sparsity=S, mu=mu, selector="exact")
+        cfg = SparsifierConfig(kind=kind, sparsity=S, mu=mu, selector="exact",
+                               sketch_rows=sketch_rows,
+                               sketch_width=sketch_width)
         vec = jnp.array(flat0)
         states = sparsify.stack_states(
             [sparsify.init_state(cfg, j) for _ in range(n_workers)])

@@ -132,7 +132,14 @@ def bench_compress(quick):
     - group "topk_hist": the histogram-selector path — fused since the
       capability-dispatch PR (reference-pipeline histogram packs no
       pairs and degrades sparse comm, so its row times the simulate
-      path).
+      path);
+    - group "fused_sketch": the per-worker unit of the sketch-
+      coordinated path (§2.9) — accumulate a = err + g and CountSketch-
+      encode it. reference = legacy vmap encode (materializes (rows, J)
+      hash/sign intermediates); fused = ops.fused_sketch_encode (encode
+      kernel reads a once), which must hold the same absolute 2-sweep
+      sparse-path budget as every other fused row.
+      benchmarks.check_compress REQUIRES this group in fresh results.
 
     us/call = min over repeats (microbenchmark convention); sweeps/step
     from the traced-shape audit. --json -> BENCH_compress.json (the
@@ -171,11 +178,21 @@ def bench_compress(quick):
                 ("fused", dataclasses.replace(cfg_hr, pipeline="fused")),
             )),
         )
+        cfg_sk = SparsifierConfig(kind="sketchtopk", sparsity=0.001,
+                                  selector="exact", comm_mode="sparse")
+        groups += (
+            ("fused_sketch", "sketch", (
+                ("reference", cfg_sk),
+                ("fused", dataclasses.replace(cfg_sk, pipeline="fused")),
+            )),
+        )
         g = jax.random.normal(jax.random.PRNGKey(0), (j,), jnp.float32)
         for group, stem, variants in groups:
             us = {}
             for label, cfg in variants:
-                row = _bench_compress_one(cfg, g, j, repeats)
+                bench_one = (_bench_sketch_one if group == "fused_sketch"
+                             else _bench_compress_one)
+                row = bench_one(cfg, g, j, repeats)
                 us[label] = row["us_per_call"]
                 row.update({"name": f"compress_{stem}_{label}_J{j}",
                             "group": group, "pipeline": label,
@@ -256,6 +273,46 @@ def _bench_compress_one(cfg, g, j, repeats) -> dict:
         row["exposed_comm_stream_s"] = comm_behind_backward_s(
             t_gather, t_bwd, nseg)
     return row
+
+
+def _bench_sketch_one(cfg, g, j, repeats) -> dict:
+    """Per-worker unit of the sketch-coordinated path (DESIGN.md §2.9):
+    accumulate a = err + g and CountSketch-encode it. Selection and the
+    shared-mask decode run at the AGGREGATE level (after the sketch
+    all-reduce), so they are not part of the per-worker compress unit
+    this row times and audits."""
+    from repro.core import sketch, sparsify
+    from repro.kernels.compress import ops as cops
+    from repro.kernels.compress.audit import audit_fn
+    state = sparsify.init_state(cfg, j)
+    n_rows = cfg.sketch_rows
+    width = sketch.resolve_width(sparsify.resolve_k(cfg, j),
+                                 cfg.sketch_width)
+    if cfg.pipeline == "fused":
+        def f(state, g):
+            out = cops.fused_sketch_encode(g, state["err_prev"],
+                                           rows=n_rows, width=width)
+            return out["a"], out["sketch"]
+    else:
+        def f(state, g):
+            a = state["err"].astype(jnp.float32) + g
+            return a, sketch.encode(a, n_rows, width)
+
+    fn = jax.jit(f)
+    jax.block_until_ready(fn(state, g))       # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(state, g))
+        best = min(best, time.perf_counter() - t0)
+    aud = audit_fn(f, state, g, j=j, donate_argnums=(0,))
+    return {"j": j, "num_buckets": cfg.num_buckets,
+            "allocation": cfg.allocation, "overlap": cfg.overlap,
+            "sketch_rows": n_rows, "sketch_width": width,
+            "us_per_call": round(best * 1e6, 1),
+            "sweeps_per_step": aud["traversals"],
+            "read_units": round(aud["read_units"], 2),
+            "write_units": round(aud["write_units"], 2)}
 
 
 def bench_train_step(quick):

@@ -10,6 +10,17 @@ Three communication modes (DESIGN.md §2.1), all used inside ``shard_map``:
                  and scatter-add locally. Comm per step = N*k*8 bytes instead
                  of ~2*J*4 — the production path whose collective-term drop
                  the roofline quantifies.
+
+Sketch-coordinated selection (dispatch ``selection="sketch"``, DESIGN.md
+§2.9) adds a pre-selection collective — one all-reduce of per-worker
+CountSketches — after which every rank decodes the SAME top-k mask, so
+the sparse exchange ships VALUES ONLY (``shared_mask_allgather_combine``;
+indices are implied by the coordinated mask): N*k*4 bytes, half the
+packed-pair wire, compounding with ``wire_dtype="bfloat16"``.
+
+Which path serves a config is entirely the dispatch decision
+(``CompressDispatch.selection`` / ``.wire``); the sync code never
+branches on ``cfg.kind``.
 """
 from __future__ import annotations
 
@@ -21,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SparsifierConfig
-from repro.core import sparsify
+from repro.core import sketch, sparsify
 from repro.kernels.compress.dispatch import (  # noqa: F401  (re-export)
     dispatch as compress_dispatch,
     effective_comm_mode,
@@ -175,6 +186,64 @@ def sparse_allgather_combine(values: jnp.ndarray, indices: jnp.ndarray,
     return dense / jnp.maximum(n_active, 1.0).astype(acc_dtype)
 
 
+def shared_mask_allgather_combine(values: jnp.ndarray, indices: jnp.ndarray,
+                                  j: int, axes: AxisNames,
+                                  num_buckets: int = 1,
+                                  wire_dtype: str = "float32",
+                                  participate=None) -> jnp.ndarray:
+    """All-gather (k,) VALUES under a COORDINATED shared mask; combine
+    locally (DESIGN.md §2.9).
+
+    Every rank holds the SAME index list — decoded from the all-reduced
+    sketch — so the indices never travel: wire bytes are n * k *
+    value_bytes, HALF the packed (values, indices) exchange at fp32,
+    compounding with ``wire_dtype="bfloat16"`` (n * k * 2). ``indices``
+    is that shared list; it only steers the local scatter.
+
+    Because the support coincides on every rank, the per-coordinate
+    support count equals the active worker count — ``combine="support"``
+    and ``"mean"`` coincide, so there is exactly one combine:
+    sum / n_active. ``num_buckets > 1`` chunks the gather like
+    :func:`sparse_allgather_combine` (same latency-hiding rationale).
+
+    ``participate``: this rank's liveness bit. A sitting-out worker's
+    values arrive pre-zeroed by the caller (its slots are inert — the
+    index list is shared, so no per-worker routing is needed), and the
+    normalizer becomes the active count via one scalar psum. With
+    ``participate=None`` the normalizer is the same float n, so an
+    all-ones mask is bit-identical.
+    """
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = _axis_size(axes)
+    from repro.core import bigvec
+    k = values.shape[0]
+    num_buckets = max(1, int(num_buckets))
+    if k <= num_buckets:
+        num_buckets = 1
+    chunk = -(-k // num_buckets)
+    pad = chunk * num_buckets - k
+    if pad:
+        # inert tail: scatter-add of 0.0 at (shared) index 0
+        values = jnp.concatenate([values, jnp.zeros((pad,), values.dtype)])
+        indices = jnp.concatenate([indices, jnp.zeros((pad,), indices.dtype)])
+    acc_dtype = values.dtype
+    wire_dt = jnp.dtype(wire_dtype)
+    dense = jnp.zeros((j,), acc_dtype)
+    for b in range(num_buckets):
+        vb = values[b * chunk:(b + 1) * chunk].astype(wire_dt)
+        for a in axes:
+            vb = jax.lax.all_gather(vb, a)     # stacks leading axis
+        vsum = jnp.sum(vb.reshape(-1, chunk).astype(acc_dtype), axis=0)
+        dense = bigvec.scatter_add(dense, indices[b * chunk:(b + 1) * chunk],
+                                   vsum)
+    if participate is None:
+        return dense / jnp.float32(n).astype(acc_dtype)
+    p = jnp.asarray(participate, jnp.bool_).reshape(())
+    na = jax.lax.psum(p.astype(jnp.float32), axes)
+    return dense / jnp.maximum(na, 1.0).astype(acc_dtype)
+
+
 class GradientSync:
     """Per-run gradient-sync surface: static fields bound once, per-step
     work through ``__call__`` or the ``begin()/feed_segment()/finish()``
@@ -226,7 +295,7 @@ class GradientSync:
         from repro.kernels.compress.dispatch import check_overlap
         check_overlap(cfg)                     # overlap="backward" capability
         if (cfg.num_buckets == 0 and j is not None and n_workers is not None
-                and cfg.kind != "none"):
+                and compress_dispatch(cfg).selection != "none"):
             # bucket auto-tune resolved at build time when the problem
             # size and fleet size are concrete; otherwise deferred to the
             # per-step call where the mesh axis size is known
@@ -287,7 +356,8 @@ class GradientSync:
                                                            axes)}
             return g_agg, new_state, stats
 
-        if cfg.kind == "none":
+        d = compress_dispatch(cfg)
+        if d.selection == "none":
             gd = g.astype(jnp.dtype(cfg.ef_dtype))
             if p is None:
                 g_agg = dense_allreduce(gd, axes)
@@ -304,7 +374,7 @@ class GradientSync:
             cfg = dataclasses.replace(
                 cfg, num_buckets=sparsify.resolve_num_buckets(cfg, j, n))
         omega = 1.0 / n
-        if cfg.kind == "globaltopk":
+        if d.selection == "global":
             # genie baseline: TOP-k on the true aggregated accumulated
             # gradient
             from repro.core import select as _select
@@ -318,16 +388,8 @@ class GradientSync:
             k = sparsify.resolve_k(cfg, j)
             mask = _select.topk_mask(a_agg, k, cfg.selector)
             return _ret(mask * a_agg, {"step": state["step"] + 1}, p, zero)
-        if cfg.kind == "sketchtopk":
-            if p is not None:
-                # the shared sketch-coordinated mask has no per-worker
-                # sit-out semantics yet — refuse at trace time, never
-                # silently average a stale sketch in
-                raise NotImplementedError(
-                    "participation masks are not supported for "
-                    "kind='sketchtopk'")
-            g_agg, new_state = _sketch_sync(cfg, state, g, axes)
-            return _ret(g_agg, new_state, None, zero)
+        if d.selection == "sketch":
+            return self._sync_sketch(cfg, d, state, g, p, n, _ret)
 
         out = sparsify.compress(cfg, state, g, key=key, omega=omega,
                                 seg_bounds=self.seg_bounds, participate=p,
@@ -388,6 +450,82 @@ class GradientSync:
                                                participate=p_eff)
         return _ret(g_agg, new_state, p_eff, dropped)
 
+    def _sync_sketch(self, cfg, d, state, g, p, n, _ret):
+        """Sketch-coordinated global top-k step (DESIGN.md §2.9).
+
+        1. encode: a = err + g into a (rows, width) CountSketch — folded
+           into sweep 1 on the fused path (ops.fused_sketch_encode, one
+           traversal on Pallas, two under the XLA strategy), legacy
+           two-pass encode on the reference path;
+        2. pre-selection collective: ONE all-reduce of the linear
+           sketches. Elastic: absent workers contribute ZERO sketches
+           and the combine renormalizes by the active count (an
+           all-ones mask is bit-identical to p=None — the psum operands
+           pass through bitwise and the normalizer is the same float n);
+        3. decode: identical magnitude estimates on every rank ->
+           the SAME shared top-k mask everywhere;
+        4. exchange: comm_mode="sparse" ships the k values only via
+           shared_mask_allgather_combine (indices implied by the
+           coordinated mask — half the packed-pair wire); otherwise the
+           dense masked ghat is averaged (simulate semantics);
+        5. EF closes O(k): the shared support of a is scatter-zeroed
+           into the next err state (a sitting-out worker's scatter is
+           sentinel-routed, so its decayed err survives verbatim).
+        """
+        axes = self.axes
+        j = g.shape[0]
+        k = sparsify.resolve_k(cfg, j)
+        width = sketch.resolve_width(k, cfg.sketch_width)
+        zero = jnp.zeros((), jnp.float32)
+        ek = "err_prev" if d.path == "fused" else "err"
+        if d.path == "fused":
+            from repro.kernels.compress import ops as cops
+            enc = cops.fused_sketch_encode(
+                g, state[ek], rows=cfg.sketch_rows, width=width,
+                participate=p, err_decay=cfg.err_decay)
+            a, sk = enc["a"], enc["sketch"]
+        else:
+            err = state[ek]
+            if p is not None:
+                from repro.kernels.compress import ops as cops
+                g, err, _ = cops.masked_inputs(g, err, p, cfg.err_decay)
+            a = err + g.astype(jnp.dtype(cfg.ef_dtype))
+            sk = sketch.encode(a, cfg.sketch_rows, width)
+        if p is None:
+            sk_agg = jax.lax.psum(sk, axes) / jnp.float32(n)
+        else:
+            sk_agg = jax.lax.psum(
+                jnp.where(p, sk, jnp.zeros((), sk.dtype)), axes)
+            na = jax.lax.psum(p.astype(jnp.float32), axes)
+            sk_agg = sk_agg / jnp.maximum(na, 1.0)
+        gmag = sketch.estimate(sk_agg, j)        # identical on all ranks
+        from repro.core import select as _select
+        if effective_comm_mode(cfg) == "sparse":
+            from repro.core import bigvec
+            idx = _select.topk_indices(gmag, k)  # the shared mask, as indices
+            vals = bigvec.gather(a, idx)         # O(k)
+            if p is not None:
+                vals = jnp.where(p, vals, jnp.zeros((), vals.dtype))
+            g_agg = shared_mask_allgather_combine(
+                vals, idx, j, axes, num_buckets=cfg.num_buckets,
+                wire_dtype=cfg.wire_dtype, participate=p)
+            live = idx if p is None else bigvec.live_idx(idx, p, j)
+            err_new = bigvec.scatter_set(a.astype(state[ek].dtype), live,
+                                         0.0, mode="drop")
+        else:
+            mask = _select.topk_mask(gmag, k, cfg.selector)
+            ghat = mask * a
+            if p is None:
+                g_agg = simulate_allreduce(ghat, axes)
+            else:
+                ghat = jnp.where(p, ghat, jnp.zeros((), ghat.dtype))
+                dsum = jax.lax.psum(ghat, axes)
+                na = jax.lax.psum(p.astype(jnp.float32), axes)
+                g_agg = dsum / jnp.maximum(na, 1.0).astype(ghat.dtype)
+            err_new = (a - ghat).astype(state[ek].dtype)
+        new_state = {ek: err_new, "step": state["step"] + 1}
+        return _ret(g_agg, new_state, p, zero)
+
     # -- in-process simulation surfaces ---------------------------------
 
     def round(self, states: list, grads: list, omegas=None, key=None,
@@ -404,39 +542,17 @@ class GradientSync:
         per-step elastic paths.
         """
         cfg = self.cfg
+        d = compress_dispatch(cfg)
+        if d.selection == "sketch":
+            return self._round_sketch(states, grads, omegas, key,
+                                      participate)
+        if d.selection == "global":
+            return self._round_global(states, grads, omegas, participate)
         n = len(grads)
         omegas = omegas or [1.0 / n] * n
         j = grads[0].shape[0]
         if participate is not None:
-            if cfg.kind in ("sketchtopk", "globaltopk"):
-                raise NotImplementedError(
-                    f"elastic participation is not defined for the "
-                    f"coordinated baseline kind={cfg.kind!r}")
             return self._round_elastic(states, grads, participate, key)
-        if cfg.kind == "sketchtopk":
-            from repro.core import select as _select
-            from repro.core import sketch as _sketch
-            k = sparsify.resolve_k(cfg, j)
-            width = _sketch.resolve_width(k, cfg.sketch_width)
-            a_list = [st["err"] + g.astype(jnp.float32)
-                      for st, g in zip(states, grads)]
-            sk_agg = sum(w * _sketch.encode(a, cfg.sketch_rows, width)
-                         for w, a in zip(omegas, a_list))
-            gmag = _sketch.estimate(sk_agg, j)
-            mask = _select.topk_mask(gmag, k, cfg.selector)
-            g_agg = sum(w * (mask * a) for w, a in zip(omegas, a_list))
-            new_states = [{"err": a - mask * a, "step": st["step"] + 1}
-                          for a, st in zip(a_list, states)]
-            return g_agg, new_states
-        if cfg.kind == "globaltopk":
-            # genie: mask from the true aggregated accumulated gradient
-            from repro.core import select as _select
-            a_list = [grads[i].astype(jnp.float32) for i in range(n)]
-            a_agg = sum(w * a for w, a in zip(omegas, a_list))
-            k = sparsify.resolve_k(cfg, j)
-            mask = _select.topk_mask(a_agg, k, cfg.selector)
-            g_agg = mask * a_agg
-            return g_agg, states
         outs = []
         for i in range(n):
             ki = None if key is None else jax.random.fold_in(key, i)
@@ -479,6 +595,114 @@ class GradientSync:
                       for o, p in zip(outs, pfs)]
         return g_agg, new_states
 
+    def _round_sketch(self, states, grads, omegas, key, participate):
+        """In-process sketch-coordinated round (DESIGN.md §2.9): encode
+        per worker (folded into sweep 1 on the fused path), ONE sketch
+        combine, one SHARED mask, per-worker EF closed at that mask.
+
+        Elastic participation: absent workers contribute ZERO sketches
+        and zero gradient payloads, and both combines renormalize over
+        the active count; a sitting-out worker's error feedback decays
+        in place (masked_inputs). An all-ones mask is bit-identical to
+        ``participate=None`` — the masked operands pass through bitwise
+        and the normalizer is the same float n. Explicit ``omegas``
+        weight the non-elastic combines only (the elastic combine is
+        equal-weight over the active set, like every other elastic
+        path)."""
+        cfg = self.cfg
+        d = compress_dispatch(cfg)
+        n = len(grads)
+        j = grads[0].shape[0]
+        k = sparsify.resolve_k(cfg, j)
+        width = sketch.resolve_width(k, cfg.sketch_width)
+        ek = "err_prev" if d.path == "fused" else "err"
+        if participate is not None and omegas is not None:
+            raise ValueError(
+                "explicit omegas with a participation mask are not "
+                "defined for sketch coordination — the elastic combine "
+                "renormalizes equal weights over the active set")
+        pfs = (None if participate is None
+               else [jnp.asarray(pi, jnp.bool_) for pi in participate])
+        a_list, sk_list = [], []
+        for i in range(n):
+            pi = None if pfs is None else pfs[i]
+            if d.path == "fused":
+                from repro.kernels.compress import ops as cops
+                enc = cops.fused_sketch_encode(
+                    grads[i], states[i][ek], rows=cfg.sketch_rows,
+                    width=width, participate=pi, err_decay=cfg.err_decay)
+                a, sk = enc["a"], enc["sketch"]
+            else:
+                g, err = grads[i], states[i][ek]
+                if pi is not None:
+                    from repro.kernels.compress import ops as cops
+                    g, err, _ = cops.masked_inputs(g, err, pi,
+                                                   cfg.err_decay)
+                a = err + g.astype(jnp.float32)
+                sk = sketch.encode(a, cfg.sketch_rows, width)
+            a_list.append(a)
+            sk_list.append(sk)
+        if pfs is not None:
+            na = sum(pi.astype(jnp.float32) for pi in pfs)
+            norm = jnp.maximum(na, 1.0)
+            sk_agg = sum(jnp.where(pi, sk, jnp.zeros((), sk.dtype))
+                         for pi, sk in zip(pfs, sk_list)) / norm
+        elif omegas is None:
+            sk_agg = sum(sk_list) / jnp.float32(n)
+        else:
+            sk_agg = sum(w * sk for w, sk in zip(omegas, sk_list))
+        gmag = sketch.estimate(sk_agg, j)
+        from repro.core import select as _select
+        mask = _select.topk_mask(gmag, k, cfg.selector)   # SHARED
+        ghats = [mask * a for a in a_list]
+        if pfs is not None:
+            ghats = [jnp.where(pi, gh, jnp.zeros((), gh.dtype))
+                     for pi, gh in zip(pfs, ghats)]
+            g_agg = sum(ghats) / norm
+        elif omegas is None:
+            g_agg = sum(ghats) / jnp.float32(n)
+        else:
+            g_agg = sum(w * gh for w, gh in zip(omegas, ghats))
+        # absent workers' ghat is zero, so a - ghat keeps their decayed
+        # err verbatim — same EF semantics as the per-step path
+        new_states = [{ek: (a - gh).astype(st[ek].dtype),
+                       "step": st["step"] + 1}
+                      for a, gh, st in zip(a_list, ghats, states)]
+        return g_agg, new_states
+
+    def _round_global(self, states, grads, omegas, participate):
+        """Genie-baseline round: top-k mask decoded from the true
+        aggregated accumulated gradient. Elastic semantics (DESIGN.md
+        §2.7/§2.9): absent workers contribute nothing, the aggregate
+        renormalizes over the active count, and the genie mask is
+        decoded from that active-mean aggregate; an all-ones mask is
+        bit-identical to ``participate=None``. States pass through
+        unchanged (the genie keeps no error feedback)."""
+        cfg = self.cfg
+        n = len(grads)
+        j = grads[0].shape[0]
+        k = sparsify.resolve_k(cfg, j)
+        from repro.core import select as _select
+        gfs = [g.astype(jnp.float32) for g in grads]
+        if participate is not None:
+            if omegas is not None:
+                raise ValueError(
+                    "explicit omegas with a participation mask are not "
+                    "defined for the genie baseline — the elastic "
+                    "combine renormalizes equal weights over the active "
+                    "set")
+            pfs = [jnp.asarray(pi, jnp.bool_) for pi in participate]
+            na = sum(pi.astype(jnp.float32) for pi in pfs)
+            a_agg = sum(jnp.where(pi, gf, jnp.zeros((), gf.dtype))
+                        for pi, gf in zip(pfs, gfs))
+            a_agg = a_agg / jnp.maximum(na, 1.0)
+        elif omegas is None:
+            a_agg = sum(gfs) / jnp.float32(n)
+        else:
+            a_agg = sum(w * gf for w, gf in zip(omegas, gfs))
+        mask = _select.topk_mask(a_agg, k, cfg.selector)
+        return mask * a_agg, states
+
     def make_round_fn(self, n_workers: int = None):
         """Jitted vmapped aggregation round over stacked worker
         states/grads (the former sparsify.make_round_fn).
@@ -498,26 +722,22 @@ class GradientSync:
                              "construction or per call)")
         omega = 1.0 / n_workers
 
-        if cfg.kind == "sketchtopk":
-            from repro.core import select as _select
-            from repro.core import sketch as _sketch
+        if compress_dispatch(cfg).selection in ("sketch", "global"):
+            # coordinated selection: unstack and delegate to round() —
+            # the fused sketch encode is a Pallas launch, which vmap
+            # cannot batch; a python loop over the N in-process workers
+            # jits into the same program
+            def round_coord(states, grads, key=None):
+                n = grads.shape[0]
+                sts = [jax.tree_util.tree_map(lambda x, i=i: x[i], states)
+                       for i in range(n)]
+                g_agg, new_sts = self.round(
+                    sts, [grads[i] for i in range(n)], key=key)
+                stacked = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *new_sts)
+                return g_agg, stacked
 
-            def round_sketch(states, grads):
-                j = grads.shape[1]
-                k = sparsify.resolve_k(cfg, j)
-                width = _sketch.resolve_width(k, cfg.sketch_width)
-                a = states["err"] + grads.astype(jnp.float32)    # (N, J)
-                sk = jnp.sum(jax.vmap(
-                    lambda ai: _sketch.encode(ai, cfg.sketch_rows,
-                                              width))(a), 0) * omega
-                gmag = _sketch.estimate(sk, j)
-                mask = _select.topk_mask(gmag, k, cfg.selector)
-                ghat = mask[None] * a
-                g_agg = jnp.sum(ghat, 0) * omega
-                return g_agg, {"err": a - ghat,
-                               "step": states["step"] + 1}
-
-            return jax.jit(round_sketch)
+            return jax.jit(round_coord)
 
         def one(state, g, k_i):
             out = sparsify.compress(cfg, state, g, key=k_i, omega=omega)
@@ -604,37 +824,6 @@ def sync_gradient(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         state, g, key=key, participate=participate, with_stats=with_stats)
 
 
-def _sketch_sync(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
-                 axes: AxisNames):
-    """CountSketch-coordinated global TOP-k (core/sketch.py). One sketch
-    all-reduce + value exchange at a SHARED mask."""
-    from repro.core import select as _select
-    from repro.core import sketch as _sketch
-    j = g.shape[0]
-    k = sparsify.resolve_k(cfg, j)
-    a = state["err"] + g.astype(jnp.dtype(cfg.ef_dtype))
-    width = _sketch.resolve_width(k, cfg.sketch_width)
-    sk = _sketch.encode(a, cfg.sketch_rows, width)
-    sk_agg = jax.lax.pmean(sk, axes)                 # linear sketch of a_agg
-    gmag = _sketch.estimate(sk_agg, j)
-    mask = _select.topk_mask(gmag, k, cfg.selector)  # identical on all ranks
-    ghat = mask * a
-    if cfg.comm_mode == "sparse":
-        idx = _select.topk_indices(gmag, k)
-        from repro.core import bigvec
-        vals = bigvec.gather(a, idx)   # uint32-safe for J > 2^31
-        g_agg = sparse_allgather_combine(vals, idx, j, axes,
-                                         num_buckets=cfg.num_buckets,
-                                         wire_dtype=cfg.wire_dtype)
-        # combine scatters duplicate indices once per worker; mask-multiply
-        # keeps only the shared-mask support (defensive; supports coincide)
-        g_agg = g_agg * mask
-    else:
-        g_agg = jax.lax.pmean(ghat, axes)
-    new_state = {"err": a - ghat, "step": state["step"] + 1}
-    return g_agg, new_state
-
-
 def comm_bytes_per_step(cfg: SparsifierConfig, j: int, n_workers: int,
                         n_active=None) -> dict:
     """Analytic communication volume per worker per step (benchmarks).
@@ -661,21 +850,25 @@ def comm_bytes_per_step(cfg: SparsifierConfig, j: int, n_workers: int,
     na = n_workers if n_active is None else min(float(n_active),
                                                 float(n_workers))
     extra = {} if n_active is None else {"n_active": na}
+    d = compress_dispatch(cfg)
     eff = effective_comm_mode(cfg)
-    if cfg.kind == "none" or eff in ("dense", "simulate"):
+    if d.selection == "none" or eff in ("dense", "simulate"):
         b = dense_ar if na <= 1 else 2 * j * 4 * (na - 1) / na
         return {"bytes": b, "k": k, "ratio": b / dense_ar,
                 "effective_comm_mode": eff, "allocation": cfg.allocation,
                 **extra}
-    if cfg.kind == "sketchtopk":
-        from repro.core import sketch as _sketch
-        width = _sketch.resolve_width(k, cfg.sketch_width)
-        sk = 2 * cfg.sketch_rows * width * 4 * (n_workers - 1) / n_workers
-        vals = n_workers * k * _wire_value_bytes(cfg)       # indices implied
+    if d.selection == "sketch":
+        # pre-selection sketch all-reduce (participation-invariant: an
+        # absent worker's ring slot still moves, carrying zeros) + the
+        # shared-mask values-only exchange (indices implied; §2.9)
+        sk = sketch_allreduce_bytes(cfg, j, n_workers)
+        vb = _wire_value_bytes(cfg)
+        vals = na * k * vb
         b = sk + vals
         return {"bytes": b, "k": k, "ratio": b / dense_ar,
-                "sketch_bytes": sk, "effective_comm_mode": eff,
-                "allocation": cfg.allocation}
+                "sketch_bytes": sk, "wire_value_bytes": vb,
+                "effective_comm_mode": eff, "allocation": cfg.allocation,
+                **extra}
     from repro.kernels.compress.dispatch import packed_len
     kp = packed_len(cfg, j)                 # k, or hist_capacity (fused hist)
     vb = _wire_value_bytes(cfg)             # 4, or 2 for wire_dtype=bf16
@@ -699,13 +892,30 @@ def sparse_gather_wire_bytes(cfg: SparsifierConfig, j: int,
     chunked-collective share the roofline's ``collective_exposed_s``
     overlap model scopes to (roofline/analysis.py) — dtype-aware, so a
     ``wire_dtype="bfloat16"`` run is modeled at its real 6-bytes-per-pair
-    payload."""
-    # sketchtopk's sketch-coordinated exchange is modeled separately
-    # (comm_bytes_per_step); every other non-sparse case already reports
-    # itself via effective_comm_mode
-    if effective_comm_mode(cfg) != "sparse" or cfg.kind == "sketchtopk":
+    payload. Shared-mask configs (dispatch ``wire="values"``) gather
+    VALUES ONLY — the coordinated mask implies the indices (§2.9); their
+    pre-selection sketch collective is modeled separately
+    (:func:`sketch_allreduce_bytes`)."""
+    if effective_comm_mode(cfg) != "sparse":
         return None
     from repro.kernels.compress.dispatch import packed_len
     na = n_workers if n_active is None else min(float(n_active),
                                                 float(n_workers))
-    return na * packed_len(cfg, j) * (_wire_value_bytes(cfg) + 4)
+    pair_bytes = _wire_value_bytes(cfg)
+    if compress_dispatch(cfg).wire != "values":
+        pair_bytes += 4                     # uint32 index rides along
+    return na * packed_len(cfg, j) * pair_bytes
+
+
+def sketch_allreduce_bytes(cfg: SparsifierConfig, j: int, n_workers: int):
+    """Per-device wire bytes of the sketch all-reduce pre-selection
+    collective (DESIGN.md §2.9), or None for non-sketch selection.
+    Ring all-reduce of the (rows, width) fp32 sketch: 2 * rows * width
+    * 4 * (N-1)/N. Participation-invariant — absent workers' ring slots
+    still move (carrying zero sketches), so no n_active discount
+    applies, unlike the values exchange."""
+    if compress_dispatch(cfg).selection != "sketch":
+        return None
+    k = sparsify.resolve_k(cfg, j)
+    width = sketch.resolve_width(k, cfg.sketch_width)
+    return 2 * cfg.sketch_rows * width * 4 * (n_workers - 1) / n_workers

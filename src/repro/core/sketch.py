@@ -23,14 +23,17 @@ O(J) hash tables are stored.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 # fixed odd multipliers (Knuth multiplicative hashing), one pair per row.
-# Plain numpy: device constants at import time leak tracers when the
-# module is first imported inside a traced function (aggregate's
-# _sketch_sync imports lazily under shard_map).
+# Plain numpy, never device arrays: the fused sweep-1 encode
+# (kernels/compress/kernel.py) bakes these into its kernel body as
+# python ints — kernels must not capture arrays — and plain hosts
+# constants can never leak tracers into a traced caller.
 _MULTS = np.array([2654435761, 2246822519, 3266489917, 668265263,
                    374761393, 2654435789, 1597334677, 2869860233],
                   dtype=np.uint32)
@@ -38,11 +41,34 @@ _ADDS = np.array([374761393, 3266489917, 1181783497, 2549297995,
                   4279918613, 1609587929, 2246822519, 2654435761],
                  dtype=np.uint32)
 
+_WIDTH_CAP = 1 << 22
+
+# k values already warned about — the width cap is surfaced once per
+# process per k, same pattern as aggregate's sparse->simulate degrade
+_CAP_WARNED: set = set()
+
 
 def resolve_width(k: int, width: int = 0) -> int:
+    """Effective sketch width: the explicit ``width`` verbatim, else
+    4*k clamped to [256, 2^22]. Hitting the upper cap degrades estimate
+    quality (more colliding coordinates per bucket than the 4x
+    provisioning assumes) — warned once, never silent."""
     if width:
-        return width
-    return int(min(max(4 * k, 256), 1 << 22))
+        return int(width)
+    w = max(4 * k, 256)
+    if w > _WIDTH_CAP:
+        if k not in _CAP_WARNED:
+            _CAP_WARNED.add(k)
+            warnings.warn(
+                f"sketch width 4*k = {w} exceeds the {_WIDTH_CAP} "
+                f"auto-width cap at k={k}; the capped sketch packs "
+                f"~{4 * k / _WIDTH_CAP:.1f}x more coordinates per bucket "
+                "than the 4x provisioning assumes, degrading the "
+                "magnitude estimates. Set SparsifierConfig.sketch_width "
+                "explicitly to override the cap.",
+                RuntimeWarning, stacklevel=2)
+        return _WIDTH_CAP
+    return int(w)
 
 
 def _hashes(j: int, rows: int, width: int):

@@ -368,10 +368,20 @@ def compress(cfg: SparsifierConfig, state: dict, g: jnp.ndarray,
         return CompressOut(g, ones, {"step": state["step"] + 1})
 
     if cfg.kind == "globaltopk":
-        # Genie sparsifier: mask computed by the CALLER from the aggregated
-        # accumulated gradient (core/aggregate.py:global_topk_roundtrip).
-        raise RuntimeError("globaltopk is aggregate-level; use "
-                           "aggregate.global_topk_roundtrip")
+        # Genie sparsifier: the mask is decoded from the AGGREGATED
+        # accumulated gradient, so there is no per-worker compress step —
+        # aggregate.GradientSync serves it (dispatch selection="global").
+        raise RuntimeError("globaltopk is aggregate-level; run it through "
+                           "aggregate.GradientSync (sync or round)")
+
+    if cfg.kind == "sketchtopk":
+        # Sketch-coordinated selection: the shared mask exists only after
+        # the sketch all-reduce — aggregate.GradientSync runs the whole
+        # step (dispatch selection="sketch"; the per-worker half is
+        # kernels.compress.ops.fused_sketch_encode).
+        raise RuntimeError("sketchtopk selection is aggregate-level; run "
+                           "it through aggregate.GradientSync (sync or "
+                           "round)")
 
     if cfg.kind == "topk":
         a = state["err"] + g

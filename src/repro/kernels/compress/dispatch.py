@@ -62,16 +62,45 @@ class CompressDispatch:
     reason: str        # "" when fused; why the reference path serves it
     packs_pairs: bool  # compress emits fixed-size packed (values, indices)
     exact_parity: bool  # selection bit-identical to reference selector="exact"
+    selection: str = "local"  # "local" | "global" | "sketch" | "none"
+    wire: str = "pairs"       # "pairs" | "values" | "dense"
+
+
+def _selection_wire(cfg):
+    """Where the top-k decision is made and what travels on the sparse
+    wire (DESIGN.md §2.9). "local" selection ships packed (values,
+    indices) pairs; "sketch" coordination yields one SHARED mask, so
+    only the (k,) values travel ("values"); "global"/"none" selection
+    has no per-worker sparse payload at all ("dense")."""
+    if cfg.kind == "none":
+        return "none", "dense"
+    if cfg.kind == "globaltopk":
+        return "global", "dense"
+    if cfg.kind == "sketchtopk":
+        return "sketch", "values"
+    return "local", "pairs"
 
 
 def _fused_reason(cfg) -> str:
     """Why cfg does NOT take the fused path ("" = it does)."""
     if cfg.pipeline != "fused":
         return f"pipeline={cfg.pipeline!r} requested"
+    if cfg.kind == "sketchtopk":
+        # the CountSketch ENCODE folds into sweep 1 (ops.
+        # fused_sketch_encode); selection itself is aggregate-level
+        # (shared mask after the sketch all-reduce), so the selector
+        # only has to exist for the shared-mask decode
+        if cfg.selector not in FUSED_SELECTORS:
+            return (f"selector={cfg.selector!r} has no shared-mask "
+                    "decode on the fused sketch path")
+        if str(cfg.ef_dtype) not in FUSED_EF_DTYPES:
+            return (f"ef_dtype={cfg.ef_dtype!r} has no fused state layout "
+                    "(fp32 and bf16 only)")
+        return ""
     if cfg.kind not in FUSED_KINDS:
         return (f"kind={cfg.kind!r} has no per-worker compress step the "
-                "two-sweep pipeline can serve (aggregate-level or "
-                "sketch-coordinated selection)")
+                "two-sweep pipeline can serve (aggregate-level "
+                "selection)")
     if cfg.kind != "randk" and cfg.selector not in FUSED_SELECTORS:
         return (f"selector={cfg.selector!r} is served by kernels/topk_select "
                 "on the reference path")
@@ -89,11 +118,19 @@ def dispatch(cfg) -> CompressDispatch:
     TestDispatchTable. ``cfg.allocation`` does not change the path — both
     pipelines serve every allocation mode for the kinds
     allocate.ALLOCATED_KINDS (allocate.check_allocation raises for the
-    rest; DESIGN.md §2.6)."""
+    rest; DESIGN.md §2.6). ``selection``/``wire`` are what
+    core.aggregate.GradientSync branches on — sync never looks at
+    cfg.kind directly (DESIGN.md §2.9)."""
+    sel, wire = _selection_wire(cfg)
     reason = _fused_reason(cfg)
     if not reason:
+        if cfg.kind == "sketchtopk":
+            # encode-in-sweep-1; no packed pairs — the shared mask
+            # implies the index list, only values travel
+            return CompressDispatch("fused", "", False,
+                                    cfg.selector == "exact", sel, wire)
         exact = cfg.kind == "randk" or cfg.selector == "exact"
-        return CompressDispatch("fused", "", True, exact)
+        return CompressDispatch("fused", "", True, exact, sel, wire)
     # reference path: packed pairs exist only for fixed-count selection —
     # selector="exact", randk (selector-free), and regtopk's O(k) sparse
     # state layout (whose packing is exact-k regardless of cfg.selector:
@@ -103,7 +140,8 @@ def dispatch(cfg) -> CompressDispatch:
                        and cfg.state_format == "sparse"))
     packs = exact_count and cfg.kind in ("topk", "dgc", "regtopk",
                                          "thresholdk", "randk")
-    return CompressDispatch("reference", reason, packs, exact_count)
+    return CompressDispatch("reference", reason, packs, exact_count,
+                            sel, wire)
 
 
 def hist_capacity(k: int, j: int) -> int:
@@ -126,6 +164,8 @@ def packed_len(cfg, j: int) -> int:
     from repro.core.sparsify import resolve_k
     k = resolve_k(cfg, j)
     d = dispatch(cfg)
+    if d.wire == "values":
+        return k            # shared-mask payload: exactly k values (§2.9)
     if d.path == "fused" and cfg.kind != "randk" and \
             cfg.selector == "histogram":
         return hist_capacity(k, j)
@@ -147,6 +187,13 @@ def check_overlap(cfg) -> None:
                          "'backward')")
     if overlap == "backward":
         d = dispatch(cfg)
+        if d.selection == "sketch":
+            raise ValueError(
+                "overlap='backward' is not defined for sketch-coordinated "
+                "selection (kind='sketchtopk'): the sketch all-reduce is a "
+                "pre-selection barrier over the WHOLE accumulated gradient, "
+                "so no per-segment stream can launch before the shared "
+                "mask exists (DESIGN.md §2.9)")
         if d.path != "fused":
             raise ValueError(
                 "overlap='backward' requires the fused pipeline; this "
@@ -156,17 +203,19 @@ def check_overlap(cfg) -> None:
 def effective_comm_mode(cfg) -> str:
     """The communication mode cfg actually realizes in sync_gradient.
 
-    comm_mode="sparse" needs fixed-size packed pairs; configs whose
-    compress step packs none (reference-pipeline histogram selectors)
+    comm_mode="sparse" needs a fixed-size sparse payload; configs whose
+    compress step emits none (reference-pipeline histogram selectors)
     degrade to a dense simulate all-reduce — explicitly, with a
-    trace-time warning from core.aggregate. "none" and "globaltopk"
-    all-reduce densely regardless; "sketchtopk" has its own
-    sketch-coordinated sparse exchange.
+    trace-time warning from core.aggregate. Dense-wire selection
+    ("none"/"globaltopk") all-reduces densely regardless; sketch
+    coordination ships the shared-mask values-only payload, which is
+    sparse on both pipelines (DESIGN.md §2.9).
     """
     if cfg.comm_mode != "sparse":
         return cfg.comm_mode
-    if cfg.kind in ("none", "globaltopk"):
+    d = dispatch(cfg)
+    if d.wire == "dense":
         return "dense"
-    if cfg.kind == "sketchtopk":
+    if d.wire == "values":
         return "sparse"
-    return "sparse" if dispatch(cfg).packs_pairs else "simulate"
+    return "sparse" if d.packs_pairs else "simulate"

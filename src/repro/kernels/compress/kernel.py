@@ -285,3 +285,134 @@ def sweep2_pallas(score, tau, *, maxpb: int, interpret: bool = True,
     else:
         (vals, idx, cnt), mask = outs, None
     return mask, vals.reshape(-1), idx.reshape(-1), cnt.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# CountSketch encode (sweep-1 fold, DESIGN.md §2.9)
+# ---------------------------------------------------------------------------
+
+# sketch-encode NATIVE grid step: 32x the sweep block. The encode
+# touches each element once and accumulates into the tiny (rows, width)
+# output, so a fat block keeps the grid short without growing any
+# J-sized intermediate. Interpret mode widens further (_sketch_grid).
+SKETCH_BLOCK = 32 * BLOCK
+
+
+def _sketch_accum(a, base, sk_ref, *, rows: int, width: int, block: int,
+                  mults, adds):
+    """Accumulate one (block,) slice of ``a`` into the (rows, width)
+    sketch ref. Hashing is BIT-identical to core.sketch._hashes: the
+    uint32 index stream through the same multiplicative-hash constants
+    (baked as python ints — kernels must not capture arrays).
+
+    Each row scatters into its own 1D (width,) accumulator: XLA lowers
+    a 1D scatter-add measurably faster than the batched/2D form the
+    legacy vmap encode takes (~25% at J = 2^24 on CPU), and the row
+    loop is a static unroll (rows <= 8)."""
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (block,), 0)
+    gidx = base + lane                       # uint32 global element index
+    for r in range(rows):
+        x = gidx * jnp.uint32(mults[r]) + jnp.uint32(adds[r])
+        h = ((x >> 8) % jnp.uint32(width)).astype(jnp.int32)
+        s = ((x >> 31) & 1).astype(jnp.float32) * 2.0 - 1.0
+        sk_ref[r, :] += jnp.zeros((width,), jnp.float32).at[h].add(s * a)
+
+
+def _sketch_encode_kernel(a_ref, sk_ref, *, rows: int, width: int,
+                          block: int, mults, adds):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sk_ref[...] = jnp.zeros_like(sk_ref)
+
+    a = a_ref[...].astype(jnp.float32)[0]                      # (block,)
+    base = jax.lax.convert_element_type(i, jnp.uint32) * block
+    _sketch_accum(a, base, sk_ref, rows=rows, width=width, block=block,
+                  mults=mults, adds=adds)
+
+
+def _sweep1_sketch_kernel(g_ref, err_ref, a_ref, sk_ref, *, rows: int,
+                          width: int, block: int, mults, adds):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sk_ref[...] = jnp.zeros_like(sk_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    err = err_ref[...].astype(jnp.float32)     # one state read: err_prev
+    a = err + g
+    a_ref[...] = a
+    base = jax.lax.convert_element_type(i, jnp.uint32) * block
+    _sketch_accum(a[0], base, sk_ref, rows=rows, width=width, block=block,
+                  mults=mults, adds=adds)
+
+
+def _sketch_grid(j: int, interpret: bool = True):
+    """(block, padded J) for the sketch-encode grid: lane-aligned block.
+    Pad elements carry a = 0.0, so they add s * 0 to whatever bucket
+    their (well-defined) hash picks — inert.
+
+    Native blocks cap at SKETCH_BLOCK (VMEM-bounded). Interpret mode
+    has no VMEM ceiling but pays a fixed per-grid-step dispatch cost
+    (the emulated block load + scatter launches), so it widens the
+    block to keep the grid at <= 8 steps at any J."""
+    cap = SKETCH_BLOCK
+    if interpret:
+        cap = max(cap, -(-j // (8 * 128)) * 128)
+    block = min(cap, -(-j // 128) * 128)
+    return block, -(-j // block) * block
+
+
+def sketch_encode_pallas(a, *, rows: int, width: int, mults, adds,
+                         interpret: bool = True):
+    """a (J,) -> CountSketch (rows, width), bit-identical to
+    core.sketch.encode at the same constants. ONE pallas barrier: the
+    per-block scatter-adds accumulate into the (rows, width) output
+    block, so no (rows, J) hash/sign intermediate is ever materialized
+    (the legacy encode's dominant traffic)."""
+    j = a.shape[0]
+    block, j_pad = _sketch_grid(j, interpret)
+    if j_pad != j:
+        a = jnp.pad(a.astype(jnp.float32), (0, j_pad - j))
+    grid = j_pad // block
+    sk = pl.pallas_call(
+        functools.partial(_sketch_encode_kernel, rows=rows, width=width,
+                          block=block, mults=tuple(mults),
+                          adds=tuple(adds)),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, width), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, width), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32).reshape(grid, block))
+    return sk
+
+
+def sweep1_sketch_pallas(g, err_prev, *, rows: int, width: int, mults,
+                         adds, interpret: bool = True):
+    """Sweep 1 with the CountSketch encode folded in: one pass over
+    (g, err_prev) emits both a = err_prev + g AND its sketch, so the
+    Pallas strategy pays a single traversal for accumulate + encode
+    (DESIGN.md §2.9). Returns (a (J,) fp32, sketch (rows, width))."""
+    j = g.shape[0]
+    block, j_pad = _sketch_grid(j, interpret)
+    if j_pad != j:
+        g = jnp.pad(g.astype(jnp.float32), (0, j_pad - j))
+        err_prev = jnp.pad(err_prev.astype(jnp.float32), (0, j_pad - j))
+    grid = j_pad // block
+    rs = lambda x: x.astype(jnp.float32).reshape(grid, block)
+    spec = pl.BlockSpec((1, block), lambda i: (i, 0))
+    a, sk = pl.pallas_call(
+        functools.partial(_sweep1_sketch_kernel, rows=rows, width=width,
+                          block=block, mults=tuple(mults),
+                          adds=tuple(adds)),
+        grid=(grid,),
+        in_specs=[spec, spec],
+        out_specs=[spec, pl.BlockSpec((rows, width), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((grid, block), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, width), jnp.float32)],
+        interpret=interpret,
+    )(rs(g), rs(err_prev))
+    return a.reshape(-1)[:j], sk

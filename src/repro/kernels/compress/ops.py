@@ -412,6 +412,57 @@ def _fused_randk(g, err_prev, *, k: int, key, want_ghat: bool,
             "tau": None}
 
 
+def fused_sketch_encode(g, err_prev, *, rows: int, width: int,
+                        strategy: Optional[str] = None,
+                        participate=None, err_decay: float = 1.0) -> dict:
+    """Sweep 1 with the CountSketch ENCODE folded in (DESIGN.md §2.9).
+
+    The sketch-coordinated path (kind="sketchtopk") has no per-worker
+    selection — the shared mask is decoded from the all-reduced sketch
+    at the aggregate level — so its per-worker compress unit is exactly
+    this: accumulate a = err_prev + g and encode it into a (rows, width)
+    CountSketch, bit-identical to core.sketch.encode. Returns
+    {"a": (J,) fp32, "sketch": (rows, width) fp32}.
+
+    Budget (audit.py absolutes, pinned in tests/test_sketch.py):
+
+    - strategy="pallas": ONE combined kernel emits a and the sketch in a
+      single pass — 1.0 traversal, 1.0 J-sized write.
+    - strategy="xla": the elementwise a-stream (XLA-fused) plus a
+      dedicated encode kernel reading a once — 2.0 traversals, 1.0
+      J-sized write. The kernel route is load-bearing: an XLA
+      ``.at[h].add`` encode bills one extra traversal PER ROW (rows
+      scatter barriers), and the legacy vmap encode materializes
+      (rows, J) hash/sign intermediates; both blow the 2.0 budget.
+
+    The (rows, width) sketch output is below the audit's sizable floor
+    at every bench shape (width ~ 4k << J/16), so the encode adds no
+    write units. ``participate`` applies the standard elastic input
+    masking (masked_inputs): a sitting-out worker encodes its decayed
+    error feedback — the aggregate zeroes its sketch before the
+    all-reduce, this just keeps the EF stream bit-comparable.
+    """
+    from repro.core import sketch as core_sketch
+    strategy = strategy or default_strategy()
+    if participate is not None:
+        g, err_prev, _pf = masked_inputs(g, err_prev, participate,
+                                         err_decay)
+    mults = tuple(int(x) for x in core_sketch._MULTS[:rows])
+    adds = tuple(int(x) for x in core_sketch._ADDS[:rows])
+    if strategy in ("pallas", "pallas_interpret"):
+        a, sk = pk.sweep1_sketch_pallas(
+            g, err_prev, rows=rows, width=width, mults=mults, adds=adds,
+            interpret=strategy != "pallas")
+    elif strategy == "xla":
+        a = err_prev.astype(jnp.float32) + g.astype(jnp.float32)
+        sk = pk.sketch_encode_pallas(a, rows=rows, width=width,
+                                     mults=mults, adds=adds,
+                                     interpret=True)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return {"a": a, "sketch": sk}
+
+
 def _seg_candidates_pallas(kind, g, err_prev, c, step, *, provs, k: int,
                            regtopk: bool, momentum: float, mom,
                            interpret: bool, bounds, gate=None,

@@ -180,7 +180,8 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
                pipeline="reference", num_buckets=1, selector="exact",
                wire_dtype="float32", allocation="global", num_segments=0,
                fault_schedule="", err_decay=1.0, combine="mean",
-               overlap="none", **cfg_overrides) -> dict:
+               overlap="none", sketch_rows=3, sketch_width=0,
+               **cfg_overrides) -> dict:
     shape = SHAPES[shape_name]
     cfg = get_config(arch)
     moe_over = {k[4:]: v for k, v in cfg_overrides.items()
@@ -206,7 +207,9 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
                                     num_segments=num_segments,
                                     wire_dtype=wire_dtype,
                                     err_decay=err_decay, combine=combine,
-                                    overlap=overlap),
+                                    overlap=overlap,
+                                    sketch_rows=sketch_rows,
+                                    sketch_width=sketch_width),
         optimizer=OptimizerConfig(kind="adam", lr=1e-4),
         attn_override=attn_override,
         fault_schedule=fault_schedule,
@@ -216,6 +219,7 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
     gather_wire = None
     fault_rec = None
     num_stream_segments = None
+    sketch_rec = None
     if kind == "train":
         # the trace resolves num_buckets inside GradientSync; the shared
         # helper mirrors it exactly (same flattened per-rank J, same dp
@@ -230,6 +234,22 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
         if num_buckets == 0:
             num_buckets_resolved = nb_auto
         gather_wire = sparse_gather_wire_bytes(run.sparsifier, j_local, dp)
+        from repro.core.aggregate import sketch_allreduce_bytes
+        skb = sketch_allreduce_bytes(run.sparsifier, j_local, dp)
+        if skb is not None:
+            # sketch-coordinated selection: the record carries the
+            # EFFECTIVE width (resolve_width may cap the 4k auto-size,
+            # warned once) and the analytic all-reduce payload the
+            # roofline's sketch_allreduce_s term consumes
+            from repro.core import sketch as core_sketch
+            from repro.core.sparsify import resolve_k
+            sketch_rec = {
+                "sketch_rows": run.sparsifier.sketch_rows,
+                "sketch_width_effective": core_sketch.resolve_width(
+                    resolve_k(run.sparsifier, j_local),
+                    run.sparsifier.sketch_width),
+                "sketch_allreduce_bytes": float(skb),
+            }
         if overlap == "backward":
             # the streaming partition the compiled step executes — the
             # roofline's backward-overlap model consumes the count
@@ -300,6 +320,8 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
         rec["sparse_gather_wire_bytes"] = int(gather_wire)
     if num_stream_segments is not None:
         rec["num_stream_segments"] = int(num_stream_segments)
+    if sketch_rec is not None:
+        rec.update(sketch_rec)
     if fault_rec is not None:
         rec["fault"] = fault_rec
     if verbose:
@@ -367,6 +389,15 @@ def main():
                          "comm-behind-backward exposed term")
     ap.add_argument("--err-decay", type=float, default=1.0,
                     help="EF memory decay on sat-out steps (DESIGN.md §2.7)")
+    ap.add_argument("--sketch-rows", type=int, default=3,
+                    help="CountSketch rows for --sparsifier sketchtopk "
+                         "(DESIGN.md §2.9); the record carries "
+                         "sketch_allreduce_bytes so the roofline reports "
+                         "the pre-selection barrier term")
+    ap.add_argument("--sketch-width", type=int, default=0,
+                    help="CountSketch width for --sparsifier sketchtopk; "
+                         "0 auto-sizes to min(max(4k, 256), 2^22) and the "
+                         "record carries sketch_width_effective")
     ap.add_argument("--combine", default="mean",
                     choices=["mean", "support"],
                     help="elastic combine rule (DESIGN.md §2.7)")
@@ -414,6 +445,8 @@ def main():
                     fault_schedule=args.fault_schedule,
                     err_decay=args.err_decay, combine=args.combine,
                     overlap=args.overlap,
+                    sketch_rows=args.sketch_rows,
+                    sketch_width=args.sketch_width,
                     **overrides))
             except Exception as e:  # noqa: BLE001 — report every combo
                 import traceback

@@ -101,6 +101,15 @@ def parse_args(argv=None):
                          "to the fault-free build)")
     ap.add_argument("--drop-prob", type=float, default=0.0,
                     help="shorthand for --fault-schedule iid:<p>")
+    ap.add_argument("--sketch-rows", type=int, default=3,
+                    help="CountSketch rows for kind='sketchtopk' "
+                         "(DESIGN.md §2.9); the sketch all-reduce moves "
+                         "rows*width floats per step")
+    ap.add_argument("--sketch-width", type=int, default=0,
+                    help="CountSketch width for kind='sketchtopk'; 0 "
+                         "auto-sizes to min(max(4k, 256), 2^22) "
+                         "(sketch.resolve_width — warns once when 4k "
+                         "exceeds the cap)")
     ap.add_argument("--optimizer", default="adam")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--data", type=int, default=1)
@@ -167,7 +176,9 @@ def main(argv=None):
                                     wire_dtype=args.wire_dtype,
                                     err_decay=args.err_decay,
                                     combine=args.combine,
-                                    overlap=args.overlap),
+                                    overlap=args.overlap,
+                                    sketch_rows=args.sketch_rows,
+                                    sketch_width=args.sketch_width),
         optimizer=OptimizerConfig(kind=args.optimizer, lr=args.lr),
         seed=args.seed, steps=args.steps,
         checkpoint_dir=args.checkpoint_dir,

@@ -210,6 +210,23 @@ def roofline_terms(rec: dict, hw: Hardware = HW_V5E) -> dict:
         terms["num_stream_segments"] = num_segments
         terms["backward_overlap_s"] = t_gather - exposed
         terms["collective_exposed_backward_s"] = (t_coll - t_gather) + exposed
+    skb = rec.get("sketch_allreduce_bytes")
+    if skb:
+        # sketch-coordinated selection (DESIGN.md §2.9): one extra
+        # all-reduce of the (rows, width) CountSketch BEFORE selection.
+        # It is a pre-selection barrier — it cannot hide behind the
+        # backward pass (check_overlap rejects overlap="backward") or
+        # behind the value all-gather (the shared mask gates the
+        # gather), so its wire time is exposed serially and is reported
+        # as its own term next to the values-only gather share.
+        t_sketch = skb / hw.ici_bw
+        terms["sketch_allreduce_s"] = t_sketch
+        gw = rec.get("sparse_gather_wire_bytes")
+        if gw is not None:
+            # shared-mask wire: values only, so the gather share the
+            # sketch barrier buys back is the halved-payload gather
+            terms["coordinated_collective_s"] = \
+                t_sketch + gw / hw.ici_bw
     fault = rec.get("fault")
     if fault:
         # straggler-exposed view (DESIGN.md §2.7): with an elastic

@@ -350,11 +350,73 @@ class TestElasticRound:
                                           participate=[True] * self.N)
         np.testing.assert_array_equal(np.asarray(a0), np.asarray(a1))
 
-    def test_unsupported_kinds_raise(self):
+    @pytest.mark.parametrize("kind,pipeline", [("globaltopk", "reference"),
+                                               ("sketchtopk", "fused"),
+                                               ("sketchtopk", "reference")])
+    def test_coordinated_all_ones_matches_unmasked(self, kind, pipeline):
+        """Coordinated (genie / sketch-coordinated) rounds accept
+        participation masks; the all-ones mask is BIT-identical to no
+        mask (DESIGN.md §2.7 contract extended to §2.9 kinds)."""
+        cfg = mkcfg(kind, pipeline)
+        grads = self._grads(2)
+        s0 = [sparsify.init_state(cfg, J) for _ in range(self.N)]
+        s1 = [sparsify.init_state(cfg, J) for _ in range(self.N)]
+        a0, n0 = sparsify.sparsified_round(cfg, s0, grads)
+        a1, n1 = sparsify.sparsified_round(cfg, s1, grads,
+                                           participate=[True] * self.N)
+        np.testing.assert_array_equal(np.asarray(a0), np.asarray(a1))
+        for x, y in zip(jax.tree_util.tree_leaves(n0),
+                        jax.tree_util.tree_leaves(n1)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_globaltopk_partial_mask_renormalizes(self):
+        """Genie selection under a partial mask = top-k of the ACTIVE
+        mean (absent workers contribute nothing; divide by n_active)."""
         cfg = mkcfg("globaltopk", "reference")
+        grads = self._grads(3)
+        pm = [True, False, True, True]
         states = [sparsify.init_state(cfg, J) for _ in range(self.N)]
-        with pytest.raises(NotImplementedError):
+        g_agg, _ = sparsify.sparsified_round(cfg, states, grads,
+                                             participate=pm)
+        a = np.mean([np.asarray(g) for g, p in zip(grads, pm) if p],
+                    axis=0)
+        k = sparsify.resolve_k(cfg, J)
+        keep = np.argsort(-np.abs(a))[:k]
+        ref = np.zeros(J, np.float32)
+        ref[keep] = a[keep]
+        np.testing.assert_allclose(np.asarray(g_agg), ref,
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_sketch_partial_mask_matches_active_subset(self):
+        """A partial mask renormalizes the sketch all-reduce by
+        n_active: the 4-worker round with one absent worker aggregates
+        like the 3-active-worker round (sketches, shared mask, and value
+        combine all divide by the live count)."""
+        cfg = mkcfg("sketchtopk", "fused")
+        grads = self._grads(4)
+        pm = [True, False, True, True]
+        states = [sparsify.init_state(cfg, J) for _ in range(self.N)]
+        g_elastic, ns = sparsify.sparsified_round(cfg, states, grads,
+                                                  participate=pm)
+        live = [i for i, p in enumerate(pm) if p]
+        sub_states = [sparsify.init_state(cfg, J) for _ in live]
+        g_sub, ns_sub = sparsify.sparsified_round(
+            cfg, sub_states, [grads[i] for i in live])
+        np.testing.assert_allclose(np.asarray(g_elastic),
+                                   np.asarray(g_sub),
+                                   rtol=1e-6, atol=1e-7)
+        ek = err_key(cfg)
+        for i, w in enumerate(live):
+            np.testing.assert_allclose(np.asarray(ns[w][ek]),
+                                       np.asarray(ns_sub[i][ek]),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_coordinated_rejects_explicit_omegas_with_mask(self):
+        cfg = mkcfg("sketchtopk", "fused")
+        states = [sparsify.init_state(cfg, J) for _ in range(self.N)]
+        with pytest.raises(ValueError):
             sparsify.sparsified_round(cfg, states, self._grads(),
+                                      omegas=[0.25] * self.N,
                                       participate=[True] * self.N)
 
 

@@ -66,7 +66,7 @@ class TestDispatchTable:
     def test_reference_reasons_are_queryable(self):
         for cfg, frag in [
             (_cfg("topk", pipeline="reference"), "pipeline"),
-            (_cfg("sketchtopk"), "kind"),
+            (_cfg("sketchtopk", pipeline="reference"), "pipeline"),
             (_cfg("globaltopk"), "kind"),
             (_cfg("topk", selector="histogram_kernel"), "selector"),
             (_cfg("topk", ef_dtype="float16"), "ef_dtype"),
@@ -74,6 +74,26 @@ class TestDispatchTable:
             d = dispatch(cfg)
             assert d.path == "reference"
             assert frag in d.reason, (d.reason, frag)
+
+    def test_sketchtopk_dispatch(self):
+        """sketchtopk registers in the capability table — fused when the
+        sweep-1 encode serves it, queryable reasons otherwise, and the
+        shared-mask wire contract on BOTH pipelines (DESIGN.md §2.9)."""
+        d = dispatch(_cfg("sketchtopk"))
+        assert d.path == "fused" and d.reason == ""
+        assert d.selection == "sketch" and d.wire == "values"
+        assert not d.packs_pairs          # no index list on the wire
+        for cfg, frag in [
+            (_cfg("sketchtopk", selector="histogram_kernel"), "selector"),
+            (_cfg("sketchtopk", ef_dtype="float16"), "ef_dtype"),
+        ]:
+            d = dispatch(cfg)
+            assert d.path == "reference"
+            assert frag in d.reason, (d.reason, frag)
+            assert d.selection == "sketch" and d.wire == "values"
+        # shared mask -> packed payload is exactly k values
+        cfg = _cfg("sketchtopk", sparsity=0.01)
+        assert packed_len(cfg, 4096) == sparsify.resolve_k(cfg, 4096)
 
     def test_effective_comm_mode(self):
         sparse = dict(comm_mode="sparse")
@@ -631,9 +651,9 @@ class TestSparseDegrade:
 
 class TestSketchSyncBigvec:
     def test_sketch_sparse_uses_buckets_and_bigvec(self):
-        """_sketch_sync routes its value gather through bigvec and
-        threads num_buckets into the chunked combine; numerics match the
-        simulate path."""
+        """The sketch-coordinated sync routes its value gather through
+        bigvec and threads num_buckets into the chunked shared-mask
+        combine; numerics match the simulate path."""
         from jax.sharding import PartitionSpec as P
         j = 4_096
         cfg = SparsifierConfig(kind="sketchtopk", sparsity=0.02,
