@@ -1,17 +1,89 @@
 """Batched serving example: prefill a prompt batch, then stream greedy
 decode steps with a sliding-window cache variant — exercises the decode
-paths the long_500k dry-run shape lowers.
+paths the long_500k dry-run shape lowers. The second half runs the
+learning-while-serving loop (DESIGN.md §2.10): a trainer thread
+publishes versioned sparse deltas over a faulty in-process channel
+while the replica applies them between decode steps.
 
   PYTHONPATH=src python examples/serve_batched.py
 """
 import dataclasses
+import threading
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config, reduced_config
+from repro.core import faults
 from repro.models import (Parallel, decode_step, init_params, prefill)
+from repro.serve.delta import (DeltaApplier, DeltaPublisher, FaultyChannel,
+                               MemoryChannel)
+
+
+def live_delta_demo(cfg, pal, params, key):
+    """Trainer thread publishes, replica applies between decode steps."""
+    import tempfile
+    publisher = DeltaPublisher(params, k=2048)
+    chan = FaultyChannel(MemoryChannel(),
+                         faults.parse_channel_schedule("reorder:2,seed=7"))
+    applier = DeltaApplier(params)
+    versions = 24
+    snap_dir = tempfile.mkdtemp(prefix="delta_snaps_")
+
+    @jax.jit
+    def train_update(p, k):
+        leaves, td = jax.tree_util.tree_flatten(p)
+        new = [l + (1e-3 * jax.random.normal(
+            jax.random.fold_in(k, i), l.shape)).astype(l.dtype)
+            for i, l in enumerate(leaves)]
+        return jax.tree_util.tree_unflatten(td, new)
+
+    # warm the jitted update + publisher top-k/scatter before racing the
+    # decode loop: v1 is a zero-diff delta, harmless to apply
+    jax.block_until_ready(train_update(params, key))
+    chan.send(publisher.publish(params))
+
+    def trainer():
+        cur = params
+        for t in range(versions):
+            cur = train_update(cur, jax.random.fold_in(key, t))
+            chan.send(publisher.publish(cur))
+            if publisher.version % 8 == 0:
+                publisher.write_snapshot(snap_dir)
+            time.sleep(0.2)
+        chan.flush()
+        publisher.write_snapshot(snap_dir)
+
+    B, S, new = 4, 48, 16
+    prompt = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits, cache = jax.jit(
+        lambda p, b: prefill(p, b, cfg, pal, max_seq=S + new))(
+            params, {"tokens": prompt})
+    dec = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg, pal))
+    # the in-flight stream pins the version it started on; the LIVE
+    # tree advances underneath it
+    pinned, pinned_v = applier.acquire()
+    th = threading.Thread(target=trainer)
+    th.start()   # trainer publishes while the replica decodes
+    for step in range(new):
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        logits, cache = dec(pinned, cache, nxt)
+        for p in chan.recv():
+            applier.offer(p)
+        if applier.needs_resync and applier.can_resync(snap_dir):
+            applier.resync_from(snap_dir)
+        m = applier.metrics()
+        print(f"  decode step {step:2d}: pinned v{pinned_v}, live "
+              f"v{m['param_version']}, applied {m['applied']}, "
+              f"stale {m['dropped_stale']}, gaps {m['gaps_detected']}, "
+              f"resyncs {m['resyncs']}")
+    th.join()
+    for p in chan.recv():
+        applier.offer(p)
+    if applier.needs_resync and applier.can_resync(snap_dir):
+        applier.resync_from(snap_dir)
+    print("  final delta health:", applier.metrics())
 
 
 def main():
@@ -40,6 +112,11 @@ def main():
         print(f"{attn_kind:8s} window={window:3d} cache_seq={cache_len} "
               f"decoded {new} tokens x batch {B} in {dt:.2f}s "
               f"(pos={int(cache['pos'])})")
+
+    print("learning-while-serving (DESIGN.md §2.10): live delta apply "
+          "over a reordering channel")
+    cfg = reduced_config(get_config("granite-8b"))
+    live_delta_demo(cfg, pal, init_params(cfg, pal, key), key)
 
 
 if __name__ == "__main__":

@@ -1,1 +1,2 @@
-from repro.checkpoint.io import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.io import (save_checkpoint, restore_checkpoint,
+                                 latest_step, read_manifest)

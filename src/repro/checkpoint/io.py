@@ -29,14 +29,22 @@ def _flatten_with_paths(tree):
     return {jax.tree_util.keystr(p): np.asarray(l) for p, l in flat}
 
 
-def save_checkpoint(ckpt_dir: str, step: int, params, opt_state, ef_state):
+def save_checkpoint(ckpt_dir: str, step: int, params, opt_state, ef_state,
+                    param_version=None):
+    """``param_version`` (DESIGN.md §2.10) stamps the delta-broadcast
+    version these params correspond to into the manifest: a restore
+    re-arms the replica's version floor there, and any delta at or below
+    it is rejected as a hard error (it predates the restored state)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     np.savez(path + ".params.npz", **_flatten_with_paths(params))
     np.savez(path + ".opt.npz", **_flatten_with_paths(opt_state))
     np.savez(path + ".ef.npz", **_flatten_with_paths(ef_state))
+    manifest = {"step": step}
+    if param_version is not None:
+        manifest["param_version"] = int(param_version)
     with open(path + ".json", "w") as f:
-        json.dump({"step": step}, f)
+        json.dump(manifest, f)
     return path
 
 
@@ -46,6 +54,16 @@ def latest_step(ckpt_dir: str):
     steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
              if (m := re.match(r"step_(\d+)\.json", f))]
     return max(steps) if steps else None
+
+
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    """The checkpoint's JSON manifest. Pre-§2.10 checkpoints carry only
+    ``step``; ``manifest.get("param_version")`` is then None and the
+    caller must treat the checkpoint as version-unstamped (a
+    delta-applying restore cannot establish a version floor from it)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.json")
+    with open(path) as f:
+        return json.load(f)
 
 
 def _migrate_ef_leaf(data, pstr: str):
@@ -96,6 +114,16 @@ def _fit_ef_worker_dims(leaf, want_shape, pstr: str):
         "match")
 
 
+def _fit_dtype(leaf, tmpl):
+    """npz stores non-native dtypes (bfloat16 & friends from ml_dtypes)
+    as raw void bytes; reinterpret them as the template leaf's dtype on
+    the way back (same itemsize — this is a view, not a cast)."""
+    want = np.dtype(getattr(tmpl, "dtype", leaf.dtype))
+    if leaf.dtype.kind == "V" and leaf.dtype.itemsize == want.itemsize:
+        return leaf.view(want)
+    return leaf
+
+
 def restore_checkpoint(ckpt_dir: str, step: int, params, opt_state, ef_state,
                        shardings=None):
     """Restore into the STRUCTURE of the given trees (values replaced).
@@ -118,6 +146,7 @@ def restore_checkpoint(ckpt_dir: str, step: int, params, opt_state, ef_state,
                       for l, (p, w) in zip(leaves, flat)]
         else:
             leaves = [data[jax.tree_util.keystr(p)] for p, _ in flat]
+        leaves = [_fit_dtype(l, w) for l, (p, w) in zip(leaves, flat)]
         return jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(tree), leaves)
 

@@ -27,6 +27,17 @@ worker's packed payload inert and decays its error-feedback state
 (``SparsifierConfig.err_decay``), and the non-finite payload guard can
 force a scheduled-in worker out for one step (a dropped-for-health
 worker is treated exactly like a scheduled absence).
+
+Delta-channel faults (DESIGN.md §2.10) live in the second half of this
+module: :class:`ChannelFaultSchedule` decides, per published
+``param_version``, what the trainer→replica delta broadcast does to
+that payload — dropped (``loss:p``), bit-corrupted in flight
+(``corrupt:p``), delivered late/out-of-order (``reorder:window``), or
+held back with the rest of a stall window and flushed afterwards
+(``stall:steps``). Same discipline as the participation schedules:
+pure, seeded functions of ``(schedule, version)``, traced-safe, with
+the same parse/format/describe surface, so a fault trace replays
+bit-identically in tests, launchers, and analysis.
 """
 from __future__ import annotations
 
@@ -165,3 +176,172 @@ def describe(sched: Optional[FaultSchedule], n_workers: int) -> dict:
     return {"schedule": format_schedule(sched),
             "kind": sched.kind,
             "n_active_expected": expected_active(sched, n_workers)}
+
+
+# ---------------------------------------------------------------------------
+# Delta-channel fault schedules (DESIGN.md §2.10)
+#
+# The trainer→replica delta broadcast is a lossy channel by contract:
+# a ChannelFaultSchedule decides, per published param_version, what the
+# channel does to that payload. Four kinds (the ``--delta-fault-schedule``
+# spec strings):
+#
+# - ``loss:<p>[,seed=<s>]``    — each version independently dropped with
+#   probability p (never delivered; the replica sees a version gap).
+# - ``corrupt:<p>[,seed=<s>]`` — each version independently bit-flipped
+#   in flight with probability p AFTER the checksum was stamped, so the
+#   applier's guard detects and drops it (→ a gap, like loss, but the
+#   ``dropped_corrupt`` counter fires instead of silent absence).
+# - ``reorder:<window>[,seed=<s>]`` — each version delayed by a seeded
+#   integer in [0, window] versions; deliveries interleave out of order.
+#   The applier's monotonic gate drops stale arrivals and gap-detects
+#   early ones.
+# - ``stall:<steps>[,every=<P>][,at=<v>]`` — the channel buffers every
+#   version inside the stall window and flushes them IN ORDER when the
+#   window ends (a paused link, not a lossy one: the replica catches up
+#   by applying the backlog, no resync needed). One-shot at version
+#   ``at`` (default 1) unless ``every>0`` makes it periodic.
+#
+# Same discipline as the participation schedules above: pure seeded
+# functions of (schedule, version), traced-safe, bit-identical across
+# the channel implementation, test oracles, and analysis replays.
+# ---------------------------------------------------------------------------
+
+CHANNEL_KINDS = ("loss", "corrupt", "reorder", "stall")
+
+
+@dataclass(frozen=True)
+class ChannelFaultSchedule:
+    kind: str            # "loss" | "corrupt" | "reorder" | "stall"
+    prob: float = 0.0    # loss/corrupt: per-version event probability
+    window: int = 0      # reorder: max delivery delay, in versions
+    steps: int = 0       # stall: buffered versions per stall window
+    every: int = 0       # stall: window period (0 = one-shot)
+    at: int = 1          # stall: first stalled version
+    seed: int = 0        # loss/corrupt/reorder: PRNG stream seed
+
+
+def parse_channel_schedule(spec: str) -> Optional[ChannelFaultSchedule]:
+    """Parse a ``--delta-fault-schedule`` spec; "" / "none" -> None.
+
+    Grammar mirrors :func:`parse_schedule`: ``<kind>:<args>`` with
+    comma-separated ``key=value`` args; the leading arg may be bare
+    (``loss:0.3`` == ``loss:p=0.3``, ``reorder:4`` == ``reorder:window=4``,
+    ``stall:10`` == ``stall:steps=10``).
+    """
+    spec = (spec or "").strip()
+    if not spec or spec == "none":
+        return None
+    kind, _, rest = spec.partition(":")
+    if kind not in CHANNEL_KINDS:
+        raise ValueError(
+            f"unknown delta-channel fault kind {kind!r} in {spec!r}; "
+            f"expected one of {CHANNEL_KINDS}")
+    bare_key = {"loss": "p", "corrupt": "p",
+                "reorder": "window", "stall": "steps"}[kind]
+    kv = {}
+    for i, part in enumerate(p for p in rest.split(",") if p):
+        if "=" not in part:
+            if i == 0:
+                kv[bare_key] = part
+                continue
+            raise ValueError(f"malformed delta-channel fault arg {part!r} "
+                             f"in {spec!r} (want key=value)")
+        k, v = part.split("=", 1)
+        kv[k.strip()] = v.strip()
+    seed = int(kv.get("seed", 0))
+    if kind in ("loss", "corrupt"):
+        p = float(kv.get("p", kv.get("prob", "0")))
+        if not 0.0 <= p < 1.0:
+            raise ValueError(
+                f"{kind} probability must be in [0, 1): {p}")
+        return ChannelFaultSchedule(kind, prob=p, seed=seed)
+    if kind == "reorder":
+        window = int(kv.get("window", 0))
+        if window < 1:
+            raise ValueError(f"reorder window must be >= 1: {spec!r}")
+        return ChannelFaultSchedule("reorder", window=window, seed=seed)
+    steps = int(kv.get("steps", 0))
+    every = int(kv.get("every", 0))
+    at = int(kv.get("at", 1))
+    if steps < 1 or (every and every < steps):
+        raise ValueError(
+            f"stall schedule needs steps >= 1 and every in {{0}} ∪ "
+            f"[steps, inf): {spec!r}")
+    return ChannelFaultSchedule("stall", steps=steps, every=every, at=at)
+
+
+def format_channel_schedule(sched: Optional[ChannelFaultSchedule]) -> str:
+    """Inverse of :func:`parse_channel_schedule` (round-trips)."""
+    if sched is None:
+        return ""
+    if sched.kind in ("loss", "corrupt"):
+        return f"{sched.kind}:{sched.prob},seed={sched.seed}"
+    if sched.kind == "reorder":
+        return f"reorder:{sched.window},seed={sched.seed}"
+    return f"stall:{sched.steps},every={sched.every},at={sched.at}"
+
+
+def _channel_key(sched: ChannelFaultSchedule, version):
+    salt = CHANNEL_KINDS.index(sched.kind)
+    key = jax.random.fold_in(jax.random.PRNGKey(sched.seed), salt)
+    return jax.random.fold_in(key, jnp.asarray(version, jnp.int32))
+
+
+def channel_drops(sched: Optional[ChannelFaultSchedule], version):
+    """Does the channel drop (never deliver) this version? Traced-safe
+    () bool, deterministic in (schedule, version)."""
+    if sched is None or sched.kind != "loss":
+        return jnp.asarray(False)
+    return jax.random.uniform(_channel_key(sched, version)) < sched.prob
+
+
+def channel_corrupts(sched: Optional[ChannelFaultSchedule], version):
+    """Does the channel bit-flip this version's payload in flight
+    (after checksum stamping, so the applier detects it)?"""
+    if sched is None or sched.kind != "corrupt":
+        return jnp.asarray(False)
+    return jax.random.uniform(_channel_key(sched, version)) < sched.prob
+
+
+def channel_delay(sched: Optional[ChannelFaultSchedule], version):
+    """Delivery delay, in versions, the channel imposes on this version
+    (0 for non-reorder schedules). Versions are delivered in
+    ``(version + delay, version)`` order."""
+    if sched is None or sched.kind != "reorder":
+        return jnp.asarray(0, jnp.int32)
+    return jax.random.randint(_channel_key(sched, version), (),
+                              0, sched.window + 1)
+
+
+def channel_stalled(sched: Optional[ChannelFaultSchedule], version):
+    """Is this version inside a stall window (buffered, flushed in
+    order when the window ends)?"""
+    if sched is None or sched.kind != "stall":
+        return jnp.asarray(False)
+    v = jnp.asarray(version, jnp.int32)
+    if sched.every > 0:
+        return (v >= sched.at) & ((v - sched.at) % sched.every < sched.steps)
+    return (v >= sched.at) & (v < sched.at + sched.steps)
+
+
+def expected_delivery_rate(sched: Optional[ChannelFaultSchedule]) -> float:
+    """Steady-state fraction of published versions the applier ACCEPTS
+    first-try (no gap, no drop) — the staleness dimension of the §2.10
+    cost model. loss/corrupt remove mass outright; reorder and stall
+    deliver everything eventually (rate 1.0 — they cost staleness, not
+    versions)."""
+    if sched is None:
+        return 1.0
+    if sched.kind in ("loss", "corrupt"):
+        return 1.0 - sched.prob
+    return 1.0
+
+
+def describe_channel(sched: Optional[ChannelFaultSchedule]) -> dict:
+    """JSON-serializable record of the channel fault config."""
+    if sched is None:
+        return {"schedule": "", "delivery_rate_expected": 1.0}
+    return {"schedule": format_channel_schedule(sched),
+            "kind": sched.kind,
+            "delivery_rate_expected": expected_delivery_rate(sched)}

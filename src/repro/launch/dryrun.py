@@ -181,6 +181,7 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
                wire_dtype="float32", allocation="global", num_segments=0,
                fault_schedule="", err_decay=1.0, combine="mean",
                overlap="none", sketch_rows=3, sketch_width=0,
+               delta_k=0, delta_fault_schedule="",
                **cfg_overrides) -> dict:
     shape = SHAPES[shape_name]
     cfg = get_config(arch)
@@ -324,6 +325,27 @@ def dryrun_one(arch: str, shape_name: str, mesh, *, sparsifier="regtopk",
         rec.update(sketch_rec)
     if fault_rec is not None:
         rec["fault"] = fault_rec
+    if delta_k:
+        # learning-while-serving channel (DESIGN.md §2.10): the record
+        # carries the analytic per-delta wire size, the full-snapshot
+        # resync size, and the staleness-vs-bandwidth breakeven so the
+        # roofline's delta_apply_s / delta_bcast_s / resync_s terms are
+        # modeled, not guessed. k counts against the GLOBAL param vector
+        # (the published flat-J space), independent of the mesh.
+        from repro.core import faults
+        from repro.serve.delta import (delta_wire_bytes, resync_bytes,
+                                       resync_equiv_deltas)
+        k_eff = int(min(delta_k, n_params))
+        rec["delta"] = {
+            "k": k_eff,
+            "wire_bytes": int(delta_wire_bytes(k_eff)),
+            "resync_bytes": int(resync_bytes(n_params)),
+            "resync_equiv_deltas": float(
+                resync_equiv_deltas(n_params, k_eff)),
+        }
+        if delta_fault_schedule:
+            rec["delta"]["fault"] = faults.describe_channel(
+                faults.parse_channel_schedule(delta_fault_schedule))
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} mesh={rec['mesh']}: "
               f"lower {t_lower:.0f}s compile {t_compile:.0f}s", flush=True)
@@ -401,6 +423,17 @@ def main():
     ap.add_argument("--combine", default="mean",
                     choices=["mean", "support"],
                     help="elastic combine rule (DESIGN.md §2.7)")
+    ap.add_argument("--delta-k", type=int, default=0,
+                    help="learning-while-serving delta budget (DESIGN.md "
+                         "§2.10): when > 0 the record carries the per-delta "
+                         "wire bytes, the full-snapshot resync bytes, and "
+                         "the resync breakeven, and the roofline reports "
+                         "delta_bcast_s / delta_apply_s / resync_s")
+    ap.add_argument("--delta-fault-schedule", default="",
+                    help="delta-channel fault spec (loss:P | corrupt:P | "
+                         "reorder:W | stall:N); the record's delta section "
+                         "then carries the parsed schedule + expected "
+                         "first-try delivery rate")
     ap.add_argument("--out", default="")
     ap.add_argument("--variant", default="", help="perf-variant tag for the record")
     ap.add_argument("--state-format", default="dense")
@@ -447,6 +480,8 @@ def main():
                     overlap=args.overlap,
                     sketch_rows=args.sketch_rows,
                     sketch_width=args.sketch_width,
+                    delta_k=args.delta_k,
+                    delta_fault_schedule=args.delta_fault_schedule,
                     **overrides))
             except Exception as e:  # noqa: BLE001 — report every combo
                 import traceback

@@ -21,6 +21,22 @@ def parse_args(argv=None):
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mla-absorb", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--apply-deltas", default="",
+                    help="subscribe to a trainer's delta broadcast "
+                         "(DESIGN.md §2.10): serving params start from the "
+                         "latest full snapshot under <dir>/snapshots and "
+                         "versioned sparse deltas from the spool apply "
+                         "between decode steps; in-flight decode stays "
+                         "pinned to the version it started on, version "
+                         "gaps trigger a snapshot resync, and corrupt or "
+                         "non-finite payloads are dropped on health "
+                         "counters. Point it at the same directory as "
+                         "launch/train.py --publish-deltas")
+    ap.add_argument("--delta-fault-schedule", default="",
+                    help="inject receive-side delta-channel faults "
+                         "(loss:P | corrupt:P | reorder:W | stall:N; "
+                         "DESIGN.md §2.10) — same seeded schedules the "
+                         "trainer can inject on the send side")
     return ap.parse_args(argv)
 
 
@@ -39,6 +55,7 @@ def main(argv=None):
     from repro.models.specs import param_specs, replicated_mask
     from repro.models import init_params
     from repro.serve.step import (build_decode_step, build_prefill,
+                                  delta_applier_from_snapshot,
                                   serve_parallel)
     from jax.sharding import PartitionSpec as P
 
@@ -73,7 +90,26 @@ def main(argv=None):
                     replicated_mask(pu))
             return pu
 
-        if pal.tp_on:
+        applier = chan = snap_dir = None
+        if args.apply_deltas:
+            # learning-while-serving (DESIGN.md §2.10): params come from
+            # the trainer's latest snapshot, not a fresh init, so the
+            # held version means something
+            from repro.core import faults as _faults
+            from repro.serve.delta import FaultyChannel, SpoolChannel
+            snap_dir = os.path.join(args.apply_deltas, "snapshots")
+            applier, params = delta_applier_from_snapshot(
+                run, mesh, pal, snap_dir)
+            chan = SpoolChannel(args.apply_deltas)
+            if args.delta_fault_schedule.strip():
+                csched = _faults.parse_channel_schedule(
+                    args.delta_fault_schedule)
+                chan = FaultyChannel(chan, csched)
+                print(f"[serve] delta channel faults (recv side): "
+                      f"{_faults.format_channel_schedule(csched)}")
+            print(f"[serve] applying deltas from {args.apply_deltas} "
+                  f"(snapshot v{applier.version})")
+        elif pal.tp_on:
             params = jax.jit(jax.shard_map(
                 init_fn, mesh=mesh, in_specs=(P(),), out_specs=pspecs,
                 check_vma=False))(key)
@@ -100,11 +136,22 @@ def main(argv=None):
         t_pre = time.time() - t0
         jdec = jax.jit(dec)
         toks = []
+        # in-flight consistency contract (DESIGN.md §2.10): this decode
+        # stream pins the (params, version) it started on; deltas
+        # arriving between its steps advance the applier's LIVE tree
+        # without touching the pinned buffers
+        pinned, pinned_v = (applier.acquire() if applier is not None
+                            else (params, None))
         t0 = time.time()
         for _ in range(args.new_tokens):
             nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
             toks.append(nxt)
-            logits, cache = jdec(params, cache, nxt)
+            logits, cache = jdec(pinned, cache, nxt)
+            if applier is not None:
+                for p in chan.recv():
+                    applier.offer(p)
+                if applier.needs_resync and applier.can_resync(snap_dir):
+                    applier.resync_from(snap_dir)
         jax.block_until_ready(logits)
         t_dec = time.time() - t0
         out = jnp.concatenate(toks, 1)
@@ -112,6 +159,20 @@ def main(argv=None):
         print(f"decode {args.new_tokens} steps: {t_dec:.2f}s "
               f"({t_dec/args.new_tokens*1e3:.0f} ms/step incl. dispatch)")
         print("first sequences:", out[:2].tolist())
+        if applier is not None:
+            if hasattr(chan, "flush"):
+                for p in chan.flush():
+                    applier.offer(p)
+            if applier.needs_resync and applier.can_resync(snap_dir):
+                applier.resync_from(snap_dir)
+            m = applier.metrics()
+            print(f"[serve] stream pinned at v{pinned_v}; live params now "
+                  f"v{m['param_version']}"
+                  f"{' (resync pending)' if m['needs_resync'] else ''}")
+            print("[serve] delta health:",
+                  {k: m[k] for k in ("received", "applied", "dropped_corrupt",
+                                     "dropped_nonfinite", "dropped_stale",
+                                     "gaps_detected", "resyncs")})
     return 0
 
 

@@ -125,6 +125,34 @@ def parse_args(argv=None):
                          "carry no learnable signal across fresh batches)")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--publish-deltas", default="",
+                    help="spool directory for the learning-while-serving "
+                         "delta broadcast (DESIGN.md §2.10): after each "
+                         "optimizer step the trainer publishes a "
+                         "version-stamped, checksummed top-k delta of its "
+                         "params there (plus full resync snapshots under "
+                         "<dir>/snapshots), which a replica started with "
+                         "launch/serve.py --apply-deltas consumes")
+    ap.add_argument("--delta-k", type=int, default=0,
+                    help="entries per published delta; 0 resolves from "
+                         "--sparsity over the whole flat model (the same "
+                         "rule as the gradient sync's k)")
+    ap.add_argument("--delta-every", type=int, default=1,
+                    help="publish every N optimizer steps (>=1)")
+    ap.add_argument("--delta-snapshot-every", type=int, default=0,
+                    help="write a full resync snapshot every N published "
+                         "versions (0 = only the version-0 base and the "
+                         "final snapshot); replicas that hit a version gap "
+                         "wait for the next snapshot, so lossy channels "
+                         "want this small enough to bound the wait")
+    ap.add_argument("--delta-fault-schedule", default="",
+                    help="delta-channel fault spec (DESIGN.md §2.10): "
+                         "'loss:P' drops each published version with prob "
+                         "P; 'corrupt:P' bit-flips it in flight (the "
+                         "replica's checksum guard detects it); "
+                         "'reorder:W' delays each version by a seeded "
+                         "amount <= W; 'stall:N[,at=V]' pauses the link "
+                         "for N versions and flushes the backlog in order")
     return ap.parse_args(argv)
 
 
@@ -142,6 +170,15 @@ def resolve_fault_spec(args) -> str:
     if spec:
         from repro.core import faults
         faults.parse_schedule(spec)
+    return spec
+
+
+def resolve_delta_fault_spec(args) -> str:
+    """Validate --delta-fault-schedule at the argparse surface."""
+    spec = getattr(args, "delta_fault_schedule", "").strip()
+    if spec:
+        from repro.core import faults
+        faults.parse_channel_schedule(spec)
     return spec
 
 
@@ -219,6 +256,28 @@ def main(argv=None):
             print(f"[train] fault schedule: {_faults.format_schedule(sched)}"
                   f" (E[n_active]={_faults.expected_active(sched, ndp):.2f}"
                   f"/{ndp}, err_decay={sp.err_decay}, combine={sp.combine})")
+        publisher = chan = snap_dir = None
+        if args.publish_deltas:
+            # learning-while-serving broadcast (DESIGN.md §2.10): the
+            # trainer is the publisher; replicas subscribe to the spool
+            from repro.core import faults as _faults
+            from repro.serve.delta import (FaultyChannel, SpoolChannel,
+                                           delta_wire_bytes)
+            from repro.train.step import delta_publisher_for_run
+            delta_fault = resolve_delta_fault_spec(args)
+            publisher = delta_publisher_for_run(run, params, args.delta_k)
+            chan = SpoolChannel(args.publish_deltas)
+            if delta_fault:
+                csched = _faults.parse_channel_schedule(delta_fault)
+                chan = FaultyChannel(chan, csched)
+                print(f"[train] delta channel faults: "
+                      f"{_faults.format_channel_schedule(csched)}")
+            snap_dir = os.path.join(args.publish_deltas, "snapshots")
+            publisher.write_snapshot(snap_dir)       # version-0 base
+            print(f"[train] publishing deltas: k={publisher.k} "
+                  f"({delta_wire_bytes(publisher.k):,} wire bytes/delta, "
+                  f"J={publisher.j:,}) every {max(1, args.delta_every)} "
+                  f"steps -> {args.publish_deltas}")
         import time
         t0 = time.time()
         for t in range(args.steps):
@@ -234,15 +293,32 @@ def main(argv=None):
                       f"gnorm {m['gnorm_local']:.3f} "
                       f"nz {m['agg_nonzero']:.4f} "
                       f"{health}({time.time()-t0:.1f}s)")
+            if publisher is not None and (t + 1) % max(
+                    1, args.delta_every) == 0:
+                chan.send(publisher.publish(params))
+                if (args.delta_snapshot_every and publisher.version
+                        % args.delta_snapshot_every == 0):
+                    publisher.write_snapshot(snap_dir)
             if (run.checkpoint_every and run.checkpoint_dir
                     and t and t % run.checkpoint_every == 0):
                 from repro.checkpoint import save_checkpoint
                 save_checkpoint(run.checkpoint_dir, t, params, opt_state,
-                                ef_state)
+                                ef_state, param_version=(
+                                    publisher.version if publisher else None))
+        if publisher is not None:
+            if hasattr(chan, "flush"):
+                chan.flush()
+            publisher.write_snapshot(snap_dir)
+            sent = getattr(chan, "counters", {}).get(
+                "sent", publisher.version)
+            print(f"[train] published {publisher.version} delta versions "
+                  f"({sent} reached the spool); final snapshot at "
+                  f"v{publisher.version}")
         if run.checkpoint_dir:
             from repro.checkpoint import save_checkpoint
             save_checkpoint(run.checkpoint_dir, args.steps, params,
-                            opt_state, ef_state)
+                            opt_state, ef_state, param_version=(
+                                publisher.version if publisher else None))
     return 0
 
 

@@ -227,6 +227,39 @@ def roofline_terms(rec: dict, hw: Hardware = HW_V5E) -> dict:
             # sketch barrier buys back is the halved-payload gather
             terms["coordinated_collective_s"] = \
                 t_sketch + gw / hw.ici_bw
+    delta = rec.get("delta")
+    if delta:
+        # learning-while-serving channel (DESIGN.md §2.10): per
+        # published version the replica pays the sparse broadcast on the
+        # wire and an O(k) scatter in HBM; a version gap escalates to a
+        # full-snapshot resync. delta_apply_s bills reading the k
+        # (value, index) pairs plus the read-modify-write of the k
+        # touched parameter slots (16 bytes/entry in fp32) — the
+        # between-decode-steps stall the apply adds. resync_equiv_deltas
+        # is the staleness-vs-bandwidth breakeven: a channel that gaps
+        # more often than once per that many versions spends its sparse
+        # savings on snapshots.
+        k = int(delta.get("k", 0))
+        wire = float(delta.get("wire_bytes", 0))
+        terms["delta_wire_bytes"] = wire
+        terms["delta_bcast_s"] = wire / hw.ici_bw
+        terms["delta_apply_s"] = (16.0 * k) / hw.hbm_bw
+        rs = float(delta.get("resync_bytes", 0))
+        terms["resync_bytes"] = rs
+        terms["resync_s"] = rs / hw.ici_bw
+        if delta.get("resync_equiv_deltas") is not None:
+            terms["resync_equiv_deltas"] = float(
+                delta["resync_equiv_deltas"])
+        dfault = delta.get("fault")
+        if dfault and wire:
+            # expected wire cost per PUBLISHED version when the channel
+            # drops mass: every accepted version costs one delta; the
+            # lost fraction is eventually bought back by snapshots
+            rate = float(dfault.get("delivery_rate_expected", 1.0))
+            terms["delta_delivery_rate"] = rate
+            terms["delta_wire_bytes_effective"] = \
+                wire + (1.0 - rate) * rs / max(
+                    1.0, terms.get("resync_equiv_deltas", 1.0))
     fault = rec.get("fault")
     if fault:
         # straggler-exposed view (DESIGN.md §2.7): with an elastic

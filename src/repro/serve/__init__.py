@@ -1,3 +1,8 @@
 from repro.serve.step import (
-    build_decode_step, build_prefill, decode_cache_specs, serve_parallel,
+    build_decode_step, build_prefill, decode_cache_specs,
+    delta_applier_from_snapshot, serve_parallel,
+)
+from repro.serve.delta import (
+    DeltaApplier, DeltaPayload, DeltaPublisher, DeltaVersionError,
+    FaultyChannel, MemoryChannel, SpoolChannel,
 )

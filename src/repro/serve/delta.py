@@ -1,0 +1,671 @@
+"""Versioned sparse delta broadcast: learning-while-serving (DESIGN.md §2.10).
+
+The trainer publishes its post-step parameter movement as an exactly-k
+sparse payload; serving replicas apply it as an O(k) scatter into live
+params BETWEEN decode steps. The channel between them is lossy **by
+contract**, not by hope — every robustness property is explicit:
+
+- **Versioning.** Each payload carries a monotonic ``param_version``.
+  A replica only ever applies version ``v+1`` on top of ``v``: stale
+  arrivals are dropped (counted), a gap flips the replica into
+  ``needs_resync`` and it REFUSES to advance until a full snapshot
+  (``checkpoint/io.py``) at a newer version arrives.
+- **Scatter-SET wire semantics.** ``values[i]`` is the absolute new
+  parameter value at flat index ``indices[i]`` (TreeFlattener order),
+  not an additive diff — applying a delta is idempotent, and publisher
+  and replica run the SAME ``scatter_set_tree`` on the same payload, so
+  a replica at accepted version v is bit-identical to the publisher's
+  params-at-v in every leaf dtype.
+- **Publisher-side error feedback.** The publisher mirrors what the
+  replicas hold (``published``) and each step ships the top-k of
+  ``|true - published|``; whatever did not fit stays visible in the
+  next step's residual (the EF property that makes sparsification — and
+  therefore a missed delta — a bounded, self-correcting error; see
+  PAPERS.md on top-k sparsification).
+- **Corruption + health guards.** Payloads carry a cheap position-
+  weighted checksum over the bit patterns; checksum-failing or
+  non-finite payloads are dropped for the step with ``dropped_corrupt``
+  / ``dropped_nonfinite`` counters (the serve-side mirror of PR 6's
+  aggregation guard; :func:`payload_health` is the traced-safe form a
+  distributed replica psums).
+- **In-flight consistency.** Applies are functional (never donated):
+  a decode stream pins ``(params, version)`` from :meth:`DeltaApplier.
+  acquire` and keeps computing against those immutable buffers while
+  the live tree advances — free double-buffering, paid for with one
+  O(params) copy per apply instead of an in-place update.
+
+Transports: :class:`MemoryChannel` (in-process, thread-safe),
+:class:`SpoolChannel` (atomic one-file-per-payload spool directory for
+cross-process trainer → replica wiring), and :class:`FaultyChannel`
+(wraps either side with the seeded ``core.faults`` channel schedules:
+``loss`` / ``corrupt`` / ``reorder`` / ``stall``).
+
+The contract the tests pin: under ANY injected fault trace, a replica
+either holds version v with params bit-equal to the publisher's
+params-at-v, or is mid-resync and refuses to advance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import os
+import tempfile
+import threading
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bigvec
+from repro.core.faults import (ChannelFaultSchedule, channel_corrupts,
+                               channel_delay, channel_drops, channel_stalled)
+from repro.core.flatten import TreeFlattener
+
+# Wire header: version u32 + count u32 + j u64 + checksum u32, padded.
+DELTA_HEADER_BYTES = 24
+
+
+class DeltaVersionError(RuntimeError):
+    """A delta's version violates the staleness contract (out of order,
+    gapped, or at/below a restored checkpoint's version floor)."""
+
+
+# ---------------------------------------------------------------------------
+# Checksum + payload
+# ---------------------------------------------------------------------------
+
+def _u32(x):
+    if isinstance(x, int):
+        x = x & 0xFFFFFFFF
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def payload_checksum(values, indices, version, count, j):
+    """Position-weighted uint32 checksum over the payload bit patterns.
+
+    Traced-safe (pure jnp, wraps mod 2^32), so the publisher stamps and
+    the replica verifies with the SAME function — any single bit flip in
+    values, indices, or the header fields changes the sum, and the
+    position weights catch swapped entries. This is a transport
+    integrity check, not a cryptographic MAC.
+    """
+    vb = jax.lax.bitcast_convert_type(
+        jnp.asarray(values, jnp.float32), jnp.uint32)
+    ib = jnp.asarray(indices, jnp.int32).astype(jnp.uint32)
+    pos = jnp.arange(vb.shape[0], dtype=jnp.uint32)
+    h = jnp.sum(vb * (pos * jnp.uint32(2654435761) + jnp.uint32(1)),
+                dtype=jnp.uint32)
+    h = h + jnp.sum(ib * (pos * jnp.uint32(40503) + jnp.uint32(2654435769)),
+                    dtype=jnp.uint32)
+    return (h + _u32(version) * jnp.uint32(97)
+            + _u32(count) * jnp.uint32(89)
+            + _u32(j) * jnp.uint32(83))
+
+
+def payload_health(values, indices, checksum, version, count, j):
+    """Traced-safe inbound guard: ``(ok, corrupt, nonfinite)`` bools.
+
+    The shard_map'd form of :meth:`DeltaPayload.verify` — a distributed
+    replica evaluates it per rank and psums the negations into the
+    ``dropped_corrupt`` / ``dropped_nonfinite`` health counters (the
+    serve-side mirror of the §2.7 aggregation guard).
+    """
+    values = jnp.asarray(values, jnp.float32)
+    indices = jnp.asarray(indices, jnp.int32)
+    finite = jnp.all(jnp.isfinite(values))
+    pos = jnp.arange(indices.shape[0], dtype=jnp.int32)
+    live = pos < jnp.asarray(count, jnp.int32)
+    in_range = jnp.all(~live | ((indices >= 0) & (indices < j)))
+    want = payload_checksum(values, indices, version, count, j)
+    corrupt = (want != _u32(checksum)) | ~in_range
+    return ~corrupt & finite, corrupt, ~finite
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaPayload:
+    """One wire unit: ``count`` live (value, index) pairs at ``version``.
+
+    ``values`` are fp32 ABSOLUTE new parameter values (scatter-SET),
+    ``indices`` int32 positions in the TreeFlattener flat order over a
+    ``j``-element model. ``checksum`` is stamped by the publisher and
+    verified on intake.
+    """
+    version: int
+    values: np.ndarray     # (k,) float32
+    indices: np.ndarray    # (k,) int32
+    count: int
+    j: int
+    checksum: int
+
+    @classmethod
+    def stamp(cls, version, values, indices, count, j) -> "DeltaPayload":
+        values = np.asarray(values, np.float32)
+        indices = np.asarray(indices, np.int32)
+        csum = int(payload_checksum(values, indices, version, count, j))
+        return cls(int(version), values, indices, int(count), int(j), csum)
+
+    def verify(self) -> str:
+        """'ok' | 'corrupt' | 'nonfinite' — intake guard verdict.
+
+        Checksum/shape/index-range failures are 'corrupt' (the transport
+        mangled it); a checksum-VALID payload carrying non-finite values
+        is 'nonfinite' (the publisher shipped poison). Both are dropped,
+        on distinct counters, and never reach live params.
+        """
+        v = np.asarray(self.values)
+        i = np.asarray(self.indices)
+        if v.ndim != 1 or v.shape != i.shape:
+            return "corrupt"
+        want = int(payload_checksum(v, i, self.version, self.count, self.j))
+        if want != (self.checksum & 0xFFFFFFFF):
+            return "corrupt"
+        live = i[:min(max(self.count, 0), i.shape[0])]
+        if live.size and (live.min() < 0 or live.max() >= self.j):
+            return "corrupt"
+        if not np.all(np.isfinite(v)):
+            return "nonfinite"
+        return "ok"
+
+    def wire_bytes(self) -> int:
+        return delta_wire_bytes(int(self.values.shape[0]))
+
+    def to_dict(self) -> dict:
+        return {"version": np.int64(self.version),
+                "values": np.asarray(self.values, np.float32),
+                "indices": np.asarray(self.indices, np.int32),
+                "count": np.int64(self.count), "j": np.int64(self.j),
+                "checksum": np.uint32(self.checksum)}
+
+    @classmethod
+    def from_dict(cls, d) -> "DeltaPayload":
+        return cls(int(d["version"]), np.asarray(d["values"], np.float32),
+                   np.asarray(d["indices"], np.int32), int(d["count"]),
+                   int(d["j"]), int(d["checksum"]))
+
+
+# ---------------------------------------------------------------------------
+# The shared O(k) scatter — publisher mirror and replica apply run THIS
+# ---------------------------------------------------------------------------
+
+def scatter_set_tree(flattener: TreeFlattener, tree, values, indices,
+                     count=None):
+    """Scatter-SET ``values`` at flat ``indices`` into ``tree``'s leaves.
+
+    O(k) per leaf: each leaf claims the live pairs inside its
+    [offset, offset+size) slice via the §2.7 sentinel trick (dead slots
+    point one past the leaf, ``mode="drop"``). Values cast to the leaf
+    dtype AT THE LEAF, so publisher mirror and replica converge to
+    bit-identical trees in any dtype. Functional (never donates): old
+    trees stay valid for pinned in-flight readers.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    values = jnp.asarray(values, jnp.float32)
+    indices = jnp.asarray(indices, jnp.int32)
+    pos = jnp.arange(indices.shape[0], dtype=jnp.int32)
+    live_all = (jnp.ones(indices.shape, bool) if count is None
+                else pos < jnp.asarray(count, jnp.int32))
+    out = []
+    for leaf, off, size in zip(leaves, flattener.offsets, flattener.sizes):
+        live = live_all & (indices >= off) & (indices < off + size)
+        lidx = jnp.where(live, indices - off, size)
+        flat = bigvec.scatter_set(leaf.reshape(-1), lidx,
+                                  values.astype(leaf.dtype), mode="drop")
+        out.append(flat.reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(flattener.treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Publisher (trainer side)
+# ---------------------------------------------------------------------------
+
+class DeltaPublisher:
+    """Stamps the trainer's post-step movement into versioned payloads.
+
+    Keeps ``published`` — a mirror of what a fully-caught-up replica
+    holds (version 0 mirror = the params handed to the constructor; ship
+    that base to replicas as a snapshot). Each :meth:`publish` selects
+    the top-k of ``|flatten(params) - flatten(published)|``, ships the
+    ABSOLUTE new values there, and folds them into the mirror — residual
+    movement stays in the next step's diff (publisher-side error
+    feedback), so a coordinate the budget skipped is never lost, only
+    late.
+    """
+
+    def __init__(self, params, k: int, *, record_history: bool = False):
+        self.flattener = TreeFlattener(params)
+        self.j = int(self.flattener.total)
+        self.k = int(max(1, min(int(k), self.j)))
+        self.version = 0
+        # deep copy: the caller's buffers may be donated to its next
+        # step (launch/train jits with donate_argnums); the mirror must
+        # own its storage
+        self.published = jax.tree_util.tree_map(
+            lambda l: jnp.asarray(l).copy(), params)
+        self.record_history = bool(record_history)
+        self._history = {0: self._host_copy()} if record_history else {}
+        flat = self.flattener
+
+        def _step(params, published):
+            true = flat.flatten(params)
+            diff = jnp.abs(true - flat.flatten(published))
+            _, idx = jax.lax.top_k(diff, self.k)
+            idx = jnp.sort(idx).astype(jnp.int32)
+            vals = bigvec.gather(true, idx).astype(jnp.float32)
+            return scatter_set_tree(flat, published, vals, idx), vals, idx
+
+        self._step = jax.jit(_step)
+
+    def _host_copy(self):
+        return jax.tree_util.tree_map(
+            lambda l: np.array(l, copy=True), self.published)
+
+    def publish(self, params) -> DeltaPayload:
+        """One post-step publish: returns the stamped payload for
+        version ``self.version + 1`` and advances the mirror."""
+        self.published, vals, idx = self._step(params, self.published)
+        self.version += 1
+        if self.record_history:
+            self._history[self.version] = self._host_copy()
+        return DeltaPayload.stamp(self.version, np.asarray(vals),
+                                  np.asarray(idx), self.k, self.j)
+
+    def params_at(self, version: int):
+        """The published mirror as of ``version`` — the oracle side of
+        the §2.10 invariant (requires ``record_history=True``)."""
+        if not self.record_history:
+            raise ValueError("DeltaPublisher(record_history=True) required")
+        return self._history[int(version)]
+
+    def write_snapshot(self, snap_dir: str) -> str:
+        """Full-params resync snapshot at the current version, via the
+        checkpoint path (version-stamped manifest)."""
+        return write_snapshot(snap_dir, self.published, self.version)
+
+
+# ---------------------------------------------------------------------------
+# Resync snapshots (checkpoint/io.py reuse)
+# ---------------------------------------------------------------------------
+
+def write_snapshot(snap_dir: str, params, version: int) -> str:
+    """Save ``params`` as a resync snapshot: a params-only checkpoint at
+    step == ``version`` with ``param_version`` stamped in the manifest."""
+    from repro.checkpoint.io import save_checkpoint
+    return save_checkpoint(snap_dir, int(version), params, {}, {},
+                           param_version=int(version))
+
+
+def read_snapshot(snap_dir: str, params_template, step: Optional[int] = None):
+    """Load a resync snapshot -> ``(params, param_version)``. ``step``
+    defaults to the latest snapshot in the directory."""
+    from repro.checkpoint.io import (latest_step, read_manifest,
+                                     restore_checkpoint)
+    if step is None:
+        step = latest_step(snap_dir)
+        if step is None:
+            raise FileNotFoundError(f"no snapshot in {snap_dir!r}")
+    params, _, _ = restore_checkpoint(snap_dir, step, params_template, {}, {})
+    manifest = read_manifest(snap_dir, step)
+    version = manifest.get("param_version")
+    return params, int(step if version is None else version)
+
+
+# ---------------------------------------------------------------------------
+# Applier (replica side)
+# ---------------------------------------------------------------------------
+
+class DeltaApplier:
+    """Applies versioned deltas into live serving params between decode
+    steps, under the §2.10 staleness contract.
+
+    Two intake surfaces:
+
+    - :meth:`offer` — channel-tolerant. Corrupt / non-finite / stale
+      payloads are dropped ON COUNTERS; a version gap flips
+      ``needs_resync`` and every later offer is refused
+      (``resync_pending``) until :meth:`resync_from` restores a newer
+      full snapshot. Nothing raises: a hostile channel cannot crash the
+      replica, and nothing unhealthy ever reaches live params.
+    - :meth:`apply` — strict. Raises :class:`DeltaVersionError` on ANY
+      contract violation, including versions at or below the restored
+      checkpoint floor (a delta predating the checkpoint you restored is
+      a programming error, not channel weather — hard error, never a
+      silent skip).
+
+    Applies are functional: :meth:`acquire` pins ``(params, version)``
+    for an in-flight decode stream, which keeps reading those immutable
+    buffers bit-unchanged while later deltas move the live tree.
+    """
+
+    COUNTERS = ("received", "applied", "dropped_corrupt",
+                "dropped_nonfinite", "dropped_stale", "gaps_detected",
+                "resyncs")
+
+    def __init__(self, params, *, version: int = 0,
+                 version_floor: Optional[int] = None):
+        self.flattener = TreeFlattener(params)
+        self.j = int(self.flattener.total)
+        self.params = params
+        self.version = int(version)
+        self.floor = int(version if version_floor is None else version_floor)
+        self.needs_resync = False
+        self.counters = {c: 0 for c in self.COUNTERS}
+        flat = self.flattener
+        shardings = [getattr(l, "sharding", None)
+                     for l in jax.tree_util.tree_leaves(params)]
+        out_shardings = None
+        if shardings and all(s is not None for s in shardings):
+            out_shardings = jax.tree_util.tree_unflatten(
+                flat.treedef, shardings)
+
+        def _apply(tree, values, indices, count):
+            return scatter_set_tree(flat, tree, values, indices, count)
+
+        self._apply = (jax.jit(_apply, out_shardings=out_shardings,
+                               static_argnums=(3,))
+                       if out_shardings is not None
+                       else jax.jit(_apply, static_argnums=(3,)))
+
+    # -- intake ------------------------------------------------------------
+
+    def offer(self, payload: DeltaPayload) -> str:
+        """Channel-tolerant intake; returns the verdict:
+        'applied' | 'corrupt' | 'nonfinite' | 'stale' | 'gap' |
+        'resync_pending'."""
+        self.counters["received"] += 1
+        verdict = payload.verify()
+        if verdict == "corrupt" or (verdict == "ok"
+                                    and payload.j != self.j):
+            self.counters["dropped_corrupt"] += 1
+            return "corrupt"
+        if verdict == "nonfinite":
+            self.counters["dropped_nonfinite"] += 1
+            return "nonfinite"
+        if self.needs_resync:
+            return "resync_pending"
+        if payload.version <= self.version:
+            self.counters["dropped_stale"] += 1
+            return "stale"
+        if payload.version != self.version + 1:
+            self.counters["gaps_detected"] += 1
+            self.needs_resync = True
+            return "gap"
+        self._apply_verified(payload)
+        return "applied"
+
+    def apply(self, payload: DeltaPayload) -> None:
+        """Strict intake: raises on any contract violation."""
+        self.counters["received"] += 1
+        verdict = payload.verify()
+        if verdict != "ok" or payload.j != self.j:
+            raise DeltaVersionError(
+                f"refusing {verdict} delta v{payload.version} "
+                f"(j={payload.j}, want {self.j})")
+        if self.needs_resync:
+            raise DeltaVersionError(
+                f"mid-resync at v{self.version}: refusing to advance")
+        if payload.version <= self.floor:
+            raise DeltaVersionError(
+                f"delta v{payload.version} is at/below the restored "
+                f"checkpoint floor v{self.floor} — it predates the "
+                "restored state and must never be applied")
+        if payload.version != self.version + 1:
+            raise DeltaVersionError(
+                f"delta v{payload.version} on top of v{self.version}: "
+                "versions must be contiguous")
+        self._apply_verified(payload)
+
+    def _apply_verified(self, payload: DeltaPayload) -> None:
+        self.params = self._apply(self.params,
+                                  np.asarray(payload.values, np.float32),
+                                  np.asarray(payload.indices, np.int32),
+                                  int(payload.count))
+        self.version = payload.version
+        self.counters["applied"] += 1
+
+    # -- pinning + resync ---------------------------------------------------
+
+    def acquire(self):
+        """Pin ``(params, version)`` for a decode stream: JAX arrays are
+        immutable and applies never donate, so the pinned tree stays
+        bit-identical for the stream's whole life — double-buffering for
+        the price of the functional update's copy."""
+        return self.params, self.version
+
+    def can_resync(self, snap_dir: str) -> bool:
+        """Is a snapshot strictly NEWER than the held version available?
+        (Resyncing backwards is forbidden; equal-version snapshots
+        cannot fill the missed gap either.)"""
+        from repro.checkpoint.io import latest_step
+        step = latest_step(snap_dir)
+        return step is not None and step > self.version
+
+    def resync_from(self, snap_dir: str, step: Optional[int] = None) -> int:
+        """Restore the full snapshot (latest by default), raise the
+        version floor to it, and re-arm intake. Raises
+        :class:`DeltaVersionError` if the snapshot would move the
+        replica backwards."""
+        params, version = read_snapshot(snap_dir, self.params, step)
+        if version < self.version:
+            raise DeltaVersionError(
+                f"snapshot v{version} is older than held v{self.version}: "
+                "resync must never move a replica backwards")
+        self.params = self._reshard(params)
+        self.version = version
+        self.floor = version
+        self.needs_resync = False
+        self.counters["resyncs"] += 1
+        return version
+
+    def _reshard(self, params):
+        old = self.params
+        return jax.tree_util.tree_map(
+            lambda o, n: (jax.device_put(jnp.asarray(n, o.dtype), o.sharding)
+                          if hasattr(o, "sharding")
+                          else jnp.asarray(n, o.dtype)),
+            old, params)
+
+    def metrics(self) -> dict:
+        """Serve-metrics view: version + health counters (the
+        single-process reading of the psum'd guard)."""
+        return {"param_version": self.version,
+                "needs_resync": self.needs_resync, **self.counters}
+
+
+def drain(channel, applier: DeltaApplier) -> list:
+    """Offer every payload the channel has ready; returns the verdicts."""
+    return [applier.offer(p) for p in channel.recv()]
+
+
+# ---------------------------------------------------------------------------
+# Transports
+# ---------------------------------------------------------------------------
+
+class MemoryChannel:
+    """In-process FIFO (thread-safe: the examples' trainer thread feeds
+    a replica applying between decode steps)."""
+
+    def __init__(self):
+        self._q = deque()
+
+    def send(self, payload: DeltaPayload) -> None:
+        self._q.append(payload)
+
+    def recv(self) -> list:
+        out = []
+        while True:
+            try:
+                out.append(self._q.popleft())
+            except IndexError:
+                return out
+
+
+class SpoolChannel:
+    """One-file-per-payload spool directory: the cross-process transport
+    behind ``launch/train.py --publish-deltas`` / ``launch/serve.py
+    --apply-deltas``.
+
+    Files are named by a monotonic SEND sequence number (then version),
+    written atomically (tmpfile + rename), so the receiver observes the
+    channel's delivery order even when a fault wrapper reordered
+    versions. Sender and receiver are independent instances; the
+    receiver remembers the last sequence consumed.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.Lock()
+        seqs = [self._parse(f)[0] for f in os.listdir(root)
+                if f.startswith("delta_") and f.endswith(".npz")]
+        self._seq = max(seqs) + 1 if seqs else 0
+        self._read_seq = -1
+
+    @staticmethod
+    def _parse(fname: str):
+        stem = fname[:-len(".npz")].split("_")
+        return int(stem[1]), int(stem[2])
+
+    def send(self, payload: DeltaPayload) -> None:
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+        fname = f"delta_{seq:08d}_{payload.version:08d}.npz"
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **payload.to_dict())
+        os.replace(tmp, os.path.join(self.root, fname))
+
+    def recv(self) -> list:
+        ready = sorted(
+            (self._parse(f), f) for f in os.listdir(self.root)
+            if f.startswith("delta_") and f.endswith(".npz")
+            and self._parse(f)[0] > self._read_seq)
+        out = []
+        for (seq, _), fname in ready:
+            with np.load(os.path.join(self.root, fname)) as d:
+                out.append(DeltaPayload.from_dict(d))
+            self._read_seq = seq
+        return out
+
+
+class FaultyChannel:
+    """Injects a seeded ``core.faults`` channel schedule around any
+    transport — wrap the SEND side (in-process) or the RECV side (spool
+    receiver); the per-version decisions are deterministic either way.
+
+    ``loss`` drops the payload outright; ``corrupt`` flips a value bit
+    AFTER the checksum was stamped (the applier's guard detects it, so
+    it degenerates to a counted loss); ``reorder`` delays each version
+    by a seeded amount and releases by (due, version); ``stall`` buffers
+    the whole window and flushes it IN ORDER afterwards — a paused link,
+    which the replica absorbs by applying the backlog, no resync.
+    Call :meth:`flush` when the stream ends to release anything held.
+    """
+
+    def __init__(self, inner, sched: Optional[ChannelFaultSchedule]):
+        self.inner = inner
+        self.sched = sched
+        self._pending = []      # reorder: heap of (due, version, payload)
+        self._stalled = []      # stall: arrival-order buffer
+        self._send_mode = False
+        self.counters = {"sent": 0, "dropped": 0, "corrupted": 0,
+                         "delayed": 0, "stalled": 0}
+
+    def _process(self, payload: DeltaPayload) -> list:
+        sched, v = self.sched, payload.version
+        if sched is None:
+            return [payload]
+        if sched.kind == "loss":
+            if bool(channel_drops(sched, v)):
+                self.counters["dropped"] += 1
+                return []
+            return [payload]
+        if sched.kind == "corrupt":
+            if bool(channel_corrupts(sched, v)):
+                self.counters["corrupted"] += 1
+                return [_flip_bit(payload)]
+            return [payload]
+        if sched.kind == "stall":
+            out = []
+            if not bool(channel_stalled(sched, v)):
+                out, self._stalled = self._stalled, []
+                out.append(payload)
+                return out
+            self._stalled.append(payload)
+            self.counters["stalled"] += 1
+            return []
+        # reorder
+        delay = int(channel_delay(sched, v))
+        if delay:
+            self.counters["delayed"] += 1
+        heapq.heappush(self._pending, (v + delay, v, payload))
+        out = []
+        while self._pending and self._pending[0][0] <= v:
+            out.append(heapq.heappop(self._pending)[2])
+        return out
+
+    def send(self, payload: DeltaPayload) -> None:
+        self._send_mode = True
+        for p in self._process(payload):
+            self.counters["sent"] += 1
+            self.inner.send(p)
+
+    def recv(self) -> list:
+        inbound = self.inner.recv()
+        if self._send_mode:
+            # faults were already injected on the send path; applying
+            # them again on receive would double-corrupt (an even number
+            # of identical bit flips cancels) and double-count
+            return inbound
+        out = []
+        for p in inbound:
+            out.extend(self._process(p))
+        return out
+
+    def flush(self) -> list:
+        """Release everything still held (end of stream). In send mode
+        the releases are forwarded to the inner transport; they are also
+        returned either way."""
+        out, self._stalled = self._stalled, []
+        while self._pending:
+            out.append(heapq.heappop(self._pending)[2])
+        if self._send_mode:
+            for p in out:
+                self.counters["sent"] += 1
+                self.inner.send(p)
+        return out
+
+
+def _flip_bit(payload: DeltaPayload) -> DeltaPayload:
+    """In-flight single-bit corruption — checksum left stale, so the
+    intake guard must catch it."""
+    vals = np.array(payload.values, np.float32, copy=True)
+    bits = vals.view(np.uint32)
+    bits[bits.size // 2] ^= np.uint32(1 << 20)
+    return dataclasses.replace(payload, values=vals)
+
+
+# ---------------------------------------------------------------------------
+# Analytic costs (roofline/analysis.py + dryrun records consume these)
+# ---------------------------------------------------------------------------
+
+def delta_wire_bytes(k: int, value_bytes: int = 4, index_bytes: int = 4)\
+        -> int:
+    """Wire size of one delta: k (value, index) pairs + header."""
+    return int(k) * (value_bytes + index_bytes) + DELTA_HEADER_BYTES
+
+
+def resync_bytes(j: int, value_bytes: int = 4) -> int:
+    """Wire size of one full-snapshot resync: the whole flat model."""
+    return int(j) * value_bytes + DELTA_HEADER_BYTES
+
+
+def resync_equiv_deltas(j: int, k: int, value_bytes: int = 4,
+                        index_bytes: int = 4) -> float:
+    """How many deltas one resync costs — the staleness-vs-bandwidth
+    breakeven: a channel losing more than ~1/this fraction of versions
+    spends its savings on snapshots."""
+    return resync_bytes(j, value_bytes) / max(
+        1, delta_wire_bytes(k, value_bytes, index_bytes))

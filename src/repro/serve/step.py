@@ -134,6 +134,29 @@ def build_decode_step(run: RunConfig, mesh, pal: Parallel):
     return wrapped, (pspecs, cspecs, tok_spec)
 
 
+def delta_applier_from_snapshot(run: RunConfig, mesh, pal: Parallel,
+                                snap_dir: str):
+    """Replica-side entry to the delta broadcast (DESIGN.md §2.10):
+    restore the trainer's latest full snapshot as the serving params,
+    sharded per the decode step's param specs, and return
+    ``(DeltaApplier, params)`` positioned at the snapshot's
+    ``param_version``. The applier's floor starts there, so deltas at or
+    below the snapshot version can never apply."""
+    from jax.sharding import NamedSharding
+    from repro.serve.delta import DeltaApplier, read_snapshot
+    from repro.train.step import abstract_params
+    tmpl = abstract_params(run, pal)
+    pspecs = param_specs(tmpl) if pal.tp_on else jax.tree_util.tree_map(
+        lambda _: P(), tmpl)
+    params_np, version = read_snapshot(snap_dir, tmpl)
+    params = jax.tree_util.tree_map(
+        lambda n, t, s: jax.device_put(jnp.asarray(n, t.dtype),
+                                       NamedSharding(mesh, s)),
+        params_np, tmpl, pspecs)
+    applier = DeltaApplier(params, version=version)
+    return applier, params
+
+
 def build_prefill(run: RunConfig, mesh, pal: Parallel):
     cfg = resolve_model_cfg(run)
     tmpl = jax.eval_shape(

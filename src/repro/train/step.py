@@ -127,6 +127,24 @@ def stream_bounds_for_run(run: RunConfig, mesh, pal: Parallel = None):
         flat.layer_bounds(), allocate.resolve_num_segments(sp, flat.total))
 
 
+def delta_publisher_for_run(run: RunConfig, params, delta_k: int = 0, *,
+                            record_history: bool = False):
+    """Trainer-side delta-broadcast publisher (DESIGN.md §2.10), budget
+    resolved the same way the sparsifier resolves k: ``delta_k <= 0``
+    falls back to ``resolve_k(run.sparsifier, J)`` over the whole flat
+    model, so by default the serving channel ships the same per-step
+    volume the gradient sync does. The caller publishes AFTER each
+    optimizer step (``publish(params)``) and ships the version-0 base
+    via ``write_snapshot`` before any replica subscribes."""
+    from repro.core.flatten import tree_size
+    from repro.core.sparsify import resolve_k
+    from repro.serve.delta import DeltaPublisher
+    k = int(delta_k)
+    if k <= 0:
+        k = resolve_k(run.sparsifier, tree_size(params))
+    return DeltaPublisher(params, k, record_history=record_history)
+
+
 def train_state_specs(run: RunConfig, mesh, pal: Parallel):
     """(param_specs, opt_specs, ef_specs) PartitionSpec trees."""
     tmpl = abstract_params(run, pal)

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint import (latest_step, read_manifest, restore_checkpoint,
+                              save_checkpoint)
 
 
 def _tree(key):
@@ -91,3 +92,56 @@ def test_current_ef_state_roundtrips_through_train_state(tmp_path):
     bad["not_there"] = jnp.zeros((3,))
     with pytest.raises(KeyError):
         restore_checkpoint(d, 1, t, t, bad)
+
+
+def test_param_version_stamp_roundtrip(tmp_path):
+    """param_version (DESIGN.md §2.10) rides the manifest: stamped when
+    given, absent for legacy checkpoints (manifest.get -> None)."""
+    d = str(tmp_path)
+    t = {"x": jnp.ones(3)}
+    save_checkpoint(d, 10, t, t, t, param_version=37)
+    assert read_manifest(d, 10)["param_version"] == 37
+    save_checkpoint(d, 11, t, t, t)
+    assert read_manifest(d, 11).get("param_version") is None
+
+
+def test_restored_floor_rejects_predating_deltas(tmp_path):
+    """A delta at/below the restored checkpoint's param_version predates
+    the restored state: strict apply is a hard error, never a skip."""
+    import pytest
+    from repro.serve.delta import (DeltaApplier, DeltaVersionError,
+                                   read_snapshot, write_snapshot)
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (8, 4))}
+    write_snapshot(str(tmp_path), params, 12)
+    restored, version = read_snapshot(str(tmp_path), params)
+    assert version == 12
+    app = DeltaApplier(restored, version=version)
+    from repro.serve.delta import DeltaPayload
+    for v in (3, 12):
+        old = DeltaPayload.stamp(v, np.zeros(4, np.float32),
+                                 np.arange(4, dtype=np.int32), 4, 32)
+        with pytest.raises(DeltaVersionError, match="floor"):
+            app.apply(old)
+    # tolerant intake drops the same payloads on the stale counter
+    assert app.offer(DeltaPayload.stamp(
+        12, np.zeros(4, np.float32), np.arange(4, dtype=np.int32),
+        4, 32)) == "stale"
+    assert app.counters["dropped_stale"] == 1
+
+
+def test_bfloat16_leaves_roundtrip(tmp_path):
+    """np.savez stores ml_dtypes bfloat16 as a void dtype; restore must
+    view it back through the template dtype bit-exactly."""
+    d = str(tmp_path)
+    key = jax.random.PRNGKey(2)
+    params = {"w": jax.random.normal(key, (6, 5), jnp.bfloat16),
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (9,))}
+    save_checkpoint(d, 1, params, {}, {})
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    p2, _, _ = restore_checkpoint(d, 1, z, {}, {})
+    assert p2["w"].dtype == jnp.bfloat16
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))

@@ -379,3 +379,79 @@ assert prog_drop > 0.75 * prog_full, (l_full[-1], l_drop[-1])
 print("OK", l_full[-1], l_drop[-1])
 """, timeout=1800)
     assert "OK" in out
+
+
+def test_delta_apply_sharded_with_psum_health_guard():
+    """§2.10 on a real 8-way mesh: versioned deltas scatter into SHARDED
+    replica params bit-identically to the host-replica reference (and
+    keep their shardings); the payload_health guard evaluates the same
+    verdict on every rank and psums into a global health counter; a
+    pinned (acquire'd) tree stays bit-unchanged while the live one
+    advances."""
+    out = run_py(COMMON + """
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.serve.delta import DeltaApplier, DeltaPublisher, payload_health
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+key = jax.random.PRNGKey(0)
+host = {"w": jax.random.normal(key, (16, 8)),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (64,))}
+
+def walk(tree, t):
+    leaves, td = jax.tree_util.tree_flatten(tree)
+    k = jax.random.PRNGKey(100 + t)
+    return jax.tree_util.tree_unflatten(td, [
+        l + 0.1 * jax.random.normal(jax.random.fold_in(k, i), l.shape)
+        for i, l in enumerate(leaves)])
+
+with mesh:
+    sharded = {
+        "w": jax.device_put(host["w"], NamedSharding(mesh, P("model", None))),
+        "b": jax.device_put(host["b"], NamedSharding(mesh, P("data"))),
+    }
+    pub = DeltaPublisher(host, k=24)
+    app_host = DeltaApplier(host)
+    app_shard = DeltaApplier(sharded)
+    cur = host
+    for t in range(4):
+        cur = walk(cur, t)
+        p = pub.publish(cur)
+        assert app_host.offer(p) == "applied"
+        assert app_shard.offer(p) == "applied"
+    pinned, pv = app_shard.acquire()
+    frozen = np.array(pinned["w"], copy=True)
+    for t in range(4, 8):
+        cur = walk(cur, t)
+        p = pub.publish(cur)
+        app_host.offer(p); app_shard.offer(p)
+    # sharded replica == host replica, bit for bit, shardings kept
+    for a, b in zip(jax.tree_util.tree_leaves(app_host.params),
+                    jax.tree_util.tree_leaves(app_shard.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert app_shard.params["w"].sharding.spec == P("model", None), \
+        app_shard.params["w"].sharding
+    # the pinned tree never moved
+    np.testing.assert_array_equal(np.asarray(pinned["w"]), frozen)
+    assert app_shard.version == 8 and pv == 4
+
+    # psum'd intake guard: flip one bit, every rank sees 'corrupt',
+    # global counter = 1 drop x 8 ranks
+    bad = np.array(p.values, np.float32)
+    bad.view(np.uint32)[0] ^= np.uint32(1 << 9)
+    def guard(vals, idx):
+        ok, corrupt, nonfinite = payload_health(
+            vals, idx, jnp.uint32(p.checksum), p.version, p.count, p.j)
+        one = lambda b: jax.lax.psum(
+            jnp.where(b, 1, 0), ("data", "model"))
+        return one(corrupt), one(nonfinite), one(ok)
+    c, nf, ok = jax.jit(jax.shard_map(
+        guard, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P(), P()),
+        check_vma=False))(jnp.asarray(bad), jnp.asarray(p.indices))
+    assert int(np.ravel(c)[0]) == 8 and int(np.ravel(nf)[0]) == 0
+    c2, nf2, ok2 = jax.jit(jax.shard_map(
+        guard, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P(), P()),
+        check_vma=False))(jnp.asarray(p.values), jnp.asarray(p.indices))
+    assert int(np.ravel(ok2)[0]) == 8 and int(np.ravel(c2)[0]) == 0
+print("OK")
+""")
+    assert "OK" in out
